@@ -1,0 +1,33 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.json)."""
+import json
+import os
+
+from .common import emit
+
+
+def main():
+    path = os.environ.get("DRYRUN_JSON", "results/dryrun.json")
+    if not os.path.exists(path):
+        emit("roofline_missing", 0.0, f"run repro.launch.dryrun first")
+        return
+    with open(path) as f:
+        recs = json.load(f)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] != "ok":
+            emit(name, 0.0, f"status={r['status']}")
+            continue
+        rf = r["roofline"]
+        dominant = max(rf["t_compute_s"], rf["t_memory_s"],
+                       rf["t_collective_s"])
+        emit(name, dominant * 1e6,
+             f"bottleneck={rf['bottleneck']};"
+             f"compute_ms={rf['t_compute_s']*1e3:.1f};"
+             f"memory_ms={rf['t_memory_s']*1e3:.1f};"
+             f"collective_ms={rf['t_collective_s']*1e3:.1f};"
+             f"useful={r.get('useful_flops_ratio', 0):.2f};"
+             f"fits={r.get('hbm_ok')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark helpers: timing, recall targets, CSV emission.
+
+Output convention (one line per measurement):
+    name,us_per_call,derived
+`derived` carries the figure-specific quantity (recall, MB, ratio, ...).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    def run():
+        out = fn()
+        for leaf in jax.tree.leaves(out):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        return out
+    for _ in range(warmup):
+        run()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def n_probe_for_recall(search_fn, exact_ids: np.ndarray, k: int,
+                       target: float = 0.9, probes=(1, 2, 4, 8, 16, 32, 64)):
+    """Smallest n_probe reaching the recall target (paper methodology)."""
+    for n in probes:
+        ids = np.asarray(search_fn(n).ids)
+        rec = _recall(ids, exact_ids, k)
+        if rec >= target:
+            return n, rec
+    return probes[-1], rec
+
+
+def _recall(ids: np.ndarray, exact_ids: np.ndarray, k: int) -> float:
+    """recall@k; the denominator counts only *real* exact ids so hybrid
+    queries whose predicate qualifies fewer than k rows aren't penalised
+    for results that cannot exist."""
+    hits = denom = 0
+    for a, b in zip(ids[:, :k], exact_ids[:, :k]):
+        real = set(int(x) for x in b if x >= 0)
+        hits += len(set(int(x) for x in a if x >= 0) & real)
+        denom += max(1, len(real))
+    return hits / denom

@@ -1,0 +1,44 @@
+"""Benchmark driver -- one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_build, bench_e2e, bench_hybrid, bench_minibatch,
+                   bench_mqo, bench_roofline, bench_updates)
+    sections = {
+        "fig4_5_e2e": bench_e2e.main,
+        "fig6_build": bench_build.main,
+        "fig7_hybrid": bench_hybrid.main,
+        "fig8_minibatch": bench_minibatch.main,
+        "fig9_mqo": bench_mqo.main,
+        "fig10_updates": bench_updates.main,
+        "roofline": bench_roofline.main,
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in sections.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            print(f"{name},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Train a small LM end-to-end with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --size 15m
+
+Synthetic n-gram data gives real learnable signal: loss drops visibly.
+Kill the process mid-run and re-run with the same --ckpt-dir: it resumes
+from the last checkpoint (including data-stream position).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokens import TokenStream
+from repro.models import init_model
+from repro.train import Trainer, TrainerConfig, optim
+
+SIZES = {
+    "2m": dict(num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+               head_dim=32, d_ff=512, vocab_size=2048),
+    "15m": dict(num_layers=4, d_model=384, num_heads=6, num_kv_heads=2,
+                head_dim=64, d_ff=1536, vocab_size=8192),
+    "110m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--size", choices=SIZES, default="2m")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"lm-{args.size}", family="dense",
+                      pattern=("attn",), mlp_act="silu_glu",
+                      tie_embeddings=True, scan_layers=True,
+                      **SIZES[args.size])
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params, {args.steps} steps,"
+          f" batch {args.batch}x{args.seq}")
+
+    tcfg = TrainerConfig(
+        opt=optim.AdamWConfig(lr=3e-3, warmup_steps=20,
+                              total_steps=args.steps),
+        checkpoint_every=50, ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, tcfg)
+    stream = TokenStream(vocab=cfg.vocab_size, batch=args.batch,
+                         seq=args.seq)
+
+    def data(start):
+        for b in stream.iter_from(start):
+            yield {"tokens": jnp.asarray(b["tokens"])}
+
+    trainer.fit(params, data, args.steps)
+    h = trainer.history
+    k = max(1, len(h) // 10)
+    first = float(np.mean([m["loss"] for m in h[:k]]))
+    last = float(np.mean([m["loss"] for m in h[-k:]]))
+    print(f"loss: {first:.4f} -> {last:.4f}"
+          f"  ({'LEARNING' if last < first - 0.05 else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Final merge + render: fold fix-up records into dryrun.json (keep-last
+per key), then inject tables into EXPERIMENTS.md."""
+import json
+import os
+import subprocess
+import sys
+
+
+def merge(dst="results/dryrun.json", extras=("results/xlstm_fix.json",)):
+    recs = json.load(open(dst))
+    for path in extras:
+        if os.path.exists(path):
+            recs += json.load(open(path))
+    # keep-last per (arch, shape, mesh)
+    out = {}
+    for r in recs:
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    merged = list(out.values())
+    json.dump(merged, open(dst, "w"), indent=1)
+    n_ok = sum(r["status"] == "ok" for r in merged)
+    n_sk = sum(r["status"] == "skipped" for r in merged)
+    n_er = sum(r["status"] == "error" for r in merged)
+    print(f"merged: {len(merged)} records ({n_ok} ok / {n_sk} skipped /"
+          f" {n_er} error)")
+    for r in merged:
+        if r["status"] == "error":
+            print("  ERROR:", r["arch"], r["shape"], r["mesh"])
+
+
+if __name__ == "__main__":
+    merge()
+    subprocess.run([sys.executable, "scripts/render_experiments.py"],
+                   check=True)

@@ -1,0 +1,82 @@
+"""Hillclimb iterations for the micronn-search cell (paper's technique).
+
+Compiles distributed_search variants on the production mesh and prints the
+roofline terms per variant. No writes to dryrun.json.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.types import DeltaStore, IVFConfig, IVFIndex
+from repro.distributed.sharded_index import distributed_search, \
+    index_shardings
+from repro.launch import costs
+from repro.launch.mesh import make_production_mesh
+
+
+def build_index_specs(vec_dtype=jnp.float32):
+    dim, k_parts, p_max, dcap, n_attr = 512, 8192, 128, 8192, 0
+    cfg = IVFConfig(dim=dim, delta_capacity=dcap)
+    sds = lambda s, d=jnp.float32: jax.ShapeDtypeStruct(s, d)
+    index = IVFIndex(
+        centroids=sds((k_parts, dim)), csizes=sds((k_parts,)),
+        vectors=sds((k_parts, p_max, dim), vec_dtype),
+        ids=sds((k_parts, p_max), jnp.int32),
+        attrs=sds((k_parts, p_max, n_attr), vec_dtype),
+        valid=sds((k_parts, p_max), jnp.bool_),
+        counts=sds((k_parts,), jnp.int32),
+        delta=DeltaStore(
+            vectors=sds((dcap, dim), vec_dtype),
+            ids=sds((dcap,), jnp.int32),
+            attrs=sds((dcap, n_attr), vec_dtype),
+            valid=sds((dcap,), jnp.bool_), count=sds((), jnp.int32)),
+        base_mean_size=sds(()), config=cfg)
+    return index
+
+
+def probe(name, *, vec_dtype=jnp.float32, local_cap=None,
+          merge="tournament", Q=4096, topk=100, n_probe=64):
+    mesh = make_production_mesh()
+    index = build_index_specs(vec_dtype)
+    queries = jax.ShapeDtypeStruct((Q, 512), jnp.float32)
+    idx_shard = index_shardings(index, mesh)
+    q_shard = NamedSharding(mesh, P("data", None))
+
+    def search_step(index, queries):
+        res = distributed_search(index, queries, topk, n_probe, mesh,
+                                 data_axes=("data",), local_cap=local_cap,
+                                 merge=merge)
+        return res.ids, res.scores
+
+    with mesh:
+        c = jax.jit(search_step,
+                    in_shardings=(idx_shard, q_shard)).lower(
+            index, queries).compile()
+    t = costs.extract(c)
+    mem = costs.memory_dict(c)
+    print(f"{name:34s} compute={t.t_compute*1e6:8.1f}us"
+          f" memory={t.t_memory*1e6:8.1f}us"
+          f" coll={t.t_collective*1e6:8.1f}us"
+          f" -> {t.bottleneck:10s} peak={mem['peak_bytes_est']/1e6:.0f}MB")
+    return t
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    runs = {
+        "baseline(f32,cap=n_probe,tourn)": dict(),
+        "i1:bf16-vectors": dict(vec_dtype=jnp.bfloat16),
+        "i2:bf16+cap16": dict(vec_dtype=jnp.bfloat16, local_cap=16),
+        "i3:bf16+cap16+allgather": dict(vec_dtype=jnp.bfloat16,
+                                        local_cap=16, merge="allgather"),
+    }
+    for name, kw in runs.items():
+        if args.only and args.only not in name:
+            continue
+        probe(name, **kw)

@@ -1,0 +1,53 @@
+"""Perf-iteration helper: re-run one dry-run cell and diff vs the stored
+baseline record.
+
+    PYTHONPATH=src python scripts/perf_cell.py llama3-8b train_4k \
+        [--baseline results/dryrun.json] [--save results/perf.json]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--baseline", default="results/dryrun.json")
+    ap.add_argument("--save", default=None)
+    ap.add_argument("--tag", default="candidate")
+    args = ap.parse_args()
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    base = None
+    if os.path.exists(args.baseline):
+        for r in json.load(open(args.baseline)):
+            if (r["arch"], r["shape"]) == (args.arch, args.shape) and \
+                    r.get("status") == "ok" and \
+                    ("pod" in r["mesh"].lower()) == False:
+                if (len(r["mesh"].split("x")) == 3) == args.multi_pod:
+                    base = r
+    if base and rec.get("status") == "ok":
+        b, n = base["roofline"], rec["roofline"]
+        print("\n== delta vs baseline ==")
+        for key in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            old, new = b[key], n[key]
+            pct = (new - old) / old * 100 if old else float("nan")
+            print(f"  {key:16s} {old*1e3:10.2f}ms -> {new*1e3:10.2f}ms"
+                  f"  ({pct:+.1f}%)")
+        mo = base["memory"]["temp_bytes"] / 1e9
+        mn = rec["memory"]["temp_bytes"] / 1e9
+        print(f"  temp_bytes       {mo:10.2f}G  -> {mn:10.2f}G")
+    if args.save and rec.get("status") == "ok":
+        rec["tag"] = args.tag
+        hist = json.load(open(args.save)) if os.path.exists(args.save) else []
+        hist.append(rec)
+        json.dump(hist, open(args.save, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

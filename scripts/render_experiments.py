@@ -1,0 +1,74 @@
+"""Inject rendered dry-run/roofline tables into EXPERIMENTS.md."""
+import json
+import re
+import sys
+
+sys.path.insert(0, "scripts")
+from roofline_table import dominant_fraction, fmt_table  # noqa: E402
+
+
+def main():
+    recs = json.load(open("results/dryrun.json"))
+    single = [r for r in recs if r["mesh"] == "16x16"]
+    multi = [r for r in recs if r["mesh"] == "2x16x16"]
+
+    dry = []
+    dry.append("### Single-pod 16×16 (256 chips) — full baseline table\n")
+    dry.append(fmt_table(single, "16x16"))
+    n_ok = sum(r["status"] == "ok" for r in single)
+    n_skip = sum(r["status"] == "skipped" for r in single)
+    n_err = sum(r["status"] == "error" for r in single)
+    dry.append(f"\n{n_ok} compiled ok, {n_skip} skipped (assignment rules),"
+               f" {n_err} errors.\n")
+    dry.append("\n### Multi-pod 2×16×16 (512 chips) — pod-axis proof\n")
+    if multi:
+        dry.append(fmt_table(multi, "2x16x16"))
+        n_ok = sum(r["status"] == "ok" for r in multi)
+        n_skip = sum(r["status"] == "skipped" for r in multi)
+        n_err = sum(r["status"] == "error" for r in multi)
+        dry.append(f"\n{n_ok} compiled ok, {n_skip} skipped,"
+                   f" {n_err} errors.\n")
+    else:
+        dry.append("\n(multi-pod sweep pending)\n")
+    dry_text = "\n".join(dry)
+
+    roof = []
+    roof.append(
+        "Terms per §Dry-run methodology; `useful` = MODEL_FLOPS (6·N·D"
+        " dense / 6·N_active·D MoE; 2·N·D prefill; 2·N_active·B decode)"
+        " / compiled HLO FLOPs — the remat/padding/dispatch-waste"
+        " detector. `roofline fraction` = compute term / dominant term"
+        " (1.0 = the dominant bottleneck is pure MXU compute).\n")
+    oks = [r for r in single if r["status"] == "ok"]
+    roof.append("Cells ranked by roofline fraction (hillclimb candidates"
+                " at the top):\n")
+    roof.append("| fraction | arch × shape | bound | one-line lever |")
+    roof.append("|---|---|---|---|")
+    LEVERS = {
+        "decode": "inherently BW-bound: batch growth / KV quantization",
+        "prefill": "flash KV-chunking already applied; next: fused QKV",
+        "train": "bf16 grad-sync + AR→RS (TPU backend) + collective overlap",
+        "search": "MQO batch growth raises arithmetic intensity linearly",
+    }
+    for r in sorted(oks, key=dominant_fraction):
+        rf = r["roofline"]
+        f = dominant_fraction(r)
+        roof.append(
+            f"| {f:.3f} | {r['arch']} × {r['shape']} |"
+            f" {rf['bottleneck']} | {LEVERS.get(r['kind'], '')} |")
+    roof_text = "\n".join(roof)
+
+    md = open("EXPERIMENTS.md").read()
+    md = re.sub(r"<!-- DRYRUN_TABLES -->.*?(?=\n## )",
+                "<!-- DRYRUN_TABLES -->\n" + dry_text + "\n",
+                md, flags=re.S) if "<!-- DRYRUN_TABLES -->" in md else md
+    md = re.sub(r"<!-- ROOFLINE_SECTION -->.*?(?=\n## )",
+                "<!-- ROOFLINE_SECTION -->\n" + roof_text + "\n",
+                md, flags=re.S) if "<!-- ROOFLINE_SECTION -->" in md else md
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md updated:",
+          len(single), "single-pod records,", len(multi), "multi-pod")
+
+
+if __name__ == "__main__":
+    main()

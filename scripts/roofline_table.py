@@ -1,0 +1,55 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json."""
+import json
+import sys
+
+
+def fmt_table(recs, mesh_filter):
+    rows = []
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) |"
+           " bound | useful | peak GB | fits |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — |"
+                        f" skipped: {r['reason'][:40]} | — | — | — |")
+            continue
+        if r["status"] == "error":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — |"
+                        f" ERROR | — | — | — |")
+            continue
+        rf = r["roofline"]
+        peak = r["memory"]["peak_bytes_est"] / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} |"
+            f" {rf['t_compute_s']*1e3:.1f} | {rf['t_memory_s']*1e3:.1f} |"
+            f" {rf['t_collective_s']*1e3:.1f} | **{rf['bottleneck']}** |"
+            f" {r.get('useful_flops_ratio', 0):.2f} | {peak:.1f} |"
+            f" {'yes' if r.get('hbm_ok') else 'NO'} |")
+    return "\n".join(rows)
+
+
+def dominant_fraction(r):
+    """roofline fraction = compute term / dominant term (how close the
+    dominant bottleneck is to pure-MXU execution)."""
+    rf = r["roofline"]
+    dom = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+    return rf["t_compute_s"] / dom if dom else 0.0
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    recs = json.load(open(path))
+    print("## single-pod (16x16)\n")
+    print(fmt_table(recs, "16x16"))
+    print("\n\n## multi-pod (2x16x16)\n")
+    print(fmt_table([r for r in recs if r["mesh"].count("x") == 2],
+                    "2x16x16"))
+    print("\n\n## roofline fractions (sorted; hillclimb candidates)\n")
+    oks = [r for r in recs if r["status"] == "ok" and r["mesh"] == "16x16"]
+    for r in sorted(oks, key=dominant_fraction):
+        print(f"  {dominant_fraction(r):.3f}  {r['arch']} x {r['shape']}"
+              f"  ({r['roofline']['bottleneck']}-bound)")

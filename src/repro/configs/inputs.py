@@ -1,0 +1,69 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation -- the dry-run lowers
+against these. Modality frontends are STUBS per the assignment: [vlm]
+gets precomputed patch embeddings, [audio] gets precomputed frame
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for train/prefill steps (full-sequence forward)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.num_img_tokens:
+        s_text = s - cfg.num_img_tokens
+        out["tokens"] = _sds((b, s_text), jnp.int32)
+        out["img"] = _sds((b, cfg.num_img_tokens, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.encoder_layers:
+        out["frames"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for one serve_step: token + position + seq_len-sized cache."""
+    from ..models import decode as decode_lib
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "token": _sds((b, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": decode_lib.init_cache(cfg, b, s, abstract=True),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return batch_specs(cfg, shape)
+
+
+def materialize(specs: Dict[str, Any], seed: int = 0) -> Dict[str, Any]:
+    """Turn input specs into small real arrays (smoke tests / examples)."""
+    key = jax.random.PRNGKey(seed)
+
+    def mk(s):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32 and len(s.shape) <= 2 and s.shape:
+            return jax.random.randint(sub, s.shape, 0, 64).astype(jnp.int32)
+        if s.dtype == jnp.int32:
+            return jnp.zeros(s.shape, jnp.int32)
+        if s.shape == ():
+            return jnp.zeros((), s.dtype)
+        return (jax.random.normal(sub, s.shape) * 0.1).astype(s.dtype)
+
+    return jax.tree.map(mk, specs)

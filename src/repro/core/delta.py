@@ -1,0 +1,95 @@
+"""Streaming updates: upsert / delete via the delta-store (paper §3.6).
+
+Semantics (faithful):
+  * insert with upsert semantics -- a new vector for an existing asset id
+    replaces the old one everywhere;
+  * deletes tombstone rows (valid=False) without moving data;
+  * newly inserted vectors live in the delta partition until maintenance
+    flushes them into the IVF layout (core/maintenance.py);
+  * every query always scans the delta partition, so readers see updates
+    immediately (the consistency requirement of §2.1).
+
+All update ops are pure jitted functions IVFIndex -> IVFIndex, so they
+compose with pjit sharding; the host wrapper (storage.MicroNN) serialises
+writers, mirrors each op durably in SQLite, and triggers flushes when the
+delta cursor approaches capacity -- reproducing the paper's single-writer /
+multi-reader regime.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .types import DeltaStore, INVALID_ID, IVFIndex, normalize_if_cosine
+
+
+def _tombstone_main(index: IVFIndex, ids: jax.Array):
+    """Invalidate any main-partition rows whose id appears in `ids`."""
+    hit = (index.ids[:, :, None] == ids[None, None, :]).any(-1)  # [k, p_max]
+    hit = hit & index.valid
+    new_valid = index.valid & ~hit
+    new_counts = index.counts - hit.sum(-1).astype(index.counts.dtype)
+    return new_valid, new_counts
+
+
+def _tombstone_delta(delta: DeltaStore, ids: jax.Array):
+    hit = (delta.ids[:, None] == ids[None, :]).any(-1) & delta.valid
+    return delta.valid & ~hit
+
+
+@jax.jit
+def upsert(index: IVFIndex, vecs: jax.Array, ids: jax.Array,
+           attrs: jax.Array) -> IVFIndex:
+    """Insert a batch of [B] rows with upsert semantics.
+
+    Precondition (enforced by the host wrapper, which flushes first if
+    needed): delta.count + B <= delta capacity.
+    """
+    cfg = index.config
+    vecs = normalize_if_cosine(vecs.astype(jnp.float32), cfg.metric)
+    B = vecs.shape[0]
+    d = index.delta
+
+    # 1. upsert semantics: tombstone any existing copies
+    new_valid, new_counts = _tombstone_main(index, ids)
+    dvalid = _tombstone_delta(d, ids)
+
+    # 2. append at the write cursor
+    slots = d.count + jnp.arange(B, dtype=jnp.int32)
+    new_delta = DeltaStore(
+        vectors=d.vectors.at[slots].set(vecs),
+        ids=d.ids.at[slots].set(ids.astype(jnp.int32)),
+        attrs=d.attrs.at[slots].set(attrs.astype(jnp.float32)),
+        valid=dvalid.at[slots].set(True),
+        count=d.count + B,
+    )
+    return IVFIndex(
+        centroids=index.centroids, csizes=index.csizes,
+        vectors=index.vectors, ids=index.ids, attrs=index.attrs,
+        valid=new_valid, counts=new_counts, delta=new_delta,
+        base_mean_size=index.base_mean_size, config=cfg)
+
+
+@jax.jit
+def delete(index: IVFIndex, ids: jax.Array) -> IVFIndex:
+    """Tombstone a batch of asset ids (no-op for unknown ids)."""
+    new_valid, new_counts = _tombstone_main(index, ids)
+    dvalid = _tombstone_delta(index.delta, ids)
+    d = index.delta
+    return IVFIndex(
+        centroids=index.centroids, csizes=index.csizes,
+        vectors=index.vectors, ids=index.ids, attrs=index.attrs,
+        valid=new_valid, counts=new_counts,
+        delta=DeltaStore(vectors=d.vectors, ids=d.ids, attrs=d.attrs,
+                         valid=dvalid, count=d.count),
+        base_mean_size=index.base_mean_size, config=index.config)
+
+
+def delta_free_slots(index: IVFIndex) -> int:
+    return int(index.delta.capacity - index.delta.count)
+
+
+def delta_live(index: IVFIndex) -> int:
+    return int(index.delta.valid.sum())

@@ -1,0 +1,205 @@
+"""Hybrid queries: attribute predicates + selectivity estimation (paper §3.5).
+
+Attributes are float32 columns aligned to the vector layout (ints coerce
+losslessly below 2^24; the storage layer keeps the typed originals).
+Predicates support the paper's operators (>, <, >=, <=, =, !=) plus MATCH
+(token-set membership -- the FTS5 stand-in, see DESIGN.md §2 item 7) and
+arbitrary AND/OR trees.
+
+Selectivity estimation (paper §3.5.1): per-column equi-width histograms +
+distinct counts; conjunctions take the min of child cardinalities,
+disjunctions the (clamped) sum -- exactly the paper's independence
+simplification (Eq. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Predicate language
+# ---------------------------------------------------------------------------
+
+_OPS = ("lt", "le", "gt", "ge", "eq", "ne", "match")
+
+
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    """Leaf predicate: attrs[..., col] <op> value.
+
+    `match` treats the column as a token bitset (each row holds an int
+    bitmask of tags; value is the required tag bitmask) -- our stand-in for
+    the paper's FTS MATCH over tag strings.
+    """
+    col: int
+    op: str
+    value: float
+
+    def __post_init__(self):
+        assert self.op in _OPS, self.op
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    children: Tuple["Node", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Or:
+    children: Tuple["Node", ...]
+
+
+Node = Union[Pred, And, Or]
+
+
+def _leaf_mask(p: Pred, attrs: jax.Array) -> jax.Array:
+    col = attrs[..., p.col]
+    v = p.value
+    if p.op == "lt":
+        return col < v
+    if p.op == "le":
+        return col <= v
+    if p.op == "gt":
+        return col > v
+    if p.op == "ge":
+        return col >= v
+    if p.op == "eq":
+        return col == v
+    if p.op == "ne":
+        return col != v
+    # match: all tag bits of v present in the row bitset
+    bits = jnp.uint32(int(v))
+    return (col.astype(jnp.uint32) & bits) == bits
+
+
+def eval_predicate(node: Node, attrs: jax.Array) -> jax.Array:
+    """[..., n_attr] -> [...] bool."""
+    if isinstance(node, Pred):
+        return _leaf_mask(node, attrs)
+    masks = [eval_predicate(c, attrs) for c in node.children]
+    out = masks[0]
+    for m in masks[1:]:
+        out = (out & m) if isinstance(node, And) else (out | m)
+    return out
+
+
+def compile_filter(node: Node):
+    """Predicate tree -> hashable callable usable as a static jit arg."""
+    def fn(attrs: jax.Array) -> jax.Array:
+        return eval_predicate(node, attrs)
+    # make it stable under jit static-arg hashing
+    fn.__name__ = f"filter_{hash(_freeze(node)) & 0xFFFFFFFF:x}"
+    return fn
+
+
+def _freeze(node: Node):
+    if isinstance(node, Pred):
+        return (node.col, node.op, node.value)
+    tag = "and" if isinstance(node, And) else "or"
+    return (tag,) + tuple(_freeze(c) for c in node.children)
+
+
+# ---------------------------------------------------------------------------
+# Histograms & selectivity estimation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ColumnStats:
+    lo: float
+    hi: float
+    counts: np.ndarray      # [bins]
+    n_distinct: int
+    n_rows: int
+    is_bitset: bool = False  # MATCH columns: per-bit population counts
+    bit_counts: np.ndarray | None = None  # [32]
+
+    @property
+    def bins(self) -> int:
+        return len(self.counts)
+
+
+class AttributeStats:
+    """Per-column equi-width histograms over the live attribute rows."""
+
+    def __init__(self, attrs: np.ndarray, bins: int = 64,
+                 bitset_cols: Sequence[int] = ()):
+        attrs = np.asarray(attrs, np.float64)
+        self.n_rows = attrs.shape[0]
+        self.cols: Dict[int, ColumnStats] = {}
+        for c in range(attrs.shape[1]):
+            col = attrs[:, c]
+            lo, hi = (float(col.min()), float(col.max())) if len(col) else (0, 1)
+            if hi <= lo:
+                hi = lo + 1.0
+            counts, _ = np.histogram(col, bins=bins, range=(lo, hi))
+            bit_counts = None
+            if c in bitset_cols:
+                u = col.astype(np.uint32)
+                bit_counts = np.array(
+                    [int(((u >> b) & 1).sum()) for b in range(32)])
+            self.cols[c] = ColumnStats(
+                lo=lo, hi=hi, counts=counts,
+                n_distinct=int(len(np.unique(col))) if len(col) else 1,
+                n_rows=self.n_rows,
+                is_bitset=c in bitset_cols,
+                bit_counts=bit_counts)
+
+    # -- cardinality of a leaf ------------------------------------------------
+    def _leaf_card(self, p: Pred) -> float:
+        st = self.cols[p.col]
+        n = st.n_rows
+        if n == 0:
+            return 0.0
+        if p.op == "match" and st.is_bitset:
+            # independence across tag bits (paper's string-match estimator
+            # analogue): sel = prod_b (bit_count_b / n) over required bits
+            sel = 1.0
+            bits = int(p.value)
+            for b in range(32):
+                if bits >> b & 1:
+                    sel *= st.bit_counts[b] / n
+            return sel * n
+        if p.op in ("eq", "ne"):
+            # skew-aware: the histogram bin's mass upper-bounds the value's
+            # count; take the sharper of (uniform 1/n_distinct, bin mass)
+            uniform = n / max(1, st.n_distinct)
+            card = uniform
+            width = (st.hi - st.lo) / st.bins
+            if st.lo <= p.value <= st.hi and width > 0:
+                bin_i = min(int((p.value - st.lo) / width), st.bins - 1)
+                card = min(uniform, float(st.counts[bin_i]))
+            return card if p.op == "eq" else n - card
+        # range predicates: fractional histogram mass strictly below v
+        width = (st.hi - st.lo) / st.bins
+        if p.value <= st.lo:
+            below = 0.0
+        elif p.value >= st.hi:
+            below = float(n)
+        else:
+            bin_i = min(int((p.value - st.lo) / width), st.bins - 1)
+            frac = (p.value - (st.lo + bin_i * width)) / width
+            below = float(st.counts[:bin_i].sum()
+                          + st.counts[bin_i] * np.clip(frac, 0.0, 1.0))
+        if p.op in ("lt", "le"):
+            return below
+        return n - below
+
+    def cardinality(self, node: Node) -> float:
+        """|sigma_filters(R)| estimate -- min over AND, sum over OR (Eq. 3)."""
+        if isinstance(node, Pred):
+            return self._leaf_card(node)
+        cards = [self.cardinality(c) for c in node.children]
+        if isinstance(node, And):
+            return min(cards)
+        return min(sum(cards), self.n_rows)
+
+    def selectivity_factor(self, node: Node) -> float:
+        """F_hat_filters (Eq. 3): min(card, |R|) / |R|."""
+        if self.n_rows == 0:
+            return 0.0
+        return min(self.cardinality(node), self.n_rows) / self.n_rows

@@ -1,0 +1,119 @@
+"""IVF index construction and the padded partition-major device layout.
+
+Build path (paper §3.1-3.2): cluster with mini-batch balanced k-means, then
+lay vectors out partition-major. On disk (SQLite) the layout is a clustered
+primary index on (partition_id, asset_id); on device it is the padded
+[k, p_max, d] tensor described in core/types.py. `p_max` is the post-build
+max partition size rounded up to `cfg.pad_to` -- balanced clustering keeps
+the padding overhead small (measured in benchmarks/bench_build.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kmeans
+from .types import (DeltaStore, INVALID_ID, IVFConfig, IVFIndex,
+                    normalize_if_cosine)
+
+
+def pack_partitions(
+    X: np.ndarray,            # [n, d] float32
+    ids: np.ndarray,          # [n] int32
+    attrs: Optional[np.ndarray],  # [n, n_attr] float32 or None
+    assign: np.ndarray,       # [n] int32 partition per row
+    k: int,
+    pad_to: int = 8,
+    p_max: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Repack rows into the padded partition-major layout (host-side op --
+    this is the 'disk reorganisation' tier; SQLite does the same job with a
+    clustered index ORDER BY partition_id)."""
+    n, d = X.shape
+    n_attr = 0 if attrs is None else attrs.shape[1]
+    attrs = np.zeros((n, 0), np.float32) if attrs is None else attrs
+    counts = np.bincount(assign, minlength=k).astype(np.int32)
+    if p_max is None:
+        p_max = int(counts.max()) if n else pad_to
+        p_max = max(pad_to, -(-p_max // pad_to) * pad_to)
+
+    vec = np.zeros((k, p_max, d), np.float32)
+    vid = np.full((k, p_max), INVALID_ID, np.int32)
+    vat = np.zeros((k, p_max, n_attr), np.float32)
+    val = np.zeros((k, p_max), bool)
+
+    order = np.argsort(assign, kind="stable")
+    slot = np.zeros(k, np.int64)
+    for row in order:
+        p = assign[row]
+        s = slot[p]
+        if s >= p_max:  # overflow can only happen on incremental appends
+            raise ValueError(f"partition {p} overflows p_max={p_max}")
+        vec[p, s] = X[row]
+        vid[p, s] = ids[row]
+        vat[p, s] = attrs[row]
+        val[p, s] = True
+        slot[p] = s + 1
+    return vec, vid, vat, val, counts
+
+
+def build_index(
+    X: np.ndarray,
+    ids: Optional[np.ndarray] = None,
+    attrs: Optional[np.ndarray] = None,
+    cfg: Optional[IVFConfig] = None,
+    k: Optional[int] = None,
+) -> IVFIndex:
+    """Full index build: Alg. 1 clustering + partition-major packing."""
+    cfg = cfg or IVFConfig(dim=X.shape[1])
+    X = np.asarray(
+        normalize_if_cosine(jnp.asarray(X, jnp.float32), cfg.metric))
+    n = X.shape[0]
+    ids = np.arange(n, dtype=np.int32) if ids is None else ids.astype(np.int32)
+
+    centroids, csizes, assign = kmeans.fit_in_memory(X, cfg, k=k)
+    k = centroids.shape[0]
+    vec, vid, vat, val, counts = pack_partitions(
+        X, ids, attrs, assign, k, pad_to=cfg.pad_to)
+
+    n_attr = vat.shape[-1]
+    return IVFIndex(
+        centroids=jnp.asarray(centroids),
+        csizes=jnp.asarray(csizes, jnp.float32),
+        vectors=jnp.asarray(vec),
+        ids=jnp.asarray(vid),
+        attrs=jnp.asarray(vat),
+        valid=jnp.asarray(val),
+        counts=jnp.asarray(counts),
+        delta=DeltaStore.empty(cfg.delta_capacity, X.shape[1], n_attr),
+        base_mean_size=jnp.asarray(counts.mean() if n else 0.0, jnp.float32),
+        config=cfg,
+    )
+
+
+def grow_layout(index: IVFIndex, new_p_max: int) -> IVFIndex:
+    """Grow p_max (host-side maintenance; keeps device shapes static
+    between maintenance points)."""
+    k, p_max, d = index.vectors.shape
+    assert new_p_max >= p_max
+    pad = new_p_max - p_max
+
+    def pad2(a, fill):
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
+        return jnp.pad(a, widths, constant_values=fill)
+
+    return IVFIndex(
+        centroids=index.centroids,
+        csizes=index.csizes,
+        vectors=pad2(index.vectors, 0.0),
+        ids=pad2(index.ids, INVALID_ID),
+        attrs=pad2(index.attrs, 0.0),
+        valid=pad2(index.valid, False),
+        counts=index.counts,
+        delta=index.delta,
+        base_mean_size=index.base_mean_size,
+        config=index.config,
+    )

@@ -1,0 +1,74 @@
+"""Index monitor (paper Fig. 1, §3.6): tracks quality signals on updates
+and decides when to run incremental maintenance vs a full rebuild.
+
+Signals tracked (after [26]):
+  * delta pressure: live delta rows / capacity -- high pressure raises
+    query latency (the delta partition is always scanned);
+  * partition growth: mean live partition size vs size at last rebuild --
+    the paper triggers a full rebuild at +50% growth;
+  * tombstone ratio: dead rows inflate scan cost without contributing
+    results.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .types import IVFIndex
+
+
+@dataclasses.dataclass
+class MonitorConfig:
+    delta_flush_fraction: float = 0.75   # flush when delta is this full
+    growth_rebuild_threshold: float = 0.5  # paper: 50% mean-size growth
+    tombstone_rebuild_fraction: float = 0.3
+
+
+@dataclasses.dataclass
+class IndexHealth:
+    n_live: int
+    delta_pressure: float
+    mean_partition_size: float
+    growth: float            # relative growth vs base_mean_size
+    tombstone_fraction: float
+    action: str              # "none" | "flush" | "rebuild"
+
+
+class IndexMonitor:
+    def __init__(self, cfg: MonitorConfig | None = None):
+        self.cfg = cfg or MonitorConfig()
+        self.history: list[IndexHealth] = []
+
+    def check(self, index: IVFIndex) -> IndexHealth:
+        cfg = self.cfg
+        counts = np.asarray(index.counts)
+        valid = np.asarray(index.valid)
+        live_main = int(valid.sum())
+        delta_live = int(np.asarray(index.delta.valid).sum())
+        delta_cursor = int(index.delta.count)
+        nonempty = max(1, int((counts > 0).sum()))
+        mean_size = live_main / nonempty
+        base = float(index.base_mean_size) or 1.0
+        growth = mean_size / base - 1.0
+        # tombstones: occupied slots (cursor-written or once-valid) now dead
+        dead_main = int((np.asarray(index.ids) != -1).sum()) - live_main
+        tomb = dead_main / max(1, live_main + dead_main)
+
+        if growth >= cfg.growth_rebuild_threshold or \
+           tomb >= cfg.tombstone_rebuild_fraction:
+            action = "rebuild"
+        elif delta_cursor >= cfg.delta_flush_fraction * index.delta.capacity:
+            action = "flush"
+        else:
+            action = "none"
+
+        health = IndexHealth(
+            n_live=live_main + delta_live,
+            delta_pressure=delta_cursor / max(1, index.delta.capacity),
+            mean_partition_size=mean_size,
+            growth=growth,
+            tombstone_fraction=tomb,
+            action=action)
+        self.history.append(health)
+        return health

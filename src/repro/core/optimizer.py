@@ -1,0 +1,80 @@
+"""Hybrid query optimizer (paper §3.5.1, Eqs. 1-3).
+
+Chooses between:
+  * pre-filtering  -- evaluate predicate, brute-force over qualifiers
+                      (100% recall; cost ~ predicate cardinality)
+  * post-filtering -- ANN scan with the predicate fused before top-k
+                      (cost ~ n_probe * p_target; recall can drop for
+                      highly selective predicates)
+
+Decision rule: pre-filter iff  F_hat_filters < F_hat_IVF  where
+F_hat_IVF = n_probe * p_target / |R|   (Eq. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import mqo, search
+from .hybrid import AttributeStats, Node, compile_filter
+from .types import IVFIndex, SearchResult
+
+
+@dataclasses.dataclass
+class PlanDecision:
+    plan: str                  # "pre" | "post"
+    f_filters: float           # estimated predicate selectivity factor
+    f_ivf: float               # IVF pseudo-predicate selectivity factor
+    prefilter_cap: int         # static gather budget when plan == "pre"
+
+
+class HybridOptimizer:
+    """Plan chooser + executor. Stats refresh on (re)build / maintenance."""
+
+    def __init__(self, stats: AttributeStats, *,
+                 cap_safety: float = 2.0, cap_round: int = 256,
+                 max_prefilter_cap: Optional[int] = None):
+        self.stats = stats
+        self.cap_safety = cap_safety
+        self.cap_round = cap_round
+        self.max_prefilter_cap = max_prefilter_cap
+
+    def choose(self, index: IVFIndex, predicate: Node, n_probe: int) -> PlanDecision:
+        n_rows = max(1, int(index.num_live()))
+        f_filters = self.stats.selectivity_factor(predicate)
+        f_ivf = min(1.0, n_probe * index.config.target_partition_size / n_rows)
+        est_rows = f_filters * n_rows
+        cap = int(est_rows * self.cap_safety) + self.cap_round
+        cap = min(cap, n_rows, *( [self.max_prefilter_cap]
+                                  if self.max_prefilter_cap else [] ))
+        cap = max(self.cap_round, -(-cap // self.cap_round) * self.cap_round)
+        plan = "pre" if f_filters < f_ivf else "post"
+        return PlanDecision(plan=plan, f_filters=f_filters, f_ivf=f_ivf,
+                            prefilter_cap=cap)
+
+    def execute(
+        self,
+        index: IVFIndex,
+        queries: jax.Array,
+        predicate: Node,
+        k: int,
+        n_probe: int,
+        force_plan: Optional[str] = None,
+        use_mqo: bool = False,
+    ) -> tuple[SearchResult, PlanDecision]:
+        decision = self.choose(index, predicate, n_probe)
+        plan = force_plan or decision.plan
+        attr_filter = compile_filter(predicate)
+        if plan == "pre":
+            res = search.prefilter_search(
+                index, queries, k, attr_filter, cap=decision.prefilter_cap)
+        elif use_mqo:
+            res = mqo.mqo_search(index, queries, k, n_probe,
+                                 attr_filter=attr_filter)
+        else:
+            res = search.ann_search(index, queries, k, n_probe,
+                                    attr_filter=attr_filter)
+        return res, dataclasses.replace(decision, plan=plan)

@@ -1,0 +1,86 @@
+"""Retrieval-augmented generation: MicroNN as a first-class LM feature.
+
+kNN-LM-style decode (Khandelwal et al. style, adapted): the backbone's last
+hidden state is the query vector; the MicroNN index stores (context
+embedding -> next-token id) pairs; retrieved neighbour tokens form a
+distance-weighted distribution that is interpolated with the LM softmax:
+
+    p(w) = lam * p_knn(w) + (1 - lam) * p_lm(w)
+
+The index here is the *same* updatable IVF structure as everywhere else --
+streaming upserts let the datastore grow during deployment, the paper's
+whole point. For multi-pod serving the datastore partitions shard over the
+`model` axis and the per-device partial top-k merges with the tournament
+reduction (core/topk.py); see distributed/sharded_index.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import search
+from .types import IVFIndex, SearchResult, static_field, register_dataclass
+
+
+@register_dataclass
+@dataclasses.dataclass
+class RagConfig:
+    k: int = static_field(default=16)           # neighbours per decode step
+    n_probe: int = static_field(default=8)
+    lam: float = static_field(default=0.25)     # kNN interpolation weight
+    temperature: float = static_field(default=10.0)  # distance -> weight
+
+
+@register_dataclass
+@dataclasses.dataclass
+class RagDatastore:
+    """IVF index + neighbour payload (next-token per stored vector id)."""
+    index: IVFIndex
+    # payload token for each asset id; ids index this table directly
+    next_token: jax.Array     # [max_id] int32
+
+
+def knn_logits(
+    ds: RagDatastore,
+    hidden: jax.Array,        # [B, d] query embeddings (LM hidden states)
+    vocab: int,
+    cfg: RagConfig,
+) -> jax.Array:
+    """[B, vocab] log-probabilities from the retrieved neighbourhood."""
+    res: SearchResult = search.ann_search(
+        ds.index, hidden, cfg.k, cfg.n_probe)
+    ok = res.ids >= 0
+    toks = ds.next_token[jnp.maximum(res.ids, 0)]            # [B, K]
+    w = jax.nn.softmax(
+        jnp.where(ok, -res.scores * cfg.temperature, -jnp.inf), axis=-1)
+    probs = jnp.zeros((hidden.shape[0], vocab), jnp.float32)
+    probs = probs.at[jnp.arange(hidden.shape[0])[:, None], toks].add(
+        jnp.where(ok, w, 0.0))
+    # guard fully-empty retrievals
+    any_ok = ok.any(-1, keepdims=True)
+    probs = jnp.where(any_ok, probs, 1.0 / vocab)
+    return jnp.log(jnp.maximum(probs, 1e-20))
+
+
+def interpolate(
+    lm_logits: jax.Array,     # [B, vocab]
+    knn_logp: jax.Array,      # [B, vocab]
+    lam: float,
+) -> jax.Array:
+    """log( lam * p_knn + (1-lam) * p_lm ) computed stably."""
+    lm_logp = jax.nn.log_softmax(lm_logits.astype(jnp.float32), axis=-1)
+    return jnp.logaddexp(jnp.log1p(-lam) + lm_logp, jnp.log(lam) + knn_logp)
+
+
+def rag_decode_logits(
+    ds: RagDatastore,
+    lm_logits: jax.Array,
+    hidden: jax.Array,
+    cfg: RagConfig,
+) -> jax.Array:
+    vocab = lm_logits.shape[-1]
+    return interpolate(lm_logits, knn_logits(ds, hidden, vocab, cfg), cfg.lam)

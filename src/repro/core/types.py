@@ -1,0 +1,164 @@
+"""Core datatypes for the MicroNN index.
+
+The device-resident index is a pytree of fixed-shape arrays (TPU requires
+static shapes). The paper's disk-resident layout (SQLite rows clustered by
+partition id) maps to a partition-major padded tensor layout:
+
+    vectors [k, p_max, d]   -- partition-major, padded to p_max per partition
+    ids     [k, p_max]      -- asset ids, -1 marks padding / tombstones
+    valid   [k, p_max]      -- live-row mask (False = padding or deleted)
+    counts  [k]             -- live rows per partition
+
+The delta-store (paper §3.6: "a reserved partition identifier") is carried
+as a separate fixed-capacity block scanned by every query.
+
+Balanced clustering (Alg. 1) bounds p_max, which bounds padding waste --
+on TPU the paper's balance constraint is load-bearing for the memory
+roofline, not just tail latency (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Distances are "smaller is better" throughout. L2 uses squared distance;
+# ip/cosine negate the dot product. Cosine vectors are L2-normalised at
+# ingest so cosine == ip on the stored data.
+METRICS = ("l2", "ip", "cosine")
+
+# Sentinel id for padding / tombstoned rows.
+INVALID_ID = -1
+# Score assigned to masked rows so they never enter a top-k.
+MASKED_SCORE = jnp.finfo(jnp.float32).max
+
+
+def register_dataclass(cls):
+    """Register a dataclass as a JAX pytree, splitting data vs meta fields."""
+    data = [f.name for f in dataclasses.fields(cls) if not f.metadata.get("static")]
+    meta = [f.name for f in dataclasses.fields(cls) if f.metadata.get("static")]
+    jax.tree_util.register_dataclass(cls, data_fields=data, meta_fields=meta)
+    return cls
+
+
+def static_field(**kw):
+    return dataclasses.field(metadata={"static": True}, **kw)
+
+
+@register_dataclass
+@dataclasses.dataclass
+class IVFConfig:
+    """Index construction / search configuration (paper §3.1, §3.3)."""
+
+    dim: int = static_field(default=128)
+    metric: str = static_field(default="l2")
+    target_partition_size: int = static_field(default=100)  # paper default
+    minibatch_size: int = static_field(default=256)
+    kmeans_iters: int = static_field(default=20)
+    balance_weight: float = static_field(default=1.0)  # lambda in NEAREST penalty
+    balanced_final_assign: bool = static_field(default=False)  # beyond-paper knob
+    delta_capacity: int = static_field(default=1024)
+    # Partition padding granularity; p_max is rounded up to a multiple of
+    # this so Pallas tiles stay MXU-aligned.
+    pad_to: int = static_field(default=8)
+    # Rebuild trigger: fraction growth of mean partition size (paper: 0.5).
+    rebuild_growth_threshold: float = static_field(default=0.5)
+    seed: int = static_field(default=0)
+
+
+@register_dataclass
+@dataclasses.dataclass
+class DeltaStore:
+    """Fixed-capacity staging area for streaming inserts (paper §3.6)."""
+
+    vectors: jax.Array  # [cap, d]
+    ids: jax.Array      # [cap] int32, INVALID_ID where empty
+    attrs: jax.Array    # [cap, n_attr] float32
+    valid: jax.Array    # [cap] bool
+    count: jax.Array    # [] int32 -- number of live rows
+
+    @property
+    def capacity(self) -> int:
+        return self.vectors.shape[0]
+
+    @staticmethod
+    def empty(cap: int, dim: int, n_attr: int) -> "DeltaStore":
+        return DeltaStore(
+            vectors=jnp.zeros((cap, dim), jnp.float32),
+            ids=jnp.full((cap,), INVALID_ID, jnp.int32),
+            attrs=jnp.zeros((cap, n_attr), jnp.float32),
+            valid=jnp.zeros((cap,), bool),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+
+@register_dataclass
+@dataclasses.dataclass
+class IVFIndex:
+    """Device-resident IVF index state (paper Fig. 2 schema, tensorised)."""
+
+    centroids: jax.Array   # [k, d] float32
+    csizes: jax.Array      # [k] int32 -- kmeans running counts (for updates)
+    vectors: jax.Array     # [k, p_max, d] float32
+    ids: jax.Array         # [k, p_max] int32
+    attrs: jax.Array       # [k, p_max, n_attr] float32
+    valid: jax.Array       # [k, p_max] bool
+    counts: jax.Array      # [k] int32 live rows per partition
+    delta: DeltaStore
+    # Mean partition size at last (re)build -- the monitor compares the
+    # current mean against this to trigger rebuilds (paper §3.6).
+    base_mean_size: jax.Array  # [] float32
+    config: IVFConfig = static_field(default_factory=IVFConfig)
+
+    @property
+    def k(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def p_max(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def n_attr(self) -> int:
+        return self.attrs.shape[-1]
+
+    def num_live(self) -> jax.Array:
+        # delta.count is the write cursor; valid tracks live rows
+        return self.counts.sum() + self.delta.valid.sum()
+
+
+@register_dataclass
+@dataclasses.dataclass
+class SearchResult:
+    """Top-k result batch. ids are INVALID_ID where fewer than k matches."""
+
+    ids: jax.Array        # [Q, K] int32
+    scores: jax.Array     # [Q, K] float32 (smaller is better)
+
+
+def normalize_if_cosine(x: jax.Array, metric: str) -> jax.Array:
+    if metric == "cosine":
+        n = jnp.linalg.norm(x, axis=-1, keepdims=True)
+        return x / jnp.maximum(n, 1e-12)
+    return x
+
+
+def pairwise_scores(q: jax.Array, v: jax.Array, metric: str) -> jax.Array:
+    """[Q, d] x [N, d] -> [Q, N] scores, smaller is better.
+
+    L2 uses the matmul expansion ||q-v||^2 = ||q||^2 + ||v||^2 - 2 q.v so the
+    MXU does the heavy lifting (paper §3.3's SIMD batching, TPU-native).
+    """
+    dots = q @ v.T
+    if metric in ("ip", "cosine"):
+        return -dots
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+    v2 = jnp.sum(v * v, axis=-1)
+    return q2 + v2[None, :] - 2.0 * dots

@@ -1,0 +1,82 @@
+"""Synthetic vector workloads mirroring the paper's Table 2.
+
+The container is offline, so public sets (SIFT/GIST/GLOVE/...) are
+re-synthesised at matching dimensionality/metric as clustered Gaussian
+mixtures; `scale` shrinks row counts for CPU benches while keeping the
+geometry. Exact ground truth is computed by chunked brute force.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+# name -> (dim, n_vectors, n_queries, metric)   [paper Table 2]
+TABLE2 = {
+    "mnist": (784, 60_000, 10_000, "l2"),
+    "nytimes": (256, 290_000, 10_000, "cosine"),
+    "sift": (128, 1_000_000, 10_000, "l2"),
+    "glove": (200, 1_183_514, 10_000, "l2"),
+    "gist": (960, 1_000_000, 1_000, "l2"),
+    "deepimage": (96, 10_000_000, 10_000, "cosine"),
+    "internala": (512, 150_000, 1_000, "cosine"),
+}
+
+
+@dataclasses.dataclass
+class Dataset:
+    name: str
+    metric: str
+    X: np.ndarray          # [n, d]
+    Q: np.ndarray          # [q, d]
+    gt: Optional[np.ndarray] = None   # [q, k_gt] exact neighbour row idx
+
+    @property
+    def dim(self) -> int:
+        return self.X.shape[1]
+
+
+def make(name: str, scale: float = 0.01, k_gt: int = 100,
+         seed: int = 0, with_gt: bool = True,
+         n_clusters: Optional[int] = None) -> Dataset:
+    dim, n, q, metric = TABLE2[name]
+    n = max(1000, int(n * scale))
+    q = max(32, min(int(q * scale), 512))
+    rng = np.random.default_rng(seed)
+    n_clusters = n_clusters or max(16, n // 500)
+    centers = rng.normal(size=(n_clusters, dim)).astype(np.float32) * 4.0
+    asg = rng.integers(0, n_clusters, n)
+    X = centers[asg] + rng.normal(size=(n, dim)).astype(np.float32)
+    qi = rng.integers(0, n, q)
+    Q = X[qi] + 0.1 * rng.normal(size=(q, dim)).astype(np.float32)
+    gt = exact_gt(X, Q, k_gt, metric) if with_gt else None
+    return Dataset(name=name, metric=metric, X=X, Q=Q, gt=gt)
+
+
+def exact_gt(X: np.ndarray, Q: np.ndarray, k: int, metric: str,
+             chunk: int = 4096) -> np.ndarray:
+    """Chunked brute-force ground truth (row indices into X)."""
+    if metric == "cosine":
+        Xn = X / np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-12)
+        Qn = Q / np.maximum(np.linalg.norm(Q, axis=1, keepdims=True), 1e-12)
+        scores = np.empty((len(Q), len(X)), np.float32)
+        for i in range(0, len(X), chunk):
+            scores[:, i:i + chunk] = -(Qn @ Xn[i:i + chunk].T)
+    else:
+        x2 = np.sum(X * X, axis=1)
+        scores = np.empty((len(Q), len(X)), np.float32)
+        for i in range(0, len(X), chunk):
+            scores[:, i:i + chunk] = \
+                x2[None, i:i + chunk] - 2.0 * (Q @ X[i:i + chunk].T)
+    return np.argsort(scores, axis=1)[:, :k]
+
+
+def recall(ids: np.ndarray, gt_rows: np.ndarray, row_ids: np.ndarray,
+           k: int) -> float:
+    """recall@k of result asset ids vs ground-truth rows (mapped to ids)."""
+    gt_ids = row_ids[gt_rows[:, :k]]
+    hits = 0
+    for a, b in zip(ids[:, :k], gt_ids):
+        hits += len(set(int(x) for x in a if x >= 0) & set(map(int, b)))
+    return hits / (len(gt_ids) * k)

@@ -1,0 +1,1 @@
+from .sharded_index import distributed_search, index_shardings

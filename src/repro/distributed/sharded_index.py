@@ -1,0 +1,165 @@
+"""Distributed MicroNN: the paper's ANN search at pod scale.
+
+Index layout on the production mesh (DESIGN.md §6):
+  * centroids        replicated (small -- the paper scans them anyway)
+  * partitions       [k, p_max, d] sharded on k over the `model` axis
+  * queries          sharded over the data axes, replicated over `model`
+
+Search is Alg. 2 run as 4 SPMD phases inside one `shard_map`:
+  1. local centroid scoring        [Q, k/m] matmul per device
+  2. global top-n probe selection  log-depth tournament over `model`
+     (exact: the union of per-device candidates contains the global top-n)
+  3. owned-partition scan          each device MQO-scans the probed
+     partitions it owns (fixed-cap gather, selection-masked)
+  4. global top-k result merge     hypercube tournament over `model`
+     (the paper's parallel heap merge, on ICI)
+
+Collective bytes per query batch: phase 2 moves n ids+scores per device,
+phase 4 moves k results per device -- both O(log m) rounds; partition data
+never crosses devices. That locality is the paper's disk-efficiency
+argument transplanted to ICI.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import topk as topk_lib
+from ..core.types import IVFIndex, SearchResult, normalize_if_cosine
+
+
+def index_shardings(index: IVFIndex, mesh: Mesh, model_axis: str = "model"):
+    """NamedShardings for an IVFIndex pytree: partitions over `model`."""
+    m = model_axis
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    from ..core.types import DeltaStore
+    return IVFIndex(
+        centroids=ns(m, None),
+        csizes=ns(m),
+        vectors=ns(m, None, None),
+        ids=ns(m, None),
+        attrs=ns(m, None, None),
+        valid=ns(m, None),
+        counts=ns(m),
+        delta=DeltaStore(
+            vectors=ns(None, None), ids=ns(None), attrs=ns(None, None),
+            valid=ns(None), count=ns()),
+        base_mean_size=ns(),
+        config=index.config if not isinstance(index, IVFIndex) else
+        index.config,
+    )
+
+
+def distributed_search(
+    index: IVFIndex,
+    queries: jax.Array,              # [Q, d] sharded over data axes
+    k: int,
+    n_probe: int,
+    mesh: Mesh,
+    *,
+    data_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    local_cap: Optional[int] = None,
+    merge: str = "tournament",       # tournament | allgather
+) -> SearchResult:
+    """Exact-distributed Alg. 2 (bitwise same results as single-device
+    ann_search up to float association, validated in tests)."""
+    cfg = index.config
+    m_size = mesh.devices.shape[list(mesh.axis_names).index(model_axis)]
+    cap = local_cap or n_probe        # worst case: all probes on one shard
+
+    def local(centroids, csizes, vectors, ids, attrs, valid, counts,
+              dvec, dids, dattrs, dvalid, dcount, base, q):
+        del csizes, attrs, dattrs, base
+        me = jax.lax.axis_index(model_axis)
+        k_local = vectors.shape[0]
+        q = normalize_if_cosine(q.astype(jnp.float32), cfg.metric)
+
+        # -- phase 1: local centroid scores --------------------------------
+        from ..core.types import pairwise_scores
+        cd = pairwise_scores(q, centroids, cfg.metric)       # [Q, k_local]
+        cd = jnp.where(counts[None, :] > 0, cd, jnp.finfo(jnp.float32).max)
+        n_local = min(n_probe, k_local)
+        local_s, local_i = jax.lax.top_k(-cd, n_local)
+        local_s = -local_s
+        gids = (local_i + me * k_local).astype(jnp.int32)
+
+        # -- phase 2: global top-n probe ids --------------------------------
+        if merge == "tournament":
+            gs, gi = topk_lib.tournament_merge(local_s, gids, n_probe,
+                                               model_axis)
+        else:
+            gs, gi = topk_lib.allgather_merge(local_s, gids, n_probe,
+                                              model_axis)
+
+        # -- phase 3: scan owned probed partitions --------------------------
+        mine = (gi // k_local) == me                          # [Q, n]
+        lid = jnp.where(mine, gi % k_local, 0)
+        # fixed-cap compaction of this device's probe list over the batch
+        want = jnp.zeros((k_local,), bool).at[
+            jnp.where(mine, lid, 0).reshape(-1)].set(
+            mine.reshape(-1), mode="drop")
+        (plist,) = jnp.nonzero(want, size=cap, fill_value=0)
+        pvalid_probe = jnp.take(want, plist)
+
+        pv = vectors[plist]                                   # [cap,p_max,d]
+        pid = ids[plist]
+        pok = valid[plist] & pvalid_probe[:, None]
+        # per-query selection: query q wants local partition plist[j]?
+        sel = (gi[:, None, :] == (plist[None, :, None] + me * k_local)
+               ).any(-1) & mine.any(-1, keepdims=True)        # [Q, cap]
+
+        dots = jnp.einsum("qd,cpd->qcp", q, pv)
+        if cfg.metric in ("ip", "cosine"):
+            scores = -dots
+        else:
+            v2 = jnp.sum(pv * pv, axis=-1)
+            scores = v2[None] - 2.0 * dots                    # rank-equal
+        ok = pok[None] & sel[:, :, None]
+        scores = jnp.where(ok, scores, jnp.finfo(jnp.float32).max)
+        flat_s = scores.reshape(q.shape[0], -1)
+        flat_i = jnp.broadcast_to(pid.reshape(1, -1), flat_s.shape)
+
+        # delta partition: replicated, scanned once on shard 0 of the axis
+        ddots = q @ dvec.T
+        dsc = -ddots if cfg.metric in ("ip", "cosine") else \
+            jnp.sum(dvec * dvec, -1)[None] - 2.0 * ddots
+        dok = dvalid[None, :] & (me == 0)
+        dsc = jnp.where(dok, dsc, jnp.finfo(jnp.float32).max)
+
+        all_s = jnp.concatenate([flat_s, dsc], axis=-1)
+        all_i = jnp.concatenate(
+            [flat_i, jnp.broadcast_to(dids[None], dsc.shape)], axis=-1)
+        ls, li = topk_lib.topk_smallest(all_s, all_i, k)
+        ls = jnp.where(li < 0, jnp.finfo(jnp.float32).max, ls)
+
+        # -- phase 4: global result merge ------------------------------------
+        if merge == "tournament":
+            fs, fi = topk_lib.tournament_merge(ls, li, k, model_axis)
+        else:
+            fs, fi = topk_lib.allgather_merge(ls, li, k, model_axis)
+        return fs, fi
+
+    dp = P(data_axes if len(data_axes) > 1 else data_axes[0], None)
+    mp = model_axis
+    in_specs = (
+        P(mp, None), P(mp), P(mp, None, None), P(mp, None),
+        P(mp, None, None), P(mp, None), P(mp),
+        P(None, None), P(None), P(None, None), P(None), P(),
+        P(), dp,
+    )
+    fs, fi = jax.shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=(dp, dp),
+        check_vma=False,
+    )(index.centroids, index.csizes, index.vectors, index.ids, index.attrs,
+      index.valid, index.counts, index.delta.vectors, index.delta.ids,
+      index.delta.attrs, index.delta.valid, index.delta.count,
+      index.base_mean_size, queries)
+    return SearchResult(ids=fi, scores=fs)

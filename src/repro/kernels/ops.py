@@ -1,0 +1,60 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`interpret` defaults to True (this container is CPU-only; interpret mode
+executes the kernel bodies exactly). On TPU hardware pass interpret=False
+-- the BlockSpecs/grids are written for real VMEM tiling.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ivf_scan as _ivf
+from . import kmeans_assign as _km
+from ..core.types import IVFIndex
+
+
+@partial(jax.jit, static_argnames=("k_out", "metric", "interpret"))
+def scan_topk(queries, vectors, valid, ids, part_ids, k_out: int,
+              metric: str = "l2", interpret: bool = True):
+    """Fused partition-scan + top-k (Alg. 2 hot loop)."""
+    return _ivf.ivf_scan_topk(queries, vectors, valid, ids, part_ids,
+                              k_out, metric=metric, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k_out", "metric", "interpret"))
+def scan_topk_mqo(queries, vectors, valid, ids, part_ids, qsel,
+                  k_out: int, metric: str = "l2", interpret: bool = True):
+    """MQO variant: qsel [Q, n] masks which query wants which partition."""
+    return _ivf.ivf_scan_topk(queries, vectors, valid, ids, part_ids,
+                              k_out, metric=metric, qsel=qsel,
+                              interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("balance_weight", "target_size",
+                                   "tile_k", "interpret"))
+def assign_nearest(batch, centroids, counts, *, balance_weight: float = 0.0,
+                   target_size: int = 100, scale: float = 1.0,
+                   tile_k: int = 256, interpret: bool = True):
+    """Penalised nearest-centroid assignment (Alg. 1 NEAREST, batch form)."""
+    return _km.kmeans_assign(batch, centroids, counts,
+                             balance_weight=balance_weight,
+                             target_size=target_size, scale=scale,
+                             tile_k=tile_k, interpret=interpret)
+
+
+def index_scan_topk(index: IVFIndex, queries: jax.Array, k_out: int,
+                    n_probe: int, interpret: bool = True):
+    """Kernel-backed Alg. 2 over an IVFIndex (no delta / no filters --
+    integration helpers live in core.search which handles those)."""
+    from ..core.search import find_nearest_centroids
+    parts = find_nearest_centroids(index, queries, n_probe)
+    # kernel scans one shared probe list; per-query probe sets use the MQO
+    # mask over the union
+    uniq = parts.reshape(-1)
+    return scan_topk(queries, index.vectors, index.valid, index.ids,
+                     uniq, k_out, metric=index.config.metric,
+                     interpret=interpret)

@@ -1,0 +1,187 @@
+"""Step builders + abstract state for lowering on the production mesh.
+
+One place defines, per (arch x shape x mesh):
+  * the step function   (train_step / prefill_step / serve_step)
+  * abstract inputs     (ShapeDtypeStructs -- no allocation)
+  * in/out shardings    (logical rules -> NamedShardings)
+
+Used by dryrun.py (lower+compile, deliverable e), the roofline pass
+(deliverable g) and the real train/serve launchers.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..configs.inputs import batch_specs, decode_specs
+from ..configs.registry import ArchSpec
+from ..models import decode as decode_lib
+from ..models import sharding as shard_lib
+from ..models import transformer
+from ..models.layers import InitCtx
+from ..train import optim
+
+
+@dataclasses.dataclass
+class Lowerable:
+    """Everything needed to call jit(...).lower(*args)."""
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...] = ()
+    name: str = ""
+    rules: Any = None
+
+
+def rules_for(arch: ArchSpec, mesh: Mesh) -> Dict[str, Any]:
+    multi_pod = "pod" in mesh.axis_names
+    return shard_lib.make_rules(
+        fsdp=arch.fsdp, multi_pod=multi_pod,
+        shard_experts=arch.shard_experts,
+        fsdp_over_pod=arch.fsdp_over_pod,
+        sp=arch.sp)
+
+
+def abstract_params(cfg: ModelConfig):
+    return transformer.init_model(cfg, abstract=True)
+
+
+def abstract_opt_state(params):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return optim.OptState(
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_lowerable(arch: ArchSpec, shape: ShapeConfig, mesh: Mesh,
+                    scan: bool = False, remat: bool = True,
+                    opt_cfg: Optional[optim.AdamWConfig] = None,
+                    microbatches: Optional[int] = None) -> Lowerable:
+    cfg = arch.config
+    rules = rules_for(arch, mesh)
+    params, specs = abstract_params(cfg)
+    p_shard = shard_lib.param_shardings(specs, params, rules, mesh)
+    opt_state = abstract_opt_state(params)
+    o_shard = optim.OptState(mu=p_shard, nu=p_shard,
+                             count=NamedSharding(mesh, P()))
+    batch = batch_specs(cfg, shape)
+    b_shard = shard_lib.batch_shardings(batch, rules, mesh)
+    ocfg = opt_cfg or optim.AdamWConfig()
+    mb = arch.microbatches if microbatches is None else microbatches
+
+    def train_step(params, opt_state, batch):
+        def loss(p, b):
+            return transformer.loss_fn(cfg, p, b, scan=scan, remat=remat)
+        if mb > 1:
+            # unrolled gradient accumulation (python loop, NOT lax.scan:
+            # HLO cost analysis must count every microbatch; the grad
+            # add-chain serialises microbatches so activation buffers are
+            # reused; grad sync collectives still fire once per microbatch
+            # -- the deferred-sync variant is a §Perf iteration)
+            n = shape.global_batch // mb
+            grads, metrics = None, None
+            for i in range(mb):
+                b_i = jax.tree.map(lambda x: x[i * n:(i + 1) * n], batch)
+                (_, metrics), g = jax.value_and_grad(
+                    loss, has_aux=True)(params, b_i)
+                grads = g if grads is None else \
+                    jax.tree.map(jnp.add, grads, g)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+        params, opt_state, om = optim.update(ocfg, grads, opt_state, params)
+        return params, opt_state, {**metrics, **om}
+
+    return Lowerable(
+        fn=train_step,
+        args=(params, opt_state, batch),
+        in_shardings=(p_shard, o_shard, b_shard),
+        donate_argnums=(0, 1),
+        name=f"train:{cfg.name}:{shape.name}",
+        rules=rules)
+
+
+def prefill_lowerable(arch: ArchSpec, shape: ShapeConfig, mesh: Mesh,
+                      scan: bool = False) -> Lowerable:
+    cfg = arch.config
+    rules = rules_for(arch, mesh)
+    params, specs = abstract_params(cfg)
+    p_shard = shard_lib.param_shardings(specs, params, rules, mesh)
+    batch = batch_specs(cfg, shape)
+    b_shard = shard_lib.batch_shardings(batch, rules, mesh)
+
+    def prefill_step(params, batch):
+        logits, _, hidden, _ = transformer.forward(
+            cfg, params, batch, scan=scan, remat=False,
+            last_logits_only=True)
+        return logits[:, 0, :], hidden[:, -1, :]
+
+    return Lowerable(
+        fn=prefill_step,
+        args=(params, batch),
+        in_shardings=(p_shard, b_shard),
+        name=f"prefill:{cfg.name}:{shape.name}",
+        rules=rules)
+
+
+def decode_lowerable(arch: ArchSpec, shape: ShapeConfig, mesh: Mesh,
+                     scan: bool = False) -> Lowerable:
+    cfg = arch.config
+    rules = dict(rules_for(arch, mesh), gather_fsdp=False)
+    params, specs = abstract_params(cfg)
+    p_shard = shard_lib.param_shardings(specs, params, rules, mesh)
+    dspec = decode_specs(cfg, shape)
+    c_shard = shard_lib.cache_shardings(dspec["cache"], rules, mesh, cfg)
+    dp = rules["batch"]
+    import math as _math
+    dp_size = _math.prod(dict(zip(mesh.axis_names,
+                                  mesh.devices.shape))[a] for a in dp)
+    b = shape.global_batch
+    t_spec = (dp if len(dp) > 1 else dp[0]) if b % dp_size == 0 and \
+        b >= dp_size else None
+    t_shard = NamedSharding(mesh, P(t_spec, None))
+    pos_shard = NamedSharding(mesh, P())
+
+    def serve_step(params, cache, token, pos):
+        logits, hidden, new_cache = decode_lib.decode_step(
+            cfg, params, cache, token, pos, scan=scan)
+        return logits, hidden, new_cache
+
+    return Lowerable(
+        fn=serve_step,
+        args=(params, dspec["cache"], dspec["token"], dspec["pos"]),
+        in_shardings=(p_shard, c_shard, t_shard, pos_shard),
+        donate_argnums=(1,),
+        name=f"decode:{cfg.name}:{shape.name}",
+        rules=rules)
+
+
+def build(arch: ArchSpec, shape: ShapeConfig, mesh: Mesh,
+          scan: bool = False, exact_attn: bool = False) -> Lowerable:
+    if shape.kind == "train":
+        lw = train_lowerable(arch, shape, mesh, scan=scan)
+    elif shape.kind == "prefill":
+        lw = prefill_lowerable(arch, shape, mesh, scan=scan)
+    else:
+        lw = decode_lowerable(arch, shape, mesh, scan=scan)
+    if exact_attn:
+        lw.rules = dict(lw.rules, attn_exact=True)
+    return lw
+
+
+def lower(lw: Lowerable, mesh: Mesh):
+    ctx = shard_lib.activation_sharding(mesh, lw.rules) if lw.rules \
+        else contextlib.nullcontext()
+    with mesh, ctx:
+        jitted = jax.jit(lw.fn, in_shardings=lw.in_shardings,
+                         donate_argnums=lw.donate_argnums)
+        return jitted.lower(*lw.args)

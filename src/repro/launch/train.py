@@ -1,0 +1,73 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+        --steps 20 --ckpt-dir /tmp/ckpt
+
+On real hardware the same entrypoint builds the production mesh and
+shards params/optimizer with the arch's rules; on this CPU container use
+--smoke (reduced config, host mesh) -- examples/train_lm.py drives a
+longer end-to-end run with learnable synthetic data.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from ..configs import get_arch
+from ..configs.smoke import smoke_config
+from ..data.tokens import TokenStream
+from ..models import init_model
+from ..train import Trainer, TrainerConfig, optim
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--scan", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    cfg = smoke_config(arch.config) if args.smoke else arch.config
+    if args.smoke:
+        cfg = dataclasses.replace(cfg, scan_layers=args.scan)
+
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    tcfg = TrainerConfig(
+        opt=optim.AdamWConfig(lr=args.lr, warmup_steps=10,
+                              total_steps=args.steps),
+        microbatches=args.microbatches,
+        checkpoint_every=max(10, args.steps // 4),
+        ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, tcfg)
+
+    stream = TokenStream(vocab=cfg.vocab_size, batch=args.batch,
+                         seq=args.seq)
+
+    def data(start):
+        import jax.numpy as jnp
+        for b in stream.iter_from(start):
+            yield {"tokens": jnp.asarray(b["tokens"])}
+
+    params, _ = trainer.fit(params, data, args.steps)
+    first = trainer.history[0]["loss"] if trainer.history else float("nan")
+    last = trainer.history[-1]["loss"] if trainer.history else float("nan")
+    print(f"loss {first:.4f} -> {last:.4f} over {len(trainer.history)} steps"
+          f" (stragglers flagged: {trainer.straggler.flagged})")
+
+
+if __name__ == "__main__":
+    main()

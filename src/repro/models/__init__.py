@@ -1,0 +1,9 @@
+"""Model zoo: composable JAX layers covering all 10 assigned archs."""
+from . import (attention, decode, layers, moe, recurrent, sharding,
+               transformer, xlstm)
+from .transformer import forward, init_model, loss_fn
+from .decode import decode_step, init_cache, prefill
+
+__all__ = ["attention", "decode", "layers", "moe", "recurrent", "sharding",
+           "transformer", "xlstm", "forward", "init_model", "loss_fn",
+           "decode_step", "init_cache", "prefill"]

@@ -1,0 +1,325 @@
+"""Attention: GQA + RoPE + local windows + softcap + cross-attn + KV cache.
+
+One implementation covers the whole zoo:
+  * llama3 / starcoder2 / minitron / phi3.5 / grok / pixtral: causal GQA
+  * gemma2: alternating local/global + attn-logit softcapping
+  * recurrentgemma: local (sliding window) attention layers
+  * whisper: non-causal encoder self-attn + decoder cross-attn
+
+Decode caches are *ring buffers*: a cache of W slots holds the last W
+(rotated) keys/values plus their absolute positions; full attention uses
+W = S_max (ring never wraps), local attention uses W = window -- which is
+what makes recurrentgemma's long_500k cell O(window) instead of O(S).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import InitCtx, apply_rope, module, softcap
+
+NEG_INF = -2.0e38
+
+
+def init_attention(ctx: InitCtx, dim: int, n_q: int, n_kv: int,
+                   head_dim: int, bias: bool = False):
+    d = {
+        "wq": ctx.param((dim, n_q, head_dim), ("embed", "heads", "head_dim")),
+        "wk": ctx.param((dim, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": ctx.param((dim, n_kv, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": ctx.param((n_q, head_dim, dim), ("heads", "head_dim", "embed")),
+    }
+    if bias:
+        d["bq"] = ctx.param((n_q, head_dim), ("heads", "head_dim"), zeros=True)
+        d["bk"] = ctx.param((n_kv, head_dim), ("kv_heads", "head_dim"), zeros=True)
+        d["bv"] = ctx.param((n_kv, head_dim), ("kv_heads", "head_dim"), zeros=True)
+        d["bo"] = ctx.param((dim,), ("embed",), zeros=True)
+    return module(d)
+
+
+def _qkv(p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _expand_kv(x, hq: int):
+    """[B,T,Hkv,hd] -> [B,T,Hq,hd] (GQA group broadcast).
+
+    Keeping scores in [B, Hq, S, T] layout lets the q-head axis carry the
+    model-axis sharding even when kv_heads < mesh size (kv stays
+    replicated -- it is small); see sharding.constrain_scores."""
+    hkv = x.shape[2]
+    if hkv == hq:
+        return x
+    return jnp.repeat(x, hq // hkv, axis=2)
+
+
+def _gqa_scores(q, k, scale, cap):
+    """q: [B,S,Hq,hd], k: [B,T,Hkv,hd] -> [B,Hq,S,T] f32 scores.
+
+    Grouped contraction (no materialised K expansion): the [B,T,Hq,hd]
+    repeat would read 4x the cache bytes at decode."""
+    from .sharding import constrain_scores
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap).reshape(b, hq, s, k.shape[1])
+    return constrain_scores(scores, kv_heads=hkv)
+
+
+def _gqa_out(p, scores, v):
+    """softmaxed scores [B,Hq,S,T], v [B,T,Hkv,hd] -> [B,S,D]."""
+    b, hq, s, t = scores.shape
+    hkv = v.shape[2]
+    g = hq // hkv
+    sg = scores.reshape(b, hkv, g, s, t)
+    ctx = jnp.einsum("bkgst,btkh->bskgh", sg.astype(v.dtype), v)
+    ctx = ctx.reshape(b, s, hq, v.shape[-1])
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# Query-chunk size for the chunked (flash-style) full-sequence path. Each
+# chunk materialises a [B, H, CHUNK, T] score block; the output buffer's
+# dynamic_update_slice chain forces sequential scheduling so XLA reuses
+# one block's buffers across chunks -- peak attention temp drops from
+# O(S^2) to O(CHUNK*S) per layer (e.g. llama3 train_4k: 8.6 GB -> 0.6 GB
+# per device-layer). Chunks are python-unrolled (not lax.scan) so HLO cost
+# analysis counts every chunk -- required by the roofline methodology.
+ATTN_CHUNK = 512
+
+
+# KV-chunk size for the online-softmax (flash-style) accumulation below.
+KV_CHUNK = 2048
+
+
+def _attn_block(p, q, k, v, qpos, kpos, *, scale, cap, causal, window,
+                is_cross):
+    """One q-chunk: q [B,Sc,Hq,hd] vs full k/v [B,T,Hkv,hd] -> [B,Sc,D].
+
+    KV-chunked online softmax: score blocks are [B, Hq, Sc, KV_CHUNK]
+    instead of [B, Hq, Sc, T] -- exact (running max/denominator rescaling,
+    the flash-attention recurrence) and compatible with sequence-parallel
+    q (the T axis is chunked, not the sharded S axis). Chunks are
+    python-unrolled so HLO cost analysis counts every block."""
+    t = k.shape[1]
+    hq = q.shape[2]
+    kx = _expand_kv(k, hq)
+    vx = _expand_kv(v, hq)
+
+    def block_scores(k_blk, kp_blk):
+        s = jnp.einsum("bshk,bthk->bhst", q, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cap)
+        if not is_cross:
+            qp = qpos[:, None, :, None]
+            kp = kp_blk[:, None, None, :]
+            ok = jnp.ones((1, 1) + s.shape[-2:], bool)
+            if causal:
+                ok = ok & (kp <= qp)
+            if window:
+                ok = ok & (qp - kp < window)
+            s = jnp.where(ok, s, NEG_INF)
+        return s
+
+    from .sharding import attn_exact_mode, constrain_scores
+    if t <= KV_CHUNK or t % KV_CHUNK or attn_exact_mode():
+        # exact single-block path: used for short T, and by the dry-run's
+        # depth-1/2 cost probes (compile-only -- no memory is allocated,
+        # and the HLO counts every attention FLOP/byte exactly, which an
+        # inner scan would hide)
+        scores = constrain_scores(block_scores(kx, kpos))
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,bthk->bshk", probs.astype(vx.dtype), vx)
+        return _out_proj(p, ctx)
+
+    # online-softmax over KV chunks via lax.scan: the while-loop body
+    # guarantees ONE chunk's buffers are live at a time. (A python-unrolled
+    # loop chained through optimization_barrier does NOT work: XLA CPU
+    # strips the barriers and schedules all 16 chunk blocks concurrently
+    # -- measured 34 GB live at prefill_32k.)
+    b, sc = q.shape[0], q.shape[1]
+    nc = t // KV_CHUNK
+    hd_v = vx.shape[-1]
+    kxt = jnp.moveaxis(kx.reshape(b, nc, KV_CHUNK, hq, -1), 1, 0)
+    vxt = jnp.moveaxis(vx.reshape(b, nc, KV_CHUNK, hq, hd_v), 1, 0)
+    kpt = jnp.moveaxis(kpos.reshape(b, nc, KV_CHUNK), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_blk, v_blk, kp_blk = inp
+        s = block_scores(k_blk, kp_blk)                 # [B,H,Sc,Tc]
+        m_new = jnp.maximum(m, jnp.maximum(s.max(axis=-1), -1e30))
+        r = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])            # -inf -> 0
+        l = l * r + pexp.sum(axis=-1)
+        blk = jnp.einsum("bhst,bthk->bshk", pexp.astype(v_blk.dtype),
+                         v_blk).astype(jnp.float32)
+        acc = acc * jnp.moveaxis(r, 1, 2)[..., None] + blk
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, hq, sc), -1e30, jnp.float32),
+            jnp.zeros((b, hq, sc), jnp.float32),
+            jnp.zeros((b, sc, hq, hd_v), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kxt, vxt, kpt))
+    ctx = acc / jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+    return _out_proj(p, ctx.astype(vx.dtype))
+
+
+def _out_proj(p, ctx):
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+def attention(
+    p, x, positions, *,
+    theta: float = 1e4,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: float = 0.0,
+    use_rope: bool = True,
+    kv_x: Optional[jax.Array] = None,      # cross-attention source
+    q_scale: Optional[float] = None,
+    chunk: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill). x: [B,S,D]."""
+    if kv_x is None:
+        q, k, v = _qkv(p, x)
+        kv_pos = positions
+    else:  # cross-attn: q from x, k/v from encoder output
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(kv_x.shape[1], dtype=jnp.int32)[None],
+            kv_x.shape[:2])
+    hd = q.shape[-1]
+    if use_rope and kv_x is None:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, kv_pos, theta)
+    scale = q_scale if q_scale is not None else hd ** -0.5
+
+    from .sharding import sp_active
+    b, s, hq, _ = q.shape
+    chunk = chunk or ATTN_CHUNK
+    kw = dict(scale=scale, cap=attn_softcap, causal=causal, window=window,
+              is_cross=kv_x is not None)
+    if s <= chunk or s % chunk or sp_active(s):
+        # under sequence parallelism the scores' S dim is already sharded
+        # 16-way -- one unchunked block is small and avoids cross-shard
+        # slicing
+        return _attn_block(p, q, k, v, positions, kv_pos, **kw)
+
+    d_out = p["wo"].shape[-1]
+    out = jnp.zeros((b, s, d_out), x.dtype)
+    for c0 in range(0, s, chunk):
+        piece = _attn_block(p, q[:, c0:c0 + chunk],
+                            k, v, positions[:, c0:c0 + chunk], kv_pos, **kw)
+        out = jax.lax.dynamic_update_slice(out, piece.astype(out.dtype),
+                                           (0, c0, 0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode with ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVCacheSpec:
+    slots: int          # W: S_max for full attention, window for local
+    n_kv: int
+    head_dim: int
+
+
+def init_kv_cache(batch: int, spec: KVCacheSpec, dtype=jnp.bfloat16,
+                  abstract: bool = False):
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d: jnp.zeros(s, d) if d != jnp.int32
+          else jnp.full(s, -1, d))
+    return {
+        "k": mk((batch, spec.slots, spec.n_kv, spec.head_dim), dtype),
+        "v": mk((batch, spec.slots, spec.n_kv, spec.head_dim), dtype),
+        "pos": mk((batch, spec.slots), jnp.int32),   # -1 = empty slot
+    }
+
+
+def attention_decode(
+    p, x, cache, pos, *,
+    theta: float = 1e4,
+    window: Optional[int] = None,
+    attn_softcap: float = 0.0,
+    use_rope: bool = True,
+    q_scale: Optional[float] = None,
+) -> Tuple[jax.Array, dict]:
+    """One-token decode. x: [B,1,D]; pos: [] int32 (shared across batch).
+
+    Keys are stored rotated at their absolute position; RoPE's relative
+    property makes q.k correct without re-rotation at read time.
+    """
+    b = x.shape[0]
+    w = cache["k"].shape[1]
+    q, k, v = _qkv(p, x)
+    posb = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    if use_rope:
+        q = apply_rope(q, posb, theta)
+        k = apply_rope(k, posb, theta)
+
+    slot = (pos % w).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], posb, (0, slot))
+
+    hd = q.shape[-1]
+    scale = q_scale if q_scale is not None else hd ** -0.5
+    scores = _gqa_scores(q, ck, scale, attn_softcap)   # [B,Hq,1,W]
+    kp = cpos[:, None, None, :]
+    ok = (kp >= 0) & (kp <= pos)
+    if window:
+        ok = ok & (pos - kp < window)
+    scores = jnp.where(ok, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(p, probs, cv)
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def init_cross_cache(enc_kv: Tuple[jax.Array, jax.Array]):
+    """Whisper decoder: precomputed encoder K/V act as a static cache."""
+    return {"k": enc_kv[0], "v": enc_kv[1]}
+
+
+def cross_attention_decode(p, x, cross_cache, q_scale=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    k, v = cross_cache["k"], cross_cache["v"]
+    hd = q.shape[-1]
+    scale = q_scale if q_scale is not None else hd ** -0.5
+    scores = _gqa_scores(q, k, scale, 0.0)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(p, probs, v)
+
+
+def precompute_cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v

@@ -1,0 +1,295 @@
+"""Serving path: KV/state cache init, prefill, single-token decode.
+
+Cache layout mirrors the stacked param layout: cache["p<j>"] has a leading
+stack_count dim per period position, so scan and unrolled execution share
+one representation.
+
+Cache kinds per layer:
+  attn   -> ring KV cache, W = s_max slots
+  local  -> ring KV cache, W = min(window, s_max)  (O(window) for long ctx)
+  xattn  -> ring KV cache + static cross-attn K/V from the encoder
+  rglru  -> h state [B, d_rnn] + conv tail
+  mlstm  -> (C, n, m) matrix-memory state -- O(1) in sequence length
+  slstm  -> (c, n, h, m) scalar state
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_lib
+from . import recurrent as rec_lib
+from . import xlstm as xlstm_lib
+from .layers import apply_norm, mlp, softcap, unembed_logits
+from .transformer import tree_slice, _encode
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, s_max: int,
+                 abstract: bool, dtype=jnp.bfloat16):
+    if kind in ("attn", "xattn"):
+        slots = s_max
+    elif kind == "local":
+        slots = min(cfg.window, s_max)
+    if kind in ("attn", "local", "xattn"):
+        c = attn_lib.init_kv_cache(
+            batch, attn_lib.KVCacheSpec(slots, cfg.num_kv_heads,
+                                        cfg.head_dim),
+            dtype=dtype, abstract=abstract)
+        if kind == "xattn":
+            shape = (batch, cfg.enc_seq, cfg.num_kv_heads, cfg.head_dim)
+            mk = (lambda: jax.ShapeDtypeStruct(shape, dtype)) if abstract \
+                else (lambda: jnp.zeros(shape, dtype))
+            c["xk"], c["xv"] = mk(), mk()
+        return c
+    if kind == "rglru":
+        return rec_lib.init_rglru_state(batch, cfg.d_rnn or cfg.d_model,
+                                        cfg.conv_width, abstract=abstract)
+    if kind == "mlstm":
+        return xlstm_lib.init_mlstm_state(batch, cfg.d_model, cfg.num_heads,
+                                          cfg.mlstm_proj_factor,
+                                          abstract=abstract)
+    if kind == "slstm":
+        return xlstm_lib.init_slstm_state(batch, cfg.d_model, cfg.num_heads,
+                                          abstract=abstract)
+    raise ValueError(kind)
+
+
+def _stack_tree(tree, count: int, abstract: bool):
+    if abstract:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((count,) + s.shape, s.dtype), tree)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), tree)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               abstract: bool = False, dtype=jnp.bfloat16):
+    cache: Dict[str, Any] = {}
+    for j, kind in enumerate(cfg.stack_period):
+        one = _layer_cache(cfg, kind, batch, s_max, abstract, dtype)
+        cache[f"p{j}"] = _stack_tree(one, cfg.stack_count, abstract)
+    for j, kind in enumerate(cfg.tail_kinds):
+        cache[f"t{j}"] = _layer_cache(cfg, kind, batch, s_max, abstract,
+                                      dtype)
+    return cache
+
+
+def decode_layer(cfg: ModelConfig, kind: str, p, x, cache, pos):
+    """x: [B,1,D] -> (x, new_cache)."""
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if kind in ("attn", "local", "xattn"):
+        kv = {k: cache[k] for k in ("k", "v", "pos")}
+        core, kv = attn_lib.attention_decode(
+            p["attn"], h, kv, pos,
+            theta=cfg.rope_theta,
+            window=cfg.window if kind == "local" else None,
+            attn_softcap=cfg.attn_softcap,
+            use_rope=cfg.pos_kind == "rope",
+            q_scale=cfg.q_scale)
+        new_cache = dict(cache, **kv)
+    elif kind == "rglru":
+        core, new_cache = rec_lib.rglru_decode(p["rnn"], h, cache)
+    elif kind == "mlstm":
+        core, new_cache = xlstm_lib.mlstm_decode(p["cell"], h, cache)
+    elif kind == "slstm":
+        core, new_cache = xlstm_lib.slstm_decode(p["cell"], h, cache,
+                                                 cfg.num_heads)
+    if cfg.post_norm:
+        core = apply_norm(cfg.norm, p["norm1_post"], core)
+    x = x + core
+
+    if kind == "xattn":
+        hx = apply_norm(cfg.norm, p["normx"], x)
+        x = x + attn_lib.cross_attention_decode(
+            p["cross"], hx, {"k": cache["xk"], "v": cache["xv"]})
+
+    if "norm2" in p:
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        if cfg.n_experts and "moe" in p:
+            from . import moe as moe_lib
+            ff, _ = moe_lib.moe(p["moe"], h2, top_k=cfg.top_k,
+                                capacity_factor=cfg.capacity_factor,
+                                act=cfg.mlp_act)
+        else:
+            ff = mlp(p["mlp"], h2, cfg.mlp_act)
+        if cfg.post_norm:
+            ff = apply_norm(cfg.norm, p["norm2_post"], ff)
+        x = x + ff
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos,
+                scan: Optional[bool] = None):
+    """One decode step. token: [B,1] int32, pos: [] int32.
+
+    -> (logits [B,V], hidden [B,D] (RAG query vector), new cache)
+    """
+    scan = cfg.scan_layers if scan is None else scan
+    emb = params["embed"]["table"]
+    x = emb[token]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.pos_kind == "learned":
+        x = x + params["pos_emb"]["table"][pos][None, None].astype(x.dtype)
+
+    kinds = cfg.stack_period
+    body_cache = {k: v for k, v in cache.items() if k.startswith("p")}
+
+    def period_body(x, period_params, period_cache):
+        new_cache = {}
+        for j, kind in enumerate(kinds):
+            x, new_cache[f"p{j}"] = decode_layer(
+                cfg, kind, period_params[f"p{j}"], x, period_cache[f"p{j}"],
+                pos)
+        return x, new_cache
+
+    if scan and cfg.stack_count > 1:
+        def body(x, pc):
+            pp, pcache = pc
+            x, nc = period_body(x, pp, pcache)
+            return x, nc
+        x, new_cache = jax.lax.scan(body, x, (params["stack"], body_cache))
+    else:
+        ncs = []
+        for r in range(cfg.stack_count):
+            x, nc = period_body(x, tree_slice(params["stack"], r),
+                                tree_slice(body_cache, r))
+            ncs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    for j, kind in enumerate(cfg.tail_kinds):
+        x, new_cache[f"t{j}"] = decode_layer(
+            cfg, kind, params["tail"][f"t{j}"], x, cache[f"t{j}"], pos)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    hidden = x[:, 0, :]
+    if cfg.tie_embeddings:
+        logits = unembed_logits(params["embed"], x)
+    else:
+        logits = x @ params["unembed"]["w"]
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits[:, 0, :], hidden, new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, s_max: int,
+            scan: Optional[bool] = None):
+    """Run the full prompt, producing a primed cache + last-position logits.
+
+    Implemented as full-sequence forward (efficient, parallel) followed by
+    cache construction from the per-layer K/V -- for attention layers we
+    recompute K/V into the ring layout; recurrent layers replay their
+    final state. For simplicity and static shapes the prompt must be
+    <= s_max.
+    """
+    from .transformer import forward  # local import to avoid cycle
+    logits, _, hidden, _ = forward(cfg, params, batch, scan=scan,
+                                   remat=False)
+    # Prefill cache fill: run decode_layer over positions via scan per
+    # layer would be O(S) sequential; instead attention caches are filled
+    # directly from projected K/V of the parallel forward.
+    cache = fill_cache_from_forward(cfg, params, batch, s_max)
+    return logits[:, -1, :], hidden[:, -1, :], cache
+
+
+def fill_cache_from_forward(cfg: ModelConfig, params, batch, s_max: int):
+    """Project K/V for every attention layer in parallel and scatter into
+    ring caches; recompute recurrent final states with their parallel
+    forms. Exactness is validated against step-by-step decode in tests."""
+    from .transformer import embed_inputs, apply_layer
+    x, positions, enc_out, _ = embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    kinds = cfg.stack_period
+    cache = init_cache(cfg, b, s_max, abstract=False,
+                       dtype=x.dtype)
+
+    new_cache = {f"p{j}": [] for j in range(len(kinds))}
+    for r in range(cfg.stack_count):
+        for j, kind in enumerate(kinds):
+            p = tree_slice(params["stack"][f"p{j}"], r)
+            layer_cache = tree_slice(cache[f"p{j}"], r)
+            new_cache[f"p{j}"].append(_fill_one(
+                cfg, kind, p, layer_cache, x, positions, enc_out))
+            x, _ = apply_layer(cfg, kind, p, x, positions, enc_out)
+    out = {k: jax.tree.map(lambda *xs: jnp.stack(xs), *v)
+           for k, v in new_cache.items()}
+    for j, kind in enumerate(cfg.tail_kinds):
+        p = params["tail"][f"t{j}"]
+        out[f"t{j}"] = _fill_one(cfg, kind, p, cache[f"t{j}"], x,
+                                 positions, enc_out)
+        x, _ = apply_layer(cfg, kind, p, x, positions, enc_out)
+    return out
+
+
+def _write_ring(kv_cache, k, v, pos_vec, b, s):
+    w = kv_cache["k"].shape[1]
+    keep = s if s <= w else w
+    slots = (pos_vec[-keep:] % w)
+    ck = kv_cache["k"].at[:, slots].set(k[:, -keep:].astype(
+        kv_cache["k"].dtype))
+    cv = kv_cache["v"].at[:, slots].set(v[:, -keep:].astype(
+        kv_cache["v"].dtype))
+    cp = kv_cache["pos"].at[:, slots].set(
+        jnp.broadcast_to(pos_vec[None, -keep:], (b, keep)))
+    return dict(kv_cache, k=ck, v=cv, pos=cp)
+
+
+def _fill_one(cfg, kind, p, layer_cache, x, positions, enc_out):
+    """Fill one layer's decode cache from the parallel-forward inputs."""
+    b, s, _ = x.shape
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if kind in ("attn", "local", "xattn"):
+        k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"])
+        if "bk" in p["attn"]:
+            k, v = k + p["attn"]["bk"], v + p["attn"]["bv"]
+        if cfg.pos_kind == "rope":
+            k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+        layer_cache = _write_ring(layer_cache, k, v, positions[0], b, s)
+        if kind == "xattn":
+            xk, xv = attn_lib.precompute_cross_kv(p["cross"], enc_out)
+            layer_cache["xk"] = xk.astype(layer_cache["xk"].dtype)
+            layer_cache["xv"] = xv.astype(layer_cache["xv"].dtype)
+        return layer_cache
+    if kind == "rglru":
+        return _rglru_final_state(p["rnn"], h)
+    if kind == "mlstm":
+        return _mlstm_final_state(p["cell"], h, cfg)
+    wx = {g: h @ p["cell"][f"w_{g}"] for g in "zifo"}
+    _, state = xlstm_lib._slstm_scan(
+        p["cell"], wx, cfg.num_heads,
+        xlstm_lib.init_slstm_state(b, cfg.d_model, cfg.num_heads))
+    return state
+
+
+def _rglru_final_state(p, x):
+    b = x.shape[0]
+    u = rec_lib._conv_full(p, x @ p["wx"])
+    a, bb = rec_lib._gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    aa, hh = jax.lax.associative_scan(combine, (a, bb), axis=1)
+    raw = x @ p["wx"]
+    w = p["conv_w"].shape[0]
+    conv_tail = jnp.pad(raw.astype(jnp.float32),
+                        ((0, 0), (w - 1, 0), (0, 0)))[:, -(w - 1):, :] \
+        if raw.shape[1] >= 1 else jnp.zeros((b, w - 1, raw.shape[-1]))
+    return {"h": hh[:, -1, :], "conv": conv_tail}
+
+
+def _mlstm_final_state(p, x, cfg: ModelConfig):
+    u, q, k, v, log_i, log_f, gate = xlstm_lib._mlstm_qkvif(p, x)
+    hd = q.shape[-1]
+    F = jnp.cumsum(log_f, axis=1)
+    w_src = F[:, -1:, :] - F + log_i                    # [B,S,H]
+    m = jnp.max(w_src, axis=1)                          # [B,H]
+    w = jnp.exp(w_src - m[:, None, :])
+    kf = k.astype(jnp.float32) * (hd ** -0.5)
+    C = jnp.einsum("bsh,bshk,bshv->bhkv", w, kf, v.astype(jnp.float32))
+    n = jnp.einsum("bsh,bshk->bhk", w, kf)
+    return {"C": C, "n": n, "m": m}

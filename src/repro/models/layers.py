@@ -1,0 +1,201 @@
+"""Minimal functional module system + common layers.
+
+Design (MaxText-style, no flax):
+  * a module is an `init_*(ctx, ...) -> (params, specs)` pair of pytrees --
+    `params` holds arrays (or ShapeDtypeStructs in abstract mode, used by
+    the dry-run so no host memory is ever allocated for 314B-param models),
+    `specs` holds *logical* axis-name tuples per leaf;
+  * `apply_*` functions are pure;
+  * logical axes map to mesh axes through per-arch sharding rules
+    (models/sharding.py), giving DP/FSDP/TP/EP without touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class InitCtx:
+    """Carries RNG + dtype; abstract=True yields ShapeDtypeStructs."""
+    key: Optional[jax.Array]
+    param_dtype: Any = jnp.bfloat16
+    abstract: bool = False
+
+    def split(self) -> "InitCtx":
+        if self.abstract:
+            return InitCtx(None, self.param_dtype, True)
+        self.key, sub = jax.random.split(self.key)
+        return InitCtx(sub, self.param_dtype, False)
+
+    def param(self, shape: Sequence[int], axes: Tuple[Optional[str], ...],
+              scale: Optional[float] = None, zeros: bool = False,
+              ones: bool = False, dtype: Any = None):
+        dtype = dtype or self.param_dtype
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), dtype), axes
+        sub = self.split().key
+        if zeros:
+            v = jnp.zeros(shape, dtype)
+        elif ones:
+            v = jnp.ones(shape, dtype)
+        else:
+            if scale is None:
+                fan_in = shape[0] if len(shape) else 1
+                scale = 1.0 / np.sqrt(max(1, fan_in))
+            v = (jax.random.truncated_normal(sub, -2.0, 2.0, tuple(shape),
+                                             jnp.float32) * scale).astype(dtype)
+        return v, axes
+
+
+def module(d: dict) -> Tuple[dict, dict]:
+    """Split a dict of (leaf, axes) / (sub_params, sub_specs) into trees."""
+    params, specs = {}, {}
+    for k, v in d.items():
+        if isinstance(v, tuple) and len(v) == 2 and isinstance(v[1], tuple) \
+                and all(isinstance(a, (str, type(None))) for a in v[1]):
+            params[k], specs[k] = v
+        else:  # nested (params, specs) pair
+            params[k], specs[k] = v
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(ctx: InitCtx, dim: int):
+    return module({"scale": ctx.param((dim,), ("embed",), ones=True,
+                                      dtype=jnp.float32)})
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * p["scale"]).astype(dt)
+
+
+def init_layernorm(ctx: InitCtx, dim: int):
+    return module({
+        "scale": ctx.param((dim,), ("embed",), ones=True, dtype=jnp.float32),
+        "bias": ctx.param((dim,), ("embed",), zeros=True, dtype=jnp.float32),
+    })
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * p["scale"]
+            + p["bias"]).astype(dt)
+
+
+def apply_norm(kind: str, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def init_norm(ctx: InitCtx, kind: str, dim: int):
+    return init_rmsnorm(ctx, dim) if kind == "rmsnorm" \
+        else init_layernorm(ctx, dim)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(ctx: InitCtx, vocab: int, dim: int):
+    return module({"table": ctx.param((vocab, dim), ("vocab", "embed"),
+                                      scale=1.0)})
+
+
+def embed(p, tokens, dim: int):
+    # scale by sqrt(dim) as gemma/whisper do not; keep plain lookup, models
+    # that need scaling do it at the call site.
+    return p["table"][tokens]
+
+
+def unembed_logits(p, x):
+    """Tied unembedding: [.., D] @ [V, D]^T -> [.., V]."""
+    return jnp.einsum("...d,vd->...v", x, p["table"])
+
+
+def init_unembed(ctx: InitCtx, vocab: int, dim: int):
+    return module({"w": ctx.param((dim, vocab), ("embed", "vocab"))})
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+def init_dense(ctx: InitCtx, d_in: int, d_out: int,
+               axes=("embed", "ff"), bias: bool = False):
+    d = {"w": ctx.param((d_in, d_out), axes)}
+    if bias:
+        d["b"] = ctx.param((d_out,), (axes[1],), zeros=True)
+    return module(d)
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_mlp(ctx: InitCtx, dim: int, d_ff: int, act: str, bias: bool = False):
+    """act: silu_glu (llama) | gelu_glu (gemma) | gelu (gpt/whisper)."""
+    mods = {
+        "wi": init_dense(ctx, dim, d_ff, ("embed", "ff"), bias=bias),
+        "wo": init_dense(ctx, d_ff, dim, ("ff", "embed"), bias=bias),
+    }
+    if act.endswith("_glu"):
+        mods["wg"] = init_dense(ctx, dim, d_ff, ("embed", "ff"), bias=bias)
+    return module(mods)
+
+
+def mlp(p, x, act: str):
+    h = dense(p["wi"], x)
+    if act == "silu_glu":
+        h = jax.nn.silu(dense(p["wg"], x)) * h
+    elif act == "gelu_glu":
+        h = jax.nn.gelu(dense(p["wg"], x)) * h
+    elif act == "relu2":  # nemotron/minitron squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return dense(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] absolute token positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap and cap > 0:
+        return cap * jnp.tanh(x.astype(jnp.float32) / cap)
+    return x

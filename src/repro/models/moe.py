@@ -1,0 +1,125 @@
+"""Token-choice top-k Mixture-of-Experts (phi3.5-moe: 16e top-2;
+grok-1: 8e top-2).
+
+Sort-based capacity dispatch, vmapped per batch row:
+  * routing/sort/gather stay *local* to the data shard (no global sort
+    collectives -- the batch dim is sharded over `data`);
+  * each expert processes a fixed capacity C = S*k/E * capacity_factor
+    per row (static shapes, TPU requirement); overflow tokens drop, which
+    the aux load-balancing loss actively discourages;
+  * expert FLOPs are E*C*D*F ~ *active* params -- unlike a dense
+    all-experts formulation (E/k x waste) or GShard one-hot dispatch
+    einsums (~2x waste in pure dispatch matmuls), keeping the
+    MODEL_FLOPS/HLO_FLOPS roofline ratio honest.
+
+Expert weights carry the "experts" logical axis -> expert parallelism when
+the arch's sharding rules map it to a mesh axis (phi3.5: 16 experts over a
+16-way model axis); grok-1 (E=8) shards "ff" inside each expert instead.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import InitCtx, module
+
+
+def init_moe(ctx: InitCtx, dim: int, d_ff: int, n_experts: int,
+             act: str = "silu_glu"):
+    d = {
+        "router": ctx.param((dim, n_experts), ("embed", "experts"),
+                            dtype=jnp.float32),
+        "wi": ctx.param((n_experts, dim, d_ff), ("experts", "embed", "ff")),
+        "wo": ctx.param((n_experts, d_ff, dim), ("experts", "ff", "embed")),
+    }
+    if act.endswith("_glu"):
+        d["wg"] = ctx.param((n_experts, dim, d_ff), ("experts", "embed", "ff"))
+    return module(d)
+
+
+def _dispatch_row(xt, router, top_k: int, cap: int):
+    """xt: [S, D] -> (xe [E*C, D], slot, keep, gates, tok_of, aux)."""
+    s, d = xt.shape
+    e = router.shape[1]
+    logits = xt.astype(jnp.float32) @ router                  # [S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)         # [S, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balance loss over this row
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = gate_idx.reshape(-1)                             # [S*k]
+    tok_of = jnp.tile(jnp.arange(s)[:, None], (1, top_k)).reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st = flat_e[order], tok_of[order]
+    counts = jnp.bincount(flat_e, length=e)
+    offsets = jnp.cumsum(counts) - counts                     # exclusive
+    idx_in_e = jnp.arange(s * top_k) - offsets[se]
+    keep = idx_in_e < cap
+    slot = jnp.clip(se * cap + idx_in_e, 0, e * cap - 1)
+
+    gates = gate_vals.reshape(-1)[order] * keep
+    xg = jnp.where(keep[:, None], xt[st], 0.0)
+    xe = jnp.zeros((e * cap, d), xt.dtype).at[slot].add(xg)
+    return xe, slot, keep, gates.astype(jnp.float32), st, aux
+
+
+def _combine_row(ye_flat, slot, keep, gates, st, s: int):
+    """ye_flat: [E*C, D] -> y [S, D]."""
+    d = ye_flat.shape[-1]
+    contrib = ye_flat[slot] * (gates * keep)[:, None].astype(ye_flat.dtype)
+    return jnp.zeros((s, d), ye_flat.dtype).at[st].add(contrib)
+
+
+def moe(p, x, *, top_k: int = 2, capacity_factor: float = 1.25,
+        act: str = "silu_glu") -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    Routing groups: under sequence parallelism the S axis is sharded over
+    `model`, so tokens are grouped per SP shard (GShard's groups) -- the
+    sort/gather/scatter of dispatch runs entirely shard-local, and the
+    only cross-device movement is the dispatch-tensor reshard at the
+    expert boundary (an all-to-all pair when E divides the model axis).
+    Without grouping, XLA partitions the dispatch gather over the sharded
+    S axis and emits ~2 GB all-reduces per layer (measured; see
+    EXPERIMENTS.md §Perf)."""
+    from .sharding import moe_group_count, constrain_moe, gather_fsdp
+    p = dict(p)
+    for w in ("wi", "wo", "wg"):
+        if w in p:
+            axes = ("experts", "embed", "ff") if w != "wo" \
+                else ("experts", "ff", "embed")
+            p[w] = gather_fsdp(p[w], axes)
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    g = moe_group_count(s)
+    s_loc = s // g
+    cap = int(max(1, round(s_loc * top_k / e * capacity_factor)))
+
+    xg4 = x.reshape(b, g, s_loc, d)
+    dispatch = jax.vmap(jax.vmap(
+        lambda row: _dispatch_row(row, p["router"], top_k, cap)))
+    xe, slot, keep, gates, st, aux = dispatch(xg4)
+    xe = constrain_moe(xe.reshape(b, g, e, cap, d), "group")  # local pin
+    xe = constrain_moe(xe, "expert")                          # a2a in
+
+    h = jnp.einsum("bgecd,edf->bgecf", xe, p["wi"])
+    if "wg" in p:
+        hg = jnp.einsum("bgecd,edf->bgecf", xe, p["wg"])
+        h = (jax.nn.silu(hg) * h) if act == "silu_glu" \
+            else (jax.nn.gelu(hg) * h)
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("bgecf,efd->bgecd", h, p["wo"])           # [B,G,E,C,D]
+    ye = constrain_moe(ye, "expert")
+    ye = constrain_moe(ye, "group")                           # a2a out
+
+    combine = jax.vmap(jax.vmap(_combine_row, in_axes=(0, 0, 0, 0, 0, None)),
+                       in_axes=(0, 0, 0, 0, 0, None))
+    y = combine(ye.reshape(b, g, e * cap, d), slot, keep, gates, st, s_loc)
+    return y.reshape(b, s, d), jnp.mean(aux)

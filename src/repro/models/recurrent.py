@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma).
+
+Block: x -> [gate branch: GeLU(W_y x)] ⊙ [main: W_x x -> causal depthwise
+conv1d(w=4) -> RG-LRU] -> W_o -> out.
+
+RG-LRU (Real-Gated Linear Recurrent Unit):
+    r_t = sigmoid(W_a u_t + b_a)                  (recurrence gate)
+    i_t = sigmoid(W_i u_t + b_i)                  (input gate)
+    log a_t = -c * softplus(Lambda) * r_t         (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ u_t)
+
+Train/prefill uses `jax.lax.associative_scan` (log-depth, fully counted by
+HLO cost analysis -- unlike `lax.scan` whose while-body is counted once);
+decode is a single fused step with O(D_rnn) state. This O(1)-in-seq state
+(+ the window-sized local-attention ring caches) is what makes the
+long_500k cell runnable for this arch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import InitCtx, module
+
+RGLRU_C = 8.0
+
+
+def init_rglru_block(ctx: InitCtx, dim: int, d_rnn: int, conv_width: int = 4):
+    return module({
+        "wy": ctx.param((dim, d_rnn), ("embed", "rnn")),      # gate branch
+        "wx": ctx.param((dim, d_rnn), ("embed", "rnn")),      # main branch
+        "conv_w": ctx.param((conv_width, d_rnn), (None, "rnn"),
+                            scale=1.0 / conv_width),
+        "conv_b": ctx.param((d_rnn,), ("rnn",), zeros=True),
+        "wa": ctx.param((d_rnn, d_rnn), ("rnn", "rnn_out")),  # recurrence gate
+        "ba": ctx.param((d_rnn,), ("rnn",), zeros=True),
+        "wi": ctx.param((d_rnn, d_rnn), ("rnn", "rnn_out")),  # input gate
+        "bi": ctx.param((d_rnn,), ("rnn",), zeros=True),
+        "lam": ctx.param((d_rnn,), ("rnn",), scale=1.0, dtype=jnp.float32),
+        "wo": ctx.param((d_rnn, dim), ("rnn", "embed")),
+    })
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(u @ p["wi"] + p["bi"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
+        * (i * u).astype(jnp.float32)
+    return a, b
+
+
+def _conv_full(p, u):
+    """Causal depthwise conv over [B, S, D_rnn]."""
+    w = p["conv_w"]
+    width = w.shape[0]
+    out = jnp.zeros_like(u)
+    for j in range(width):
+        shifted = jnp.pad(u, ((0, 0), (width - 1 - j, 0), (0, 0)))[
+            :, :u.shape[1], :]
+        out = out + shifted * w[j]
+    return out + p["conv_b"]
+
+
+def rglru_block(p, x) -> jax.Array:
+    """Full-sequence forward. x: [B, S, D] -> [B, S, D].
+
+    RNN-state activations shard on the *feature* dim (the time scan is
+    elementwise in R, so the associative scan stays device-local)."""
+    from .sharding import constrain_feature
+    y = jax.nn.gelu(x @ p["wy"])
+    u = constrain_feature(_conv_full(p, x @ p["wx"]))
+    a, b = _gates(p, u)
+    a, b = constrain_feature(a), constrain_feature(b)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return ((y.astype(jnp.float32) * h).astype(x.dtype) @ p["wo"])
+
+
+def init_rglru_state(batch: int, d_rnn: int, conv_width: int = 4,
+                     abstract: bool = False):
+    mk = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract \
+        else (lambda s: jnp.zeros(s, jnp.float32))
+    return {"h": mk((batch, d_rnn)),
+            "conv": mk((batch, conv_width - 1, d_rnn))}
+
+
+def rglru_decode(p, x, state) -> Tuple[jax.Array, dict]:
+    """One-token step. x: [B, 1, D] -> ([B, 1, D], new state)."""
+    y = jax.nn.gelu(x @ p["wy"])                      # [B, 1, R]
+    u_raw = (x @ p["wx"])[:, 0, :].astype(jnp.float32)  # [B, R]
+    w = p["conv_w"]
+    width = w.shape[0]
+    hist = jnp.concatenate([state["conv"], u_raw[:, None, :]], axis=1)
+    u = jnp.einsum("bwr,wr->br", hist, w.astype(hist.dtype)) + p["conv_b"]
+    a, b = _gates(p, u)
+    h = a * state["h"] + b
+    out = (y[:, 0, :].astype(jnp.float32) * h).astype(x.dtype) @ p["wo"]
+    return out[:, None, :], {"h": h, "conv": hist[:, 1:, :]}

@@ -1,0 +1,391 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Parameters carry logical axis names ("embed", "ff", "heads", "experts",
+...); a rule set maps them onto the physical mesh ("data", "model" and the
+multi-pod "pod" axis). Divisibility is checked per-leaf: an axis whose dim
+doesn't divide by the mapped mesh size falls back to replication (e.g.
+kv_heads=8 on a 16-way model axis), keeping every arch lowerable on every
+mesh without per-arch special cases.
+
+Parallelism coverage:
+  DP    batch over ("pod","data")
+  FSDP  "embed" (and friends) over "data" -- ZeRO-style param+opt sharding
+  TP    "ff"/"heads"/"vocab" over "model"
+  EP    "experts" over "model" (phi3.5: 16e on 16-way axis)
+  SP    decode KV-cache *sequence* over "model" when heads don't divide --
+        flash-decoding-style partial-softmax with XLA-inserted reductions
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+def make_rules(*, fsdp: bool = False, multi_pod: bool = False,
+               shard_experts: bool = True,
+               fsdp_over_pod: bool = False,
+               sp: bool = True) -> Dict[str, Axis]:
+    dp: Axis = ("pod", "data") if multi_pod else ("data",)
+    fsdp_ax: Axis = None
+    if fsdp:
+        fsdp_ax = ("pod", "data") if (fsdp_over_pod and multi_pod) \
+            else ("data",)
+    return {
+        "batch": dp,
+        "vocab": "model",
+        "embed": fsdp_ax,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model" if shard_experts else None,
+        "rnn": "model",
+        "rnn_out": None,
+        "layers": None,
+        # sequence parallelism: residual-stream S dim over `model`.
+        # Without this, activations replicate 16x over the model axis and
+        # per-layer remat checkpoints alone blow the HBM budget (measured:
+        # llama3 train_4k 57 GB/device -> see EXPERIMENTS.md §Perf).
+        "act_seq": "model" if sp else None,
+        None: None,
+    }
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...],
+                     shape: Tuple[int, ...],
+                     rules: Dict[str, Axis], mesh: Mesh) -> P:
+    used = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        phys = rules.get(ax)
+        if phys is None:
+            out.append(None)
+            continue
+        cand = phys if isinstance(phys, tuple) else (phys,)
+        cand = tuple(p for p in cand if p not in used)
+        size = math.prod(_axis_size(mesh, p) for p in cand) if cand else 1
+        if cand and dim % size == 0:
+            out.append(cand if len(cand) > 1 else cand[0])
+            used.update(cand)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+
+def param_shardings(specs_tree, params_tree, rules: Dict[str, Axis],
+                    mesh: Mesh):
+    """-> pytree of NamedSharding matching params_tree."""
+    flat_specs = jax.tree.leaves(specs_tree, is_leaf=_is_axes)
+    flat_params, treedef = jax.tree.flatten(params_tree)
+    assert len(flat_specs) == len(flat_params), \
+        (len(flat_specs), len(flat_params))
+    out = [NamedSharding(mesh, logical_to_pspec(ax, p.shape, rules, mesh))
+           for ax, p in zip(flat_specs, flat_params)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_tree, rules, mesh):
+    dp = rules["batch"]
+    dp_size = math.prod(
+        _axis_size(mesh, a) for a in (dp if isinstance(dp, tuple) else (dp,)))
+
+    def spec(leaf):
+        b = dp if leaf.shape and leaf.shape[0] % dp_size == 0 and \
+            leaf.shape[0] >= dp_size else None
+        rest = (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(b, *rest) if leaf.shape
+                             else P())
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_shardings(cache_tree, rules, mesh, cfg):
+    """Leaf-shape-driven cache sharding (see module docstring, SP item).
+
+    Handles both stacked ("p<j>", leading stack dim) and tail ("t<j>",
+    no stack dim) cache entries; every axis assignment is divisibility-
+    checked (batch=1 cells like long_500k fall back to replication).
+    """
+    dp = rules["batch"]
+    model = "model"
+    msize = _axis_size(mesh, model)
+    dp_size = math.prod(
+        _axis_size(mesh, a) for a in (dp if isinstance(dp, tuple) else (dp,)))
+
+    def div(dim, ax, size):
+        return ax if dim % size == 0 and dim >= size else None
+
+    def spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        stacked = top.startswith("p")
+        shp = leaf.shape[1:] if stacked else leaf.shape
+        prefix = (None,) if stacked else ()
+
+        b = shp[0]
+        bspec = div(b, dp, dp_size)
+        if name in ("k", "v", "xk", "xv"):
+            _, w, kv, hd = shp
+            if kv % msize == 0:
+                rest = (None, model, None)
+            elif w % msize == 0:
+                rest = (model, None, None)
+            else:
+                rest = (None, None, None)
+            return NamedSharding(mesh, P(*prefix, bspec, *rest))
+        if name == "pos":
+            _, w = shp
+            kvh = cfg.num_kv_heads
+            if kvh % msize != 0 and w % msize == 0:
+                return NamedSharding(mesh, P(*prefix, bspec, model))
+            return NamedSharding(mesh, P(*prefix, bspec))
+        # recurrent states: shard the widest trailing dim if divisible
+        rest = []
+        used_model = False
+        for d in shp[1:]:
+            ax = div(d, model, msize)
+            if not used_model and ax is not None:
+                rest.append(ax)
+                used_model = True
+            else:
+                rest.append(None)
+        return NamedSharding(mesh, P(*prefix, bspec, *rest))
+
+    return jax.tree.map_with_path(spec, cache_tree)
+
+
+def constrain(x, rules, mesh, *axes):
+    shape = x.shape
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, logical_to_pspec(axes, shape, rules, mesh)))
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (attention score tensors)
+# ---------------------------------------------------------------------------
+# The [B, H, S, T] attention score tensor dominates training HBM. We pin
+# its sharding explicitly: heads over `model` when divisible, else the
+# q-seq axis (sequence parallelism) -- without this, XLA can leave scores
+# replicated over `model` (e.g. minitron's 24 heads on a 16-way axis) and
+# the step needs ~20x more temp memory than HBM has.
+import contextlib
+import threading
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Dict[str, Axis]):
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def attn_exact_mode() -> bool:
+    """True when the cost probes want the exact single-block attention
+    (compile-only; see attention._attn_block)."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return False
+    _, rules = ctx
+    return bool(rules.get("attn_exact", False))
+
+
+def sp_active(seq_len: Optional[int] = None) -> bool:
+    """True when sequence-parallel residuals are in effect (and divisible)."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return False
+    mesh, rules = ctx
+    if rules.get("act_seq") is None:
+        return False
+    if seq_len is not None and seq_len % _axis_size(mesh, "model"):
+        return False
+    return True
+
+
+def constrain_residual(x):
+    """Residual stream [B, S, D]: shard S over model under SP rules."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None or x.ndim != 3:
+        return x
+    mesh, rules = ctx
+    ax = rules.get("act_seq")
+    if ax is None or x.shape[1] % _axis_size(mesh, "model") or \
+            x.shape[1] < _axis_size(mesh, "model"):
+        return x
+    dp = rules["batch"]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, ax, None)))
+
+
+def constrain_feature(x):
+    """RNN-state activations [B, S, R]: shard the feature dim over model
+    (the scan over S is elementwise in R, so it stays fully local)."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None or x.ndim != 3:
+        return x
+    mesh, rules = ctx
+    if x.shape[2] % _axis_size(mesh, "model"):
+        return x
+    dp = rules["batch"]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, "model")))
+
+
+def moe_group_count(seq_len: int) -> int:
+    """Routing groups for MoE dispatch: one group per SP shard of the
+    sequence (1 when SP is off / indivisible)."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return 1
+    mesh, rules = ctx
+    m = _axis_size(mesh, "model")
+    if rules.get("act_seq") is None or seq_len % m or seq_len < m:
+        return 1
+    return m
+
+
+def constrain_moe(x, phase: str):
+    """MoE dispatch/combine tensors [B, G, E, C, D].
+
+    phase="group":  pin G to the model axis -- routing stays local to the
+                    SP shard that owns those tokens;
+    phase="expert": pin E to the model axis (expert parallelism) -- the
+                    group->expert reshard is the canonical MoE all-to-all.
+    Archs whose E doesn't divide the axis (grok-1: E=8 on 16) skip the
+    expert pin; the expert FFN dim is model-sharded instead, and the
+    group pin alone keeps dispatch local."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None or x.ndim != 5:
+        return x
+    mesh, rules = ctx
+    dp = rules["batch"]
+    m = _axis_size(mesh, "model")
+    b, g, e, c, d = x.shape
+    if phase == "group":
+        if g % m == 0 and g >= m:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, "model", None, None, None)))
+        return x
+    if rules.get("experts") is None or e % m:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, "model", None, None)))
+
+
+def gather_fsdp(w, axes: Tuple[Optional[str], ...]):
+    """ZeRO semantics at point-of-use: all-gather the FSDP ('embed'->data)
+    shard of a weight, keeping its TP/EP axes. Without this pin XLA can
+    choose to keep the contraction dim sharded and all-reduce the *much
+    larger activation* instead (measured on grok-1: 6.2 TB/step of
+    all-reduce -> see EXPERIMENTS.md §Perf)."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return w
+    mesh, rules = ctx
+    if rules.get("embed") is None or not rules.get("gather_fsdp", True):
+        # decode: activations are tiny, so partial-sum + small psum beats
+        # gathering GB-scale expert weights every layer
+        return w
+    rules2 = dict(rules)
+    rules2["embed"] = None
+    spec = logical_to_pspec(axes, w.shape, rules2, mesh)
+    return jax.lax.with_sharding_constraint(w, NamedSharding(mesh, spec))
+
+
+def constrain_tokens(tokens):
+    """Token batch [B, S]: pin S over model under SP *before* the
+    embedding gather -- otherwise the gather from the vocab-sharded table
+    materialises (and all-reduces) the full [B, S, D] embedding output
+    replicated per device (measured: 36 GB at prefill_32k before this
+    pin; see EXPERIMENTS.md §Perf)."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None or tokens.ndim != 2:
+        return tokens
+    mesh, rules = ctx
+    dp = rules["batch"]
+    dp_size = math.prod(
+        _axis_size(mesh, a) for a in (dp if isinstance(dp, tuple) else (dp,)))
+    b = dp if tokens.shape[0] % dp_size == 0 and tokens.shape[0] >= dp_size \
+        else None
+    s_ax = rules.get("act_seq")
+    if s_ax is not None and tokens.shape[1] % _axis_size(mesh, "model") == 0 \
+            and tokens.shape[1] >= _axis_size(mesh, "model"):
+        return jax.lax.with_sharding_constraint(
+            tokens, NamedSharding(mesh, P(b, s_ax)))
+    return jax.lax.with_sharding_constraint(
+        tokens, NamedSharding(mesh, P(b, None)))
+
+
+def constrain_seq_replicated(x):
+    """Pin [B, S, D] batch-sharded with S *replicated*: used by blocks
+    whose time recurrence must scan the full sequence locally (sLSTM)."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None or x.ndim != 3:
+        return x
+    mesh, rules = ctx
+    dp = rules["batch"]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, None)))
+
+
+def constrain_scores(scores, kv_heads: Optional[int] = None):
+    """scores: [B, H, S, T] -- pick the best available model-axis dim.
+
+    Decode (S == 1): follow the KV-cache layout -- when kv_heads don't
+    divide the axis the cache is *sequence*-sharded, so scores must be
+    T-sharded; pinning heads instead forces the partitioner to reshard
+    (replicate!) the whole multi-GB cache every layer (measured: ~100x
+    byte inflation on llama3 decode_32k)."""
+    ctx = getattr(_CTX, "val", None)
+    if ctx is None:
+        return scores
+    mesh, rules = ctx
+    dp = rules["batch"]
+    msize = _axis_size(mesh, "model")
+    b, h, s, t = scores.shape
+    if s > 1 and rules.get("act_seq") is not None and s % msize == 0:
+        # SP: scores inherit the q S-sharding; pin it explicitly
+        return jax.lax.with_sharding_constraint(
+            scores, NamedSharding(mesh, P(dp, None, "model", None)))
+    cache_seq_sharded = (s == 1 and kv_heads is not None
+                         and kv_heads % msize != 0 and t % msize == 0
+                         and t >= msize)
+    if cache_seq_sharded:
+        spec = P(dp, None, None, "model")
+    elif h % msize == 0:
+        spec = P(dp, "model", None, None)
+    elif s % msize == 0 and s > 1:          # SP over query positions
+        spec = P(dp, None, "model", None)
+    elif t % msize == 0 and t >= msize:     # SP over key positions
+        spec = P(dp, None, None, "model")
+    else:
+        spec = P(dp, None, None, None)
+    dp_size = math.prod(_axis_size(mesh, a) for a in
+                        (dp if isinstance(dp, tuple) else (dp,)))
+    if b % dp_size or b < dp_size:
+        spec = P(None, *tuple(spec)[1:])
+    return jax.lax.with_sharding_constraint(
+        scores, NamedSharding(mesh, spec))

@@ -1,0 +1,338 @@
+"""Model assembly: one composable stack covering all 10 assigned archs.
+
+Layer kinds (cfg.pattern): attn | local | rglru | mlstm | slstm | xattn
+(xattn = decoder layer with cross-attention; used when encoder_layers > 0).
+
+Storage: params["stack"]["p<j>"] holds the j-th period position stacked
+over `stack_count` repeats -- a single representation serving both the
+scanned path (fast compile; used by runnable examples) and the unrolled
+path (exact HLO cost analysis; used by the dry-run). Decode caches use the
+same stacked layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import recurrent as rec_lib
+from . import sharding as shard_lib
+from . import xlstm as xlstm_lib
+from .layers import (InitCtx, apply_norm, init_embed, init_mlp, init_norm,
+                     init_unembed, mlp, module, softcap, unembed_logits)
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+
+
+def tree_slice(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(ctx: InitCtx, cfg: ModelConfig, kind: str):
+    d = cfg.d_model
+    mods: Dict[str, Any] = {"norm1": init_norm(ctx, cfg.norm, d)}
+    if kind in ("attn", "local", "xattn"):
+        mods["attn"] = attn_lib.init_attention(
+            ctx, d, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            bias=cfg.attn_bias)
+        if kind == "xattn":
+            mods["normx"] = init_norm(ctx, cfg.norm, d)
+            mods["cross"] = attn_lib.init_attention(
+                ctx, d, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                bias=cfg.attn_bias)
+    elif kind == "rglru":
+        mods["rnn"] = rec_lib.init_rglru_block(
+            ctx, d, cfg.d_rnn or d, cfg.conv_width)
+    elif kind == "mlstm":
+        mods["cell"] = xlstm_lib.init_mlstm_block(
+            ctx, d, cfg.num_heads, cfg.mlstm_proj_factor)
+    elif kind == "slstm":
+        mods["cell"] = xlstm_lib.init_slstm_block(ctx, d, cfg.num_heads)
+    else:
+        raise ValueError(kind)
+
+    if kind in ("attn", "local", "xattn", "rglru") and cfg.d_ff > 0:
+        mods["norm2"] = init_norm(ctx, cfg.norm, d)
+        if cfg.n_experts:
+            mods["moe"] = moe_lib.init_moe(ctx, d, cfg.d_ff, cfg.n_experts,
+                                           cfg.mlp_act)
+        else:
+            mods["mlp"] = init_mlp(ctx, d, cfg.d_ff, cfg.mlp_act,
+                                   bias=cfg.attn_bias)
+    if cfg.post_norm:
+        mods["norm1_post"] = init_norm(ctx, cfg.norm, d)
+        if "norm2" in mods:
+            mods["norm2_post"] = init_norm(ctx, cfg.norm, d)
+    return module(mods)
+
+
+def _init_stack(ctx: InitCtx, cfg: ModelConfig, kinds, count: int):
+    """Stacked init: leading dim = count per period position."""
+    stack_p, stack_s = {}, {}
+    for j, kind in enumerate(kinds):
+        tmpl_p, tmpl_s = init_layer(
+            InitCtx(None, ctx.param_dtype, abstract=True), cfg, kind)
+        if ctx.abstract:
+            params = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((count,) + s.shape, s.dtype),
+                tmpl_p)
+        else:
+            keys = jax.random.split(ctx.split().key, count)
+            params = jax.vmap(
+                lambda k: init_layer(InitCtx(k, ctx.param_dtype), cfg, kind)[0]
+            )(keys)
+        specs = jax.tree.map(lambda ax: ("layers",) + ax, tmpl_s,
+                             is_leaf=_is_axes)
+        stack_p[f"p{j}"], stack_s[f"p{j}"] = params, specs
+    return stack_p, stack_s
+
+
+def init_model(cfg: ModelConfig, key: Optional[jax.Array] = None,
+               abstract: bool = False):
+    """-> (params, logical_specs). abstract=True yields ShapeDtypeStructs."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ctx = InitCtx(key, dtype, abstract=abstract)
+    mods: Dict[str, Any] = {
+        "embed": init_embed(ctx, cfg.vocab_size, cfg.d_model),
+        "final_norm": init_norm(ctx, cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        mods["unembed"] = init_unembed(ctx, cfg.vocab_size, cfg.d_model)
+    if cfg.pos_kind == "learned":
+        mods["pos_emb"] = module({"table": ctx.param(
+            (cfg.max_position, cfg.d_model), (None, "embed"), scale=0.02)})
+    if cfg.encoder_layers:
+        enc_cfg = dataclasses.replace(cfg, n_experts=0)
+        stack_p, stack_s = _init_stack(
+            ctx, enc_cfg, ("attn",), cfg.encoder_layers)
+        mods["enc_stack"] = (stack_p, stack_s)
+        mods["enc_norm"] = init_norm(ctx, cfg.norm, cfg.d_model)
+        mods["enc_pos"] = module({"table": ctx.param(
+            (cfg.enc_seq, cfg.d_model), (None, "embed"), scale=0.02)})
+    stack_p, stack_s = _init_stack(ctx, cfg, cfg.stack_period,
+                                   cfg.stack_count)
+    mods["stack"] = (stack_p, stack_s)
+    if cfg.tail_kinds:
+        tail_p, tail_s = {}, {}
+        for j, kind in enumerate(cfg.tail_kinds):
+            tail_p[f"t{j}"], tail_s[f"t{j}"] = init_layer(ctx, cfg, kind)
+        mods["tail"] = (tail_p, tail_s)
+    return module(mods)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence layer application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def apply_layer(cfg: ModelConfig, kind: str, p, x, positions,
+                enc_out=None) -> Tuple[jax.Array, jax.Array]:
+    """-> (x, aux). x: [B, S, D]."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if kind in ("attn", "local", "xattn"):
+        core = attn_lib.attention(
+            p["attn"], h, positions,
+            theta=cfg.rope_theta, causal=True,
+            window=cfg.window if kind == "local" else None,
+            attn_softcap=cfg.attn_softcap,
+            use_rope=cfg.pos_kind == "rope",
+            q_scale=cfg.q_scale)
+    elif kind == "rglru":
+        core = rec_lib.rglru_block(p["rnn"], h)
+    elif kind == "mlstm":
+        core = xlstm_lib.mlstm_block_chunked(
+            p["cell"], h, min(cfg.mlstm_chunk, h.shape[1]))
+    elif kind == "slstm":
+        core = xlstm_lib.slstm_block(p["cell"], h, cfg.num_heads)
+    if cfg.post_norm:
+        core = apply_norm(cfg.norm, p["norm1_post"], core)
+    x = x + core
+
+    if kind == "xattn":
+        hx = apply_norm(cfg.norm, p["normx"], x)
+        x = x + attn_lib.attention(
+            p["cross"], hx, positions, kv_x=enc_out, use_rope=False,
+            causal=False)
+
+    if "norm2" in p:
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        if cfg.n_experts and "moe" in p:
+            ff, aux = moe_lib.moe(p["moe"], h2, top_k=cfg.top_k,
+                                  capacity_factor=cfg.capacity_factor,
+                                  act=cfg.mlp_act)
+        else:
+            ff = mlp(p["mlp"], h2, cfg.mlp_act)
+        if cfg.post_norm:
+            ff = apply_norm(cfg.norm, p["norm2_post"], ff)
+        x = x + ff
+    return x, aux
+
+
+def _run_stack(cfg: ModelConfig, params, x, positions, enc_out=None,
+               scan: Optional[bool] = None, remat: Optional[bool] = None):
+    stack = params["stack"]
+    kinds = cfg.stack_period
+    count = cfg.stack_count
+    scan = cfg.scan_layers if scan is None else scan
+    remat = cfg.remat if remat is None else remat
+
+    def period_body(x_aux, period_params):
+        x, aux = x_aux
+        x = shard_lib.constrain_residual(x)
+        for j, kind in enumerate(kinds):
+            x, a = apply_layer(cfg, kind, period_params[f"p{j}"], x,
+                               positions, enc_out)
+            aux = aux + a
+        # pin the carry layout at exit too: entry/exit mismatch makes the
+        # SPMD partitioner "involuntarily fully rematerialise" the carry
+        # (a replicated f32 copy) every scan iteration
+        x = shard_lib.constrain_residual(x)
+        return (x, aux), None
+
+    body = period_body
+    if remat:
+        # REPRO_REMAT_POLICY: nothing (default, min memory / +2ND FLOPs) |
+        # dots (save matmul outputs: no matmul recompute, more memory)
+        import os as _os
+        policy = jax.checkpoint_policies.nothing_saveable \
+            if _os.environ.get("REPRO_REMAT_POLICY", "nothing") != "dots" \
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        body = jax.checkpoint(
+            lambda carry, pp: period_body(carry, pp), policy=policy)
+
+    carry = (x, jnp.zeros((), jnp.float32))
+    if scan and count > 1:
+        carry, _ = jax.lax.scan(body, carry, stack)
+    else:
+        for r in range(count):
+            carry, _ = body(carry, tree_slice(stack, r))
+
+    # unrolled tail layers (num_layers % len(pattern) != 0)
+    def tail_body(carry, _):
+        x, aux = carry
+        x = shard_lib.constrain_residual(x)
+        for j, kind in enumerate(cfg.tail_kinds):
+            x, a = apply_layer(cfg, kind, params["tail"][f"t{j}"], x,
+                               positions, enc_out)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.tail_kinds:
+        tb = jax.checkpoint(tail_body,
+                            policy=jax.checkpoint_policies.nothing_saveable) \
+            if remat else tail_body
+        carry, _ = tb(carry, None)
+    return carry
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over stub frame embeddings [B, T, D]."""
+    x = frames.astype(params["embed"]["table"].dtype) \
+        + params["enc_pos"]["table"][None, :frames.shape[1]].astype(
+            frames.dtype)
+    pos = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32)[None], frames.shape[:2])
+    enc_cfg = dataclasses.replace(cfg, n_experts=0)
+
+    def enc_body(x_aux, layer_p):
+        x, aux = x_aux
+        h = apply_norm(cfg.norm, layer_p["norm1"], x)
+        core = attn_lib.attention(layer_p["attn"], h, pos, causal=False,
+                                  use_rope=False)
+        x = x + core
+        h2 = apply_norm(cfg.norm, layer_p["norm2"], x)
+        x = x + mlp(layer_p["mlp"], h2, cfg.mlp_act)
+        return (x, aux), None
+
+    carry = (x, jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        carry, _ = jax.lax.scan(enc_body, carry, params["enc_stack"]["p0"])
+    else:
+        for r in range(cfg.encoder_layers):
+            carry, _ = enc_body(carry,
+                                tree_slice(params["enc_stack"]["p0"], r))
+    return apply_norm(cfg.norm, params["enc_norm"], carry[0])
+
+
+def embed_inputs(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    """-> (x [B,S,D], positions [B,S], enc_out or None, text_offset)."""
+    emb = params["embed"]["table"]
+    tok = shard_lib.constrain_tokens(batch["tokens"])
+    # pin the gather output to the residual sharding immediately: left to
+    # itself XLA shards the embedding output on D (from the table) with S
+    # fully replicated -- ~17 GB of f32 casts per device at prefill_32k
+    x = shard_lib.constrain_residual(emb[tok])
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    offset = 0
+    if cfg.num_img_tokens and "img" in batch:
+        img = batch["img"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+        offset = img.shape[1]
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encode(cfg, params, batch["frames"])
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (x.shape[0], s))
+    if cfg.pos_kind == "learned":
+        x = x + params["pos_emb"]["table"][None, :s].astype(x.dtype)
+    return x, positions, enc_out, offset
+
+
+def forward(cfg: ModelConfig, params, batch,
+            scan: Optional[bool] = None, remat: Optional[bool] = None,
+            last_logits_only: bool = False):
+    """Full-sequence forward -> (logits, aux, hidden [B,S,D], offset).
+
+    last_logits_only=True computes the unembedding for the final position
+    only (prefill: avoids materialising [B, S, V] logits at 32k seq)."""
+    x, positions, enc_out, offset = embed_inputs(cfg, params, batch)
+    x = shard_lib.constrain_residual(x)
+    x, aux = _run_stack(cfg, params, x, positions, enc_out,
+                        scan=scan, remat=remat)
+    x = shard_lib.constrain_residual(x)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    h = x[:, -1:, :] if last_logits_only else x
+    if cfg.tie_embeddings:
+        logits = unembed_logits(params["embed"], h)
+    else:
+        logits = h @ params["unembed"]["w"]
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, aux, x, offset
+
+
+def loss_fn(cfg: ModelConfig, params, batch,
+            scan: Optional[bool] = None, remat: Optional[bool] = None):
+    """Next-token CE over the text region. -> (loss, metrics).
+
+    No slicing of the logits' S axis: position i is masked instead, so
+    the [B, S, V] f32 log-probs stay sequence-sharded under SP (a slice
+    to S-1 would force an all-gather + a full replicated buffer)."""
+    logits, aux, _, offset = forward(cfg, params, batch, scan, remat)
+    tok = batch["tokens"]
+    s_total = logits.shape[1]
+    s_text = tok.shape[1]
+    # logits at seq position offset+j predict token j+1
+    tidx = jnp.arange(s_total) - offset + 1          # target token index
+    ok = (tidx >= 1) & (tidx <= s_text - 1)
+    tgt = jnp.take(tok, jnp.clip(tidx, 0, s_text - 1), axis=1)  # [B, S]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * ok[None, :]) / (ok.sum() * tok.shape[0])
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux,
+                   "ppl": jnp.exp(jnp.minimum(loss, 20.0))}

@@ -1,0 +1,340 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelisable) + sLSTM (scalar
+memory with recurrent mixing).
+
+mLSTM -- parallel quadratic form for train/prefill (exact, stabilised in
+log space), O(1)-state recurrent form for decode:
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        (matrix memory, per head)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t^T q_t / max(|n_t^T q_t|, 1)
+
+with exponential input gate i = exp(~i), sigmoid-in-log-space forget gate,
+and the max-stabiliser m_t of the xLSTM paper. The decode state
+(C [hd x hd] per head) is independent of sequence length -- that is what
+makes the long_500k cell runnable for this arch.
+
+sLSTM -- scalar memory with *recurrent* gate mixing (R·h_{t-1} inside the
+gates) makes it inherently sequential: a lax.scan over time. Its per-step
+FLOPs (4 block-diagonal [hd x hd] matvecs) are negligible next to the
+mLSTM/projection matmuls; the dry-run roofline adds the analytic
+scan-body x trip-count correction (see launch/costs.py) since XLA's
+cost analysis counts while-bodies once.
+
+Block layout follows xLSTM: pre-LN, mLSTM block = up-proj x2 -> cell
+gated by SiLU branch -> down-proj (no separate MLP); sLSTM block = cell ->
+GLU projection (factor 4/3).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import InitCtx, module
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(ctx: InitCtx, dim: int, n_heads: int, proj_factor: float = 2.0):
+    d_inner = int(dim * proj_factor)
+    hd = d_inner // n_heads
+    return module({
+        "w_up": ctx.param((dim, d_inner), ("embed", "rnn")),
+        "w_gate": ctx.param((dim, d_inner), ("embed", "rnn")),
+        "wq": ctx.param((d_inner, n_heads, hd), ("rnn", "heads", "head_dim")),
+        "wk": ctx.param((d_inner, n_heads, hd), ("rnn", "heads", "head_dim")),
+        "wv": ctx.param((d_inner, n_heads, hd), ("rnn", "heads", "head_dim")),
+        "wi": ctx.param((d_inner, n_heads), ("rnn", "heads"), scale=0.02,
+                        dtype=jnp.float32),
+        "bi": ctx.param((n_heads,), ("heads",), zeros=True, dtype=jnp.float32),
+        "wf": ctx.param((d_inner, n_heads), ("rnn", "heads"), scale=0.02,
+                        dtype=jnp.float32),
+        "bf": ctx.param((n_heads,), ("heads",), ones=True, dtype=jnp.float32),
+        "gn_scale": ctx.param((d_inner,), ("rnn",), ones=True,
+                              dtype=jnp.float32),
+        "w_down": ctx.param((d_inner, dim), ("rnn", "embed")),
+    })
+
+
+def _mlstm_qkvif(p, x):
+    u = x @ p["w_up"]                                   # [B,S,di]
+    q = jnp.einsum("bsd,dhk->bshk", u, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", u, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", u, p["wv"])
+    uf = u.astype(jnp.float32)
+    log_i = uf @ p["wi"] + p["bi"]                      # [B,S,H]
+    log_f = jax.nn.log_sigmoid(uf @ p["wf"] + p["bf"])  # [B,S,H]
+    gate = jax.nn.silu(x @ p["w_gate"])
+    return u, q, k, v, log_i, log_f, gate
+
+
+def _groupnorm(p, h, n_heads: int):
+    """Per-head group norm over the flattened head outputs."""
+    b, s, di = h.shape
+    hd = di // n_heads
+    hf = h.astype(jnp.float32).reshape(b, s, n_heads, hd)
+    mu = hf.mean(-1, keepdims=True)
+    var = hf.var(-1, keepdims=True)
+    hf = (hf - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (hf.reshape(b, s, di) * p["gn_scale"]).astype(h.dtype)
+
+
+def mlstm_block(p, x) -> jax.Array:
+    """Parallel (quadratic) exact form. x: [B, S, D]."""
+    b, s, d = x.shape
+    n_heads = p["wi"].shape[1]
+    u, q, k, v, log_i, log_f, gate = _mlstm_qkvif(p, x)
+    hd = q.shape[-1]
+
+    F = jnp.cumsum(log_f, axis=1)                       # [B,S,H]
+    # log weight of source s' at target t:  F_t - F_s' + log_i_s'  (t >= s')
+    logw = F[:, :, None, :] - F[:, None, :, :] + log_i[:, None, :, :]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    logw = jnp.where(tri[None, :, :, None], logw, -jnp.inf)  # [B,T,S',H]
+    m = jnp.max(logw, axis=2, keepdims=True)            # stabiliser [B,T,1,H]
+    w = jnp.exp(logw - m)                               # [B,T,S',H]
+
+    scores = jnp.einsum("bthk,bshk->btsh", q, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    scores = scores * w
+    denom = jnp.maximum(jnp.abs(scores.sum(axis=2)), jnp.exp(-m[:, :, 0, :]))
+    hidden = jnp.einsum("btsh,bshk->bthk", scores.astype(v.dtype), v)
+    hidden = hidden / jnp.maximum(denom[..., None], 1e-6).astype(hidden.dtype)
+
+    hidden = hidden.reshape(b, s, -1)
+    hidden = _groupnorm(p, hidden, n_heads) * gate
+    return hidden @ p["w_down"]
+
+
+def mlstm_block_chunked(p, x, chunk: int = 256) -> jax.Array:
+    """Chunkwise-parallel mLSTM: O(S*chunk) time / O(S*chunk) memory
+    instead of the quadratic form's O(S^2). Exact (same stabilised math;
+    validated against mlstm_block in tests). Within-chunk: quadratic
+    parallel form; across chunks: stabilised linear recurrence on the
+    (C, n) state via `associative_scan` over chunk index.
+
+    This is the TPU-native adaptation that makes prefill_32k fit HBM for
+    the ssm arch (the quadratic form would need ~34 GB/device).
+    """
+    b, s, d = x.shape
+    n_heads = p["wi"].shape[1]
+    u, q, k, v, log_i, log_f, gate = _mlstm_qkvif(p, x)
+    hd = q.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
+    nc = s // chunk
+
+    def cs(a, tail_shape):  # [B,S,...] -> [B,nc,L,...]
+        return a.reshape((b, nc, chunk) + tail_shape)
+
+    qc = cs(q, (n_heads, hd)) * (hd ** -0.5)
+    kc = cs(k, (n_heads, hd))
+    vc = cs(v, (n_heads, hd))
+    lic = cs(log_i.astype(jnp.float32), (n_heads,))
+    lfc = cs(log_f.astype(jnp.float32), (n_heads,))
+
+    F = jnp.cumsum(lfc, axis=2)                        # [B,nc,L,H] within-chunk
+    a_tot = F[:, :, -1, :]                             # total decay per chunk
+
+    # --- per-chunk state contribution, stabilised by mloc ---
+    # contribution weight of source t: exp(a_tot - F_t + log_i_t)
+    w_src = a_tot[:, :, None, :] - F + lic             # [B,nc,L,H]
+    mloc = jnp.max(w_src, axis=2)                      # [B,nc,H]
+    wsrc = jnp.exp(w_src - mloc[:, :, None, :])
+    kf = kc.astype(jnp.float32)
+    C_con = jnp.einsum("bnlh,bnlhk,bnlhv->bnhkv", wsrc, kf,
+                       vc.astype(jnp.float32))
+    n_con = jnp.einsum("bnlh,bnlhk->bnhk", wsrc, kf)
+
+    # --- associative scan over chunks: stabilised linear recurrence ---
+    def combine(e1, e2):
+        a1, m1, C1, n1 = e1
+        a2, m2, C2, n2 = e2
+        a = a1 + a2
+        m = jnp.maximum(m1 + a2, m2)
+        s1 = jnp.exp(m1 + a2 - m)
+        s2 = jnp.exp(m2 - m)
+        C = s1[..., None, None] * C1 + s2[..., None, None] * C2
+        n = s1[..., None] * n1 + s2[..., None] * n2
+        return a, m, C, n
+
+    A, M, Cs, Ns = jax.lax.associative_scan(
+        combine, (a_tot, mloc, C_con, n_con), axis=1)
+    # state *entering* chunk j = scan result of chunk j-1 (shift right)
+    pad = lambda t, fill: jnp.concatenate(
+        [jnp.full_like(t[:, :1], fill), t[:, :-1]], axis=1)
+    M_in = pad(M, -jnp.inf)
+    C_in = pad(Cs, 0.0)
+    N_in = pad(Ns, 0.0)
+
+    # --- combine inter-chunk state with local quadratic part ---
+    logw = F[:, :, :, None, :] - F[:, :, None, :, :] + lic[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    logw = jnp.where(tri[None, None, :, :, None], logw, -jnp.inf)
+    mrow = jnp.max(logw, axis=3)                       # [B,nc,L,H]
+    # total stabiliser per target position
+    m_state = M_in[:, :, None, :] + F                  # [B,nc,L,H]
+    m_tot = jnp.maximum(mrow, m_state)
+    w_loc = jnp.exp(logw - m_tot[:, :, :, None, :])
+    w_sta = jnp.exp(m_state - m_tot)
+
+    scores = jnp.einsum("bnthk,bnshk->bntsh", qc, kc,
+                        preferred_element_type=jnp.float32) * w_loc
+    num_loc = jnp.einsum("bntsh,bnshv->bnthv", scores.astype(jnp.float32),
+                         vc.astype(jnp.float32))
+    den_loc = scores.sum(axis=3)                       # [B,nc,L,H]
+    qf = qc.astype(jnp.float32)
+    num_sta = jnp.einsum("bnthk,bnhkv->bnthv", qf, C_in) * \
+        w_sta[..., None]
+    den_sta = jnp.einsum("bnthk,bnhk->bnth", qf, N_in) * w_sta
+
+    num = num_loc + num_sta
+    den = jnp.maximum(jnp.abs(den_loc + den_sta), jnp.exp(-m_tot))
+    hidden = (num / jnp.maximum(den[..., None], 1e-6)).reshape(b, s, -1)
+    hidden = _groupnorm(p, hidden.astype(x.dtype), n_heads) * gate
+    return hidden @ p["w_down"]
+
+
+def init_mlstm_state(batch: int, dim: int, n_heads: int,
+                     proj_factor: float = 2.0, abstract: bool = False):
+    d_inner = int(dim * proj_factor)
+    hd = d_inner // n_heads
+    mk = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract \
+        else (lambda s: jnp.zeros(s, jnp.float32))
+    return {"C": mk((batch, n_heads, hd, hd)),
+            "n": mk((batch, n_heads, hd)),
+            "m": mk((batch, n_heads))}
+
+
+def mlstm_decode(p, x, state) -> Tuple[jax.Array, dict]:
+    """One-token recurrent step. x: [B, 1, D]."""
+    n_heads = p["wi"].shape[1]
+    u, q, k, v, log_i, log_f, gate = _mlstm_qkvif(p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                 # [B,H,hd]
+    log_i, log_f = log_i[:, 0], log_f[:, 0]             # [B,H]
+    hd = q.shape[-1]
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    fp = jnp.exp(log_f + state["m"] - m_new)
+    ip = jnp.exp(log_i - m_new)
+    kf = k.astype(jnp.float32) * (hd ** -0.5)
+    C = fp[..., None, None] * state["C"] + \
+        ip[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kf,
+                                         v.astype(jnp.float32))
+    n = fp[..., None] * state["n"] + ip[..., None] * kf
+
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = (num / jnp.maximum(den[..., None], 1e-6)).reshape(x.shape[0], 1, -1)
+    h = _groupnorm(p, h.astype(x.dtype), n_heads) * gate
+    return h @ p["w_down"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(ctx: InitCtx, dim: int, n_heads: int,
+                     ff_factor: float = 4.0 / 3.0):
+    hd = dim // n_heads
+    d_ff = int(dim * ff_factor)
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = ctx.param((dim, dim), ("embed", "rnn"))
+        gates[f"r_{g}"] = ctx.param((n_heads, hd, hd),
+                                    ("heads", "head_dim", "head_dim"),
+                                    scale=0.5 / jnp.sqrt(hd))
+        gates[f"b_{g}"] = ctx.param((dim,), ("rnn",), zeros=True,
+                                    dtype=jnp.float32)
+    gates.update({
+        "gn_scale": ctx.param((dim,), ("rnn",), ones=True, dtype=jnp.float32),
+        "w_up": ctx.param((dim, d_ff), ("embed", "ff")),
+        "w_gate": ctx.param((dim, d_ff), ("embed", "ff")),
+        "w_down": ctx.param((d_ff, dim), ("ff", "embed")),
+    })
+    return module(gates)
+
+
+def _slstm_scan(p, wx, n_heads: int, state):
+    """wx: dict of precomputed W·x [B,S,D] per gate; sequential over S."""
+    b, s, d = wx["z"].shape
+    hd = d // n_heads
+
+    def rmat(name, h):
+        # h: [B,H,hd] -> [B,H,hd] block-diagonal recurrent mixing
+        return jnp.einsum("bhk,hkj->bhj", h, p[name].astype(jnp.float32))
+
+    def step(carry, xs):
+        c, n, hprev, m = carry
+        z_in, i_in, f_in, o_in = xs
+        hview = hprev
+        z = jnp.tanh(z_in + rmat("r_z", hview).reshape(b, d) + p["b_z"])
+        log_i = (i_in + rmat("r_i", hview).reshape(b, d) + p["b_i"])
+        log_f = jax.nn.log_sigmoid(
+            f_in + rmat("r_f", hview).reshape(b, d) + p["b_f"])
+        o = jax.nn.sigmoid(o_in + rmat("r_o", hview).reshape(b, d) + p["b_o"])
+        m_new = jnp.maximum(log_f + m, log_i)
+        fp = jnp.exp(log_f + m - m_new)
+        ip = jnp.exp(log_i - m_new)
+        c_new = fp * c + ip * z
+        n_new = fp * n + ip
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return ((c_new, n_new, h_new.reshape(b, n_heads, hd), m_new),
+                h_new)
+
+    xs = tuple(jnp.moveaxis(wx[g].astype(jnp.float32), 1, 0)
+               for g in ("z", "i", "f", "o"))
+    carry, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), carry               # [B,S,D], state
+
+
+def init_slstm_state(batch: int, dim: int, n_heads: int,
+                     abstract: bool = False):
+    hd = dim // n_heads
+    mk = (lambda s: jax.ShapeDtypeStruct(s, jnp.float32)) if abstract \
+        else (lambda s: jnp.zeros(s, jnp.float32))
+    return (mk((batch, dim)), mk((batch, dim)),
+            mk((batch, n_heads, hd)), mk((batch, dim)))
+
+
+def slstm_block(p, x, n_heads: int) -> jax.Array:
+    from .sharding import constrain_seq_replicated
+    x = constrain_seq_replicated(x)   # time scan needs the full sequence
+    b, s, d = x.shape
+    wx = {g: x @ p[f"w_{g}"] for g in ("z", "i", "f", "o")}
+    h, _ = _slstm_scan(p, wx, n_heads, init_slstm_state(b, d, n_heads))
+    h = _slstm_norm(p, h, n_heads).astype(x.dtype)
+    up = jax.nn.gelu(h @ p["w_up"]) * (h @ p["w_gate"])
+    return up @ p["w_down"]
+
+
+def slstm_decode(p, x, state, n_heads: int):
+    b, _, d = x.shape
+    wx = {g: x @ p[f"w_{g}"] for g in ("z", "i", "f", "o")}
+    h, new_state = _slstm_scan(p, wx, n_heads, state)
+    h = _slstm_norm(p, h, n_heads).astype(x.dtype)
+    up = jax.nn.gelu(h @ p["w_up"]) * (h @ p["w_gate"])
+    return up @ p["w_down"], new_state
+
+
+def _slstm_norm(p, h, n_heads: int):
+    b, s, d = h.shape
+    hd = d // n_heads
+    hf = h.astype(jnp.float32).reshape(b, s, n_heads, hd)
+    mu = hf.mean(-1, keepdims=True)
+    var = hf.var(-1, keepdims=True)
+    hf = (hf - mu) * jax.lax.rsqrt(var + 1e-6)
+    return hf.reshape(b, s, d) * p["gn_scale"]
+
+
+def slstm_analytic_flops(batch: int, seq: int, dim: int, n_heads: int) -> float:
+    """Analytic FLOPs of the scan body x trip count (roofline correction:
+    XLA counts while-loop bodies once)."""
+    hd = dim // n_heads
+    per_step = 4 * (2 * n_heads * hd * hd) * batch   # 4 recurrent matvecs
+    return float(per_step * seq)

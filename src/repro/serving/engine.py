@@ -1,0 +1,135 @@
+"""Batched serving engine with continuous batching + optional RAG.
+
+Static-shape serving for TPU: a fixed pool of batch slots; finished
+sequences are swapped for queued prompts (continuous batching) without
+recompiling -- slot state lives in the cache pytree's batch dimension.
+
+The RAG hook wires MicroNN in as a first-class serving feature: each
+decode step's hidden state queries the datastore and the kNN distribution
+interpolates into the LM logits (core/rag.py). Because the datastore is
+the *updatable* MicroNN index, documents upserted while serving become
+retrievable on the next step -- the paper's freshness story, at the
+serving tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.rag import RagConfig, RagDatastore, rag_decode_logits
+from ..models import decode as decode_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: int = -1          # -1: run to max_new_tokens
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 s_max: int = 256, rag: Optional[RagDatastore] = None,
+                 rag_cfg: Optional[RagConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.s_max = s_max
+        self.rag = rag
+        self.rag_cfg = rag_cfg or RagConfig()
+        self.queue: deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.cache = decode_lib.init_cache(cfg, slots, s_max)
+        self.slot_pos = np.zeros(slots, np.int64)
+        self.slot_tok = np.zeros((slots, 1), np.int32)
+        self._decode = jax.jit(partial(self._decode_impl, cfg))
+
+    @staticmethod
+    def _decode_impl(cfg, params, cache, token, pos):
+        return decode_lib.decode_step(cfg, params, cache, token, pos)
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[s] = req
+                # prefill the slot token-by-token (slot-local; a production
+                # engine prefetches with the parallel prefill path)
+                self._reset_slot(s)
+                for t, tok in enumerate(req.prompt[:-1]):
+                    self._step_slot(s, tok, t)
+                self.slot_tok[s, 0] = req.prompt[-1]
+                self.slot_pos[s] = len(req.prompt) - 1
+
+    def _reset_slot(self, s: int):
+        fresh = decode_lib.init_cache(self.cfg, 1, self.s_max)
+
+        def put(old, new):
+            return jax.lax.dynamic_update_slice_in_dim(old, new, s, axis=1)
+        self.cache = jax.tree.map(put, self.cache, fresh)
+
+    def _step_slot(self, s: int, tok: int, pos: int):
+        """Feed one prompt token through slot s only (others masked by
+        running the full batch then restoring -- single-process demo;
+        multi-slot prefill is batched in production)."""
+        toks = self.slot_tok.copy()
+        toks[s, 0] = tok
+        _, _, new_cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(pos, jnp.int32))
+        # keep only slot s's cache updates
+        def mix(old, new):
+            sl = jax.lax.dynamic_slice_in_dim(new, s, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(old, sl, s, axis=1)
+        self.cache = jax.tree.map(mix, self.cache, new_cache)
+
+    # -- decode loop ----------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """One decode step for all active slots. -> {uid: new_token}."""
+        self._admit()
+        live = [s for s, r in enumerate(self.active) if r is not None]
+        if not live:
+            return {}
+        pos = int(max(self.slot_pos[s] for s in live))
+        logits, hidden, new_cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.slot_tok),
+            jnp.asarray(pos, jnp.int32))
+        if self.rag is not None:
+            logits = rag_decode_logits(self.rag, logits, hidden,
+                                       self.rag_cfg)
+        self.cache = new_cache
+        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        out = {}
+        for s in live:
+            req = self.active[s]
+            tok = int(toks[s])
+            req.out.append(tok)
+            out[req.uid] = tok
+            self.slot_tok[s, 0] = tok
+            self.slot_pos[s] += 1
+            if tok == req.eos_id or len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self.active[s] = None
+        return out
+
+    def run(self, max_steps: int = 64) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            self.step()
+        return finished

@@ -1,0 +1,3 @@
+from .store import VectorStore
+from .engine import MicroNN
+from . import checkpoint

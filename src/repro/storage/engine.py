@@ -1,0 +1,176 @@
+"""MicroNN: the embeddable engine facade (paper Fig. 1).
+
+Ties together the durable SQLite tier, the device-resident IVF index, the
+index monitor, and the hybrid query optimizer -- the public API an
+application links against:
+
+    eng = MicroNN(dim=128, n_attr=2)
+    eng.upsert(ids, vecs, attrs)
+    eng.build()                      # initial clustering
+    res = eng.search(q, k=100, n_probe=8)
+    res = eng.search(q, k=10, predicate=Pred(0, "eq", 3.0))
+    eng.delete(ids)
+    eng.maintain()                   # flush delta / rebuild as needed
+
+Writes are serialised (single writer, paper §3.6); every write lands in
+SQLite (durable, WAL) *and* in the device index (delta-store), so readers
+see updates immediately while the host copy guarantees recoverability --
+`MicroNN.recover()` rebuilds device state from SQLite after a crash.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import delta as delta_ops
+from ..core import ivf, maintenance, mqo, search
+from ..core.hybrid import AttributeStats, Node, compile_filter
+from ..core.monitor import IndexMonitor, MonitorConfig
+from ..core.optimizer import HybridOptimizer
+from ..core.types import IVFConfig, IVFIndex, SearchResult
+from .store import VectorStore
+
+
+class MicroNN:
+    def __init__(self, dim: int, n_attr: int = 0, path: str = ":memory:",
+                 config: Optional[IVFConfig] = None,
+                 monitor: Optional[MonitorConfig] = None):
+        self.store = VectorStore(path, dim=dim, n_attr=n_attr)
+        self.config = config or IVFConfig(dim=dim)
+        self.monitor = IndexMonitor(monitor)
+        self.index: Optional[IVFIndex] = None
+        self.optimizer: Optional[HybridOptimizer] = None
+        self.maintenance_log = []
+
+    # -- lifecycle -----------------------------------------------------------
+    def build(self):
+        """Initial clustering from the durable tier (mini-batch k-means
+        streams from SQLite -- never the full dataset in memory)."""
+        ids, _, vecs = self.store.all_rows()
+        attrs = self.store.attributes_for(ids)
+        self.index = ivf.build_index(
+            vecs, ids.astype(np.int32), attrs, cfg=self.config)
+        # persist the clustering back to the clustered table
+        assign = self._current_assignment()
+        self.store.set_partitions(ids, assign[ids], *self._centroid_state())
+        self._refresh_stats()
+
+    def recover(self):
+        """Rebuild device state from SQLite after a crash/restart."""
+        ids, parts, vecs = self.store.all_rows()
+        attrs = self.store.attributes_for(ids)
+        cents, csizes = self.store.centroids()
+        if len(cents) == 0:
+            if len(ids):
+                self.index = None
+            return
+        live = parts >= 0
+        packed = ivf.pack_partitions(
+            vecs[live], ids[live].astype(np.int32), attrs[live],
+            parts[live].astype(np.int64), len(cents),
+            pad_to=self.config.pad_to)
+        vec, vid, vat, val, counts = packed
+        from ..core.types import DeltaStore
+        idx = IVFIndex(
+            centroids=jnp.asarray(cents), csizes=jnp.asarray(csizes),
+            vectors=jnp.asarray(vec), ids=jnp.asarray(vid),
+            attrs=jnp.asarray(vat), valid=jnp.asarray(val),
+            counts=jnp.asarray(counts),
+            delta=DeltaStore.empty(self.config.delta_capacity, self.store.dim,
+                                   attrs.shape[1]),
+            base_mean_size=jnp.asarray(max(counts.mean(), 1.0), jnp.float32),
+            config=self.config)
+        self.index = idx
+        # replay delta rows (partition -1)
+        if (~live).any():
+            self.index = delta_ops.upsert(
+                self.index, jnp.asarray(vecs[~live]),
+                jnp.asarray(ids[~live].astype(np.int32)),
+                jnp.asarray(attrs[~live]))
+        self._refresh_stats()
+
+    # -- writes ---------------------------------------------------------------
+    def upsert(self, ids: np.ndarray, vecs: np.ndarray,
+               attrs: Optional[np.ndarray] = None):
+        n_attr = self.store.n_attr
+        attrs = np.zeros((len(ids), n_attr), np.float32) if attrs is None \
+            else attrs
+        self.store.upsert(ids, vecs, attrs, partition_id=-1)
+        if self.index is None:
+            return
+        if delta_ops.delta_free_slots(self.index) < len(ids):
+            self.maintain(force="flush")
+        self.index = delta_ops.upsert(
+            self.index, jnp.asarray(vecs, jnp.float32),
+            jnp.asarray(ids, jnp.int32), jnp.asarray(attrs, jnp.float32))
+
+    def delete(self, ids: np.ndarray):
+        self.store.delete(ids)
+        if self.index is not None:
+            self.index = delta_ops.delete(self.index,
+                                          jnp.asarray(ids, jnp.int32))
+
+    # -- maintenance ----------------------------------------------------------
+    def maintain(self, force: Optional[str] = None) -> Optional[str]:
+        if self.index is None:
+            return None
+        health = self.monitor.check(self.index)
+        action = force or health.action
+        if action == "flush":
+            self.index, stats = maintenance.flush_delta(self.index)
+            self.maintenance_log.append(stats)
+            self.store.update_centroids(np.asarray(self.index.centroids),
+                                        np.asarray(self.index.csizes))
+            return "flush"
+        if action == "rebuild":
+            self.index, stats = maintenance.full_rebuild(self.index)
+            self.maintenance_log.append(stats)
+            ids, _, _ = self.store.all_rows()
+            assign = self._current_assignment()
+            self.store.set_partitions(
+                ids, assign[ids], *self._centroid_state())
+            self._refresh_stats()
+            return "rebuild"
+        return None
+
+    # -- queries --------------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int = 100, n_probe: int = 8,
+               predicate: Optional[Node] = None, exact: bool = False,
+               batch_mqo: Optional[bool] = None) -> SearchResult:
+        assert self.index is not None, "build() or recover() first"
+        q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
+        if predicate is not None:
+            res, _ = self.optimizer.execute(
+                self.index, q, predicate, k, n_probe,
+                use_mqo=bool(batch_mqo))
+            return res
+        if exact:
+            return search.exact_search(self.index, q, k)
+        if batch_mqo or (batch_mqo is None and q.shape[0] >= 16):
+            return mqo.mqo_search(self.index, q, k, n_probe)
+        return search.ann_search(self.index, q, k, n_probe)
+
+    # -- helpers --------------------------------------------------------------
+    def _refresh_stats(self):
+        idx = self.index
+        flat_attrs = np.asarray(idx.attrs).reshape(
+            idx.k * idx.p_max, idx.n_attr)
+        live = np.asarray(idx.valid).reshape(-1)
+        self.optimizer = HybridOptimizer(AttributeStats(flat_attrs[live]))
+
+    def _current_assignment(self) -> np.ndarray:
+        idx = self.index
+        vid = np.asarray(idx.ids)
+        val = np.asarray(idx.valid)
+        out = np.full(int(vid.max()) + 1 if vid.size else 1, -1, np.int64)
+        for p in range(idx.k):
+            rows = vid[p][val[p]]
+            out[rows] = p
+        return out
+
+    def _centroid_state(self) -> Tuple[np.ndarray, np.ndarray]:
+        return (np.asarray(self.index.centroids),
+                np.asarray(self.index.csizes))

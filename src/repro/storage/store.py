@@ -1,0 +1,240 @@
+"""SQLite-backed durable vector store -- the paper's physical storage tier
+(§3.2), verbatim where it matters:
+
+  * WAL journal mode -> ACID upserts/deletes, single writer + concurrent
+    snapshot readers (paper §3.6);
+  * `vectors` is a WITHOUT ROWID table with PRIMARY KEY
+    (partition_id, asset_id) -> a *clustered* index: rows are physically
+    ordered by partition id, so a partition scan is sequential I/O;
+  * centroids and attributes live in side tables (paper Fig. 2);
+  * the delta-store is partition id -1 (the paper's "reserved partition
+    identifier");
+  * index rebuilds write a new *generation* and swap atomically -- readers
+    keep a consistent view during maintenance (paper: "index rebuilds ...
+    concurrently with transactionally consistent reads").
+
+On a TPU pod this layer runs host-side: the durable home of the index,
+the source for HBM uploads, and the substrate for checkpoint/restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+from typing import Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class VectorStore:
+    def __init__(self, path: str = ":memory:", dim: int = 128,
+                 n_attr: int = 0):
+        self.path = path
+        self.dim = dim
+        self.n_attr = n_attr
+        self.db = sqlite3.connect(path)
+        self.db.execute("PRAGMA journal_mode=WAL")
+        self.db.execute("PRAGMA synchronous=NORMAL")
+        self._create()
+
+    # -- schema -------------------------------------------------------------
+    def _create(self):
+        attr_cols = ", ".join(f"a{i} REAL DEFAULT 0" for i in range(self.n_attr))
+        attr_cols = (", " + attr_cols) if attr_cols else ""
+        with self.db:
+            self.db.execute(
+                "CREATE TABLE IF NOT EXISTS vectors ("
+                " partition_id INTEGER NOT NULL,"
+                " asset_id INTEGER NOT NULL,"
+                " vec BLOB NOT NULL,"
+                " PRIMARY KEY (partition_id, asset_id)) WITHOUT ROWID")
+            self.db.execute(
+                "CREATE UNIQUE INDEX IF NOT EXISTS vectors_by_asset"
+                " ON vectors(asset_id)")
+            self.db.execute(
+                "CREATE TABLE IF NOT EXISTS centroids ("
+                " generation INTEGER NOT NULL,"
+                " partition_id INTEGER NOT NULL,"
+                " vec BLOB NOT NULL, csize REAL DEFAULT 0,"
+                " PRIMARY KEY (generation, partition_id)) WITHOUT ROWID")
+            self.db.execute(
+                f"CREATE TABLE IF NOT EXISTS attributes ("
+                f" asset_id INTEGER PRIMARY KEY{attr_cols})")
+            self.db.execute(
+                "CREATE TABLE IF NOT EXISTS meta (k TEXT PRIMARY KEY, v TEXT)")
+            if self._meta("generation") is None:
+                self._set_meta("generation", "0")
+
+    def _meta(self, k: str) -> Optional[str]:
+        row = self.db.execute("SELECT v FROM meta WHERE k=?", (k,)).fetchone()
+        return row[0] if row else None
+
+    def _set_meta(self, k: str, v: str):
+        self.db.execute(
+            "INSERT INTO meta(k, v) VALUES (?, ?)"
+            " ON CONFLICT(k) DO UPDATE SET v=excluded.v", (k, v))
+
+    @property
+    def generation(self) -> int:
+        return int(self._meta("generation") or 0)
+
+    # -- writes (single writer; each call is one transaction) ---------------
+    def upsert(self, asset_ids: Sequence[int], vecs: np.ndarray,
+               attrs: Optional[np.ndarray] = None, partition_id: int = -1):
+        """Upsert into the given partition (-1 = delta-store)."""
+        vecs = np.ascontiguousarray(vecs, np.float32)
+        with self.db:
+            self.db.executemany(
+                "DELETE FROM vectors WHERE asset_id=?",
+                [(int(a),) for a in asset_ids])
+            self.db.executemany(
+                "INSERT INTO vectors(partition_id, asset_id, vec)"
+                " VALUES (?, ?, ?)",
+                [(partition_id, int(a), v.tobytes())
+                 for a, v in zip(asset_ids, vecs)])
+            if attrs is not None and self.n_attr:
+                cols = ", ".join(f"a{i}" for i in range(self.n_attr))
+                ph = ", ".join("?" * (self.n_attr + 1))
+                self.db.executemany(
+                    f"INSERT OR REPLACE INTO attributes(asset_id, {cols})"
+                    f" VALUES ({ph})",
+                    [(int(a), *map(float, row))
+                     for a, row in zip(asset_ids, attrs)])
+
+    def delete(self, asset_ids: Sequence[int]):
+        with self.db:
+            self.db.executemany("DELETE FROM vectors WHERE asset_id=?",
+                                [(int(a),) for a in asset_ids])
+            self.db.executemany("DELETE FROM attributes WHERE asset_id=?",
+                                [(int(a),) for a in asset_ids])
+
+    def set_partitions(self, asset_ids: np.ndarray, partition_ids: np.ndarray,
+                       centroids: np.ndarray, csizes: np.ndarray):
+        """Atomically install a new clustering generation (paper: the
+        partition IDs in the vector table are updated after (re)clustering).
+        The clustered PK physically re-orders rows by partition."""
+        gen = self.generation + 1
+        with self.db:
+            rows = self.db.execute(
+                "SELECT asset_id, vec FROM vectors").fetchall()
+            by_id = {a: v for a, v in rows}
+            self.db.execute("DELETE FROM vectors")
+            self.db.executemany(
+                "INSERT INTO vectors(partition_id, asset_id, vec)"
+                " VALUES (?, ?, ?)",
+                [(int(p), int(a), by_id[int(a)])
+                 for a, p in zip(asset_ids, partition_ids)])
+            self.db.executemany(
+                "INSERT INTO centroids(generation, partition_id, vec, csize)"
+                " VALUES (?, ?, ?, ?)",
+                [(gen, i, np.ascontiguousarray(c, np.float32).tobytes(),
+                  float(s))
+                 for i, (c, s) in enumerate(zip(centroids, csizes))])
+            self.db.execute("DELETE FROM centroids WHERE generation < ?",
+                            (gen,))
+            self._set_meta("generation", str(gen))
+
+    def move_to_partition(self, asset_ids: Sequence[int],
+                          partition_ids: Sequence[int]):
+        """Incremental maintenance: move delta rows into IVF partitions."""
+        with self.db:
+            rows = [(int(p), int(a)) for a, p in zip(asset_ids, partition_ids)]
+            for p, a in rows:
+                vec = self.db.execute(
+                    "SELECT vec FROM vectors WHERE asset_id=?", (a,)
+                ).fetchone()
+                if vec is None:
+                    continue
+                self.db.execute("DELETE FROM vectors WHERE asset_id=?", (a,))
+                self.db.execute(
+                    "INSERT INTO vectors(partition_id, asset_id, vec)"
+                    " VALUES (?, ?, ?)", (p, a, vec[0]))
+
+    def update_centroids(self, centroids: np.ndarray, csizes: np.ndarray):
+        gen = self.generation
+        with self.db:
+            self.db.executemany(
+                "INSERT OR REPLACE INTO centroids"
+                " (generation, partition_id, vec, csize) VALUES (?, ?, ?, ?)",
+                [(gen, i, np.ascontiguousarray(c, np.float32).tobytes(),
+                  float(s))
+                 for i, (c, s) in enumerate(zip(centroids, csizes))])
+
+    # -- reads (snapshot-consistent within one connection txn) --------------
+    def count(self) -> int:
+        return self.db.execute("SELECT COUNT(*) FROM vectors").fetchone()[0]
+
+    def scan_partition(self, pid: int) -> Tuple[np.ndarray, np.ndarray]:
+        rows = self.db.execute(
+            "SELECT asset_id, vec FROM vectors WHERE partition_id=?"
+            " ORDER BY asset_id", (pid,)).fetchall()
+        if not rows:
+            return (np.zeros((0,), np.int64),
+                    np.zeros((0, self.dim), np.float32))
+        ids = np.array([r[0] for r in rows], np.int64)
+        vecs = np.stack([np.frombuffer(r[1], np.float32) for r in rows])
+        return ids, vecs
+
+    def centroids(self) -> Tuple[np.ndarray, np.ndarray]:
+        rows = self.db.execute(
+            "SELECT vec, csize FROM centroids WHERE generation=?"
+            " ORDER BY partition_id", (self.generation,)).fetchall()
+        if not rows:
+            return np.zeros((0, self.dim), np.float32), np.zeros((0,))
+        return (np.stack([np.frombuffer(r[0], np.float32) for r in rows]),
+                np.array([r[1] for r in rows], np.float32))
+
+    def iter_batches(self, batch_size: int) -> Iterator[np.ndarray]:
+        """Stream all vectors partition-ordered (clustered scan)."""
+        cur = self.db.execute(
+            "SELECT vec FROM vectors ORDER BY partition_id, asset_id")
+        while True:
+            rows = cur.fetchmany(batch_size)
+            if not rows:
+                return
+            yield np.stack([np.frombuffer(r[0], np.float32) for r in rows])
+
+    def sample(self, size: int, rng: np.random.Generator) -> np.ndarray:
+        """Uniform random row sample (mini-batch k-means feed)."""
+        n = self.count()
+        if n == 0:
+            return np.zeros((0, self.dim), np.float32)
+        idx = sorted(int(i) for i in rng.integers(0, n, size=size))
+        out = []
+        cur = self.db.execute(
+            "SELECT vec FROM vectors ORDER BY partition_id, asset_id")
+        want = iter(idx)
+        nxt = next(want, None)
+        for i, row in enumerate(cur):
+            while nxt is not None and nxt == i:
+                out.append(np.frombuffer(row[0], np.float32))
+                nxt = next(want, None)
+            if nxt is None:
+                break
+        return np.stack(out) if out else np.zeros((0, self.dim), np.float32)
+
+    def all_rows(self):
+        rows = self.db.execute(
+            "SELECT asset_id, partition_id, vec FROM vectors"
+            " ORDER BY partition_id, asset_id").fetchall()
+        ids = np.array([r[0] for r in rows], np.int64)
+        parts = np.array([r[1] for r in rows], np.int64)
+        vecs = np.stack([np.frombuffer(r[2], np.float32) for r in rows]) \
+            if rows else np.zeros((0, self.dim), np.float32)
+        return ids, parts, vecs
+
+    def attributes_for(self, asset_ids: np.ndarray) -> np.ndarray:
+        if not self.n_attr:
+            return np.zeros((len(asset_ids), 0), np.float32)
+        cols = ", ".join(f"a{i}" for i in range(self.n_attr))
+        out = np.zeros((len(asset_ids), self.n_attr), np.float32)
+        for j, a in enumerate(asset_ids):
+            row = self.db.execute(
+                f"SELECT {cols} FROM attributes WHERE asset_id=?",
+                (int(a),)).fetchone()
+            if row:
+                out[j] = row
+        return out
+
+    def close(self):
+        self.db.close()

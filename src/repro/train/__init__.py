@@ -1,0 +1,2 @@
+from . import optim
+from .trainer import Trainer, TrainerConfig, make_train_step

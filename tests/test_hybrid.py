@@ -1,0 +1,97 @@
+"""Hybrid queries: predicates, selectivity estimation, plan choice."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ivf, search
+from repro.core.hybrid import And, AttributeStats, Or, Pred, compile_filter
+from repro.core.optimizer import HybridOptimizer
+from repro.core.types import IVFConfig
+from tests.conftest import clustered_data
+
+
+@pytest.fixture(scope="module")
+def hybrid_index():
+    X = clustered_data(n=3000, seed=11)
+    rng = np.random.default_rng(11)
+    attrs = np.stack([
+        rng.integers(0, 10, 3000),        # categorical
+        rng.normal(size=3000) * 10,       # continuous
+        rng.integers(0, 2 ** 8, 3000),    # tag bitset
+    ], axis=1).astype(np.float32)
+    cfg = IVFConfig(dim=32, target_partition_size=50, kmeans_iters=40)
+    idx = ivf.build_index(X, attrs=attrs, cfg=cfg)
+    stats = AttributeStats(attrs, bitset_cols=(2,))
+    return idx, X, attrs, stats
+
+
+def test_predicate_eval_matches_numpy(hybrid_index):
+    idx, X, attrs, stats = hybrid_index
+    cases = [
+        (Pred(0, "eq", 3.0), attrs[:, 0] == 3),
+        (Pred(1, "gt", 0.0), attrs[:, 1] > 0),
+        (Pred(1, "le", -5.0), attrs[:, 1] <= -5),
+        (And((Pred(0, "eq", 3.0), Pred(1, "gt", 0.0))),
+         (attrs[:, 0] == 3) & (attrs[:, 1] > 0)),
+        (Or((Pred(0, "eq", 1.0), Pred(0, "eq", 2.0))),
+         (attrs[:, 0] == 1) | (attrs[:, 0] == 2)),
+        (Pred(2, "match", 5.0),
+         (attrs[:, 2].astype(np.uint32) & 5) == 5),
+    ]
+    for pred, expect in cases:
+        got = np.asarray(compile_filter(pred)(jnp.asarray(attrs)))
+        assert (got == expect).all(), pred
+
+
+def test_selectivity_estimates_reasonable(hybrid_index):
+    _, _, attrs, stats = hybrid_index
+    n = len(attrs)
+    for pred, true_frac in [
+        (Pred(0, "eq", 3.0), (attrs[:, 0] == 3).mean()),
+        (Pred(1, "gt", 0.0), (attrs[:, 1] > 0).mean()),
+        (Pred(1, "lt", -25.0), (attrs[:, 1] < -25).mean()),
+    ]:
+        est = stats.selectivity_factor(pred)
+        assert 0.0 <= est <= 1.0
+        assert abs(est - true_frac) < 0.15, (pred, est, true_frac)
+
+
+def test_conjunction_min_disjunction_sum(hybrid_index):
+    _, _, attrs, stats = hybrid_index
+    a, b = Pred(0, "eq", 3.0), Pred(1, "gt", 0.0)
+    ca, cb = stats.cardinality(a), stats.cardinality(b)
+    assert stats.cardinality(And((a, b))) == min(ca, cb)
+    assert stats.cardinality(Or((a, b))) == min(ca + cb, stats.n_rows)
+
+
+def test_optimizer_plan_choice(hybrid_index):
+    idx, X, attrs, stats = hybrid_index
+    opt = HybridOptimizer(stats)
+    selective = And((Pred(0, "eq", 3.0), Pred(1, "gt", 15.0)))
+    broad = Pred(1, "gt", -100.0)
+    assert opt.choose(idx, selective, n_probe=8).plan == "pre"
+    assert opt.choose(idx, broad, n_probe=8).plan == "post"
+
+
+def test_prefilter_100pct_recall(hybrid_index):
+    idx, X, attrs, stats = hybrid_index
+    opt = HybridOptimizer(stats)
+    pred = And((Pred(0, "eq", 3.0), Pred(1, "gt", 15.0)))
+    q = jnp.asarray(X[:16])
+    res, dec = opt.execute(idx, q, pred, 10, n_probe=8)
+    assert dec.plan == "pre"
+    f = compile_filter(pred)
+    exact = search.exact_search(idx, q, 10, attr_filter=f)
+    assert float(search.recall_at_k(res, exact, 10)) == 1.0
+
+
+def test_postfilter_results_satisfy_predicate(hybrid_index):
+    idx, X, attrs, stats = hybrid_index
+    pred = Pred(0, "ne", 3.0)
+    f = compile_filter(pred)
+    res = search.ann_search(idx, jnp.asarray(X[:8]), 10, n_probe=8,
+                            attr_filter=f)
+    ids = np.asarray(res.ids)
+    for row in ids:
+        for i in row[row >= 0]:
+            assert attrs[i, 0] != 3

@@ -1,0 +1,74 @@
+"""Alg. 1: mini-batch balanced k-means."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kmeans
+from repro.core.types import IVFConfig
+from tests.conftest import clustered_data
+
+
+def test_running_mean_equals_sequential():
+    """The grouped centroid update must telescope to Alg. 1's sequential
+    eta = 1/v[c] loop exactly."""
+    rng = np.random.default_rng(0)
+    k, d, s = 4, 8, 32
+    cents = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    counts = jnp.asarray(rng.integers(1, 10, k).astype(np.float32))
+    batch = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+
+    new_c, new_v, assign = kmeans.assign_minibatch(
+        cents, counts, batch, balance_weight=0.5, target_size=10)
+
+    # sequential oracle (lines 9-13 of Alg. 1)
+    c_ref = np.array(cents)
+    v_ref = np.array(counts)
+    for x, a in zip(np.array(batch), np.array(assign)):
+        v_ref[a] += 1
+        eta = 1.0 / v_ref[a]
+        c_ref[a] = (1 - eta) * c_ref[a] + eta * x
+    np.testing.assert_allclose(np.array(new_c), c_ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.array(new_v), v_ref)
+
+
+def test_balance_constraint_reduces_max_partition():
+    X = clustered_data(n=3000, seed=1)
+    cfg_bal = IVFConfig(dim=32, target_partition_size=50, minibatch_size=128,
+                        kmeans_iters=60, balance_weight=4.0,
+                        balanced_final_assign=True)
+    cfg_unb = IVFConfig(dim=32, target_partition_size=50, minibatch_size=128,
+                        kmeans_iters=60, balance_weight=0.0)
+    _, _, a_bal = kmeans.fit_in_memory(X, cfg_bal)
+    _, _, a_unb = kmeans.fit_in_memory(X, cfg_unb)
+    mx_bal = np.bincount(a_bal).max()
+    mx_unb = np.bincount(a_unb).max()
+    assert mx_bal < mx_unb, (mx_bal, mx_unb)
+    # no mega-clusters: max stays within a small factor of target
+    assert mx_bal <= 4 * cfg_bal.target_partition_size
+
+
+def test_streaming_never_buffers_dataset():
+    """fit() must work from a sampling callback -- full array never needed."""
+    X = clustered_data(n=2000, seed=2)
+    cfg = IVFConfig(dim=32, target_partition_size=100, minibatch_size=64,
+                    kmeans_iters=20)
+    km = kmeans.MiniBatchKMeans(cfg)
+
+    calls = []
+    def sample(size, rng):
+        calls.append(size)
+        idx = rng.integers(0, len(X), size)
+        return X[idx]
+
+    km.fit(sample, len(X))
+    assert max(calls) <= max(cfg.minibatch_size, km.k)
+    assert km.centroids.shape == (len(X) // 100, 32)
+
+
+def test_mean_partition_size_near_target():
+    X = clustered_data(n=4000, seed=3)
+    cfg = IVFConfig(dim=32, target_partition_size=80, minibatch_size=128,
+                    kmeans_iters=50)
+    _, _, assign = kmeans.fit_in_memory(X, cfg)
+    sizes = np.bincount(assign, minlength=len(X) // 80)
+    assert abs(sizes.mean() - 80) < 1e-6  # k = n/target exactly

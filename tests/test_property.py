@@ -1,0 +1,78 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import delta, ivf, search
+from repro.core.hybrid import AttributeStats, Pred
+from repro.core.types import IVFConfig
+
+
+def _index(n, dim, seed, cap=64):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, dim)).astype(np.float32)
+    cfg = IVFConfig(dim=dim, target_partition_size=max(8, n // 8),
+                    kmeans_iters=8, minibatch_size=32, delta_capacity=cap)
+    return ivf.build_index(X, cfg=cfg), X
+
+
+@given(st.integers(60, 200), st.integers(4, 16), st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_exact_search_is_true_knn(n, dim, seed):
+    idx, X = _index(n, dim, seed)
+    q = jnp.asarray(X[:3])
+    res = search.exact_search(idx, q, 5)
+    d2 = ((X[None, :, :] - X[:3][:, None, :]) ** 2).sum(-1)
+    want = np.argsort(d2, axis=1, kind="stable")[:, :5]
+    got_sets = [set(map(int, row[row >= 0]))
+                for row in np.asarray(res.ids)]
+    for g, w, drow in zip(got_sets, want, d2):
+        # compare by distance values (ties can reorder ids)
+        got_d = sorted(drow[list(g)])
+        want_d = sorted(drow[w])
+        np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 10 ** 6), st.integers(1, 20))
+@settings(max_examples=10, deadline=None)
+def test_upsert_then_delete_roundtrip(seed, batch):
+    idx, X = _index(100, 8, seed)
+    rng = np.random.default_rng(seed + 999_999)
+    vecs = rng.normal(size=(batch, 8)).astype(np.float32)
+    ids = jnp.arange(5000, 5000 + batch, dtype=jnp.int32)
+    before = int(idx.num_live())
+    idx2 = delta.upsert(idx, jnp.asarray(vecs), ids,
+                        jnp.zeros((batch, 0)))
+    assert int(idx2.num_live()) == before + batch
+    idx3 = delta.delete(idx2, ids)
+    assert int(idx3.num_live()) == before
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_upsert_idempotent(seed):
+    idx, X = _index(100, 8, seed)
+    rng = np.random.default_rng(seed + 999_999)  # decouple from X's stream
+    v = rng.normal(size=(1, 8)).astype(np.float32)
+    ids = jnp.asarray([7777], dtype=jnp.int32)
+    a = delta.upsert(idx, jnp.asarray(v), ids, jnp.zeros((1, 0)))
+    b = delta.upsert(a, jnp.asarray(v), ids, jnp.zeros((1, 0)))
+    assert int(b.num_live()) == int(a.num_live())
+    r = search.exact_search(b, jnp.asarray(v), 1)
+    assert int(r.ids[0, 0]) == 7777
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=20,
+                max_size=200),
+       st.floats(-100, 100, allow_nan=False))
+@settings(max_examples=30, deadline=None)
+def test_selectivity_bounds(vals, threshold):
+    attrs = np.asarray(vals, np.float32)[:, None]
+    stats = AttributeStats(attrs)
+    for op in ("lt", "le", "gt", "ge", "eq", "ne"):
+        f = stats.selectivity_factor(Pred(0, op, threshold))
+        assert 0.0 <= f <= 1.0
+    # complementary ops sum to ~1
+    lt = stats.selectivity_factor(Pred(0, "lt", threshold))
+    ge = stats.selectivity_factor(Pred(0, "ge", threshold))
+    assert abs(lt + ge - 1.0) < 0.05

@@ -1,0 +1,89 @@
+"""Serving engine: generation, continuous batching, RAG interpolation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.smoke import smoke_config
+from repro.core import ivf
+from repro.core.rag import (RagConfig, RagDatastore, interpolate,
+                            knn_logits, rag_decode_logits)
+from repro.core.types import IVFConfig
+from repro.models import init_model
+from repro.serving import Request, ServeEngine
+
+
+def _engine(rag=None, slots=2):
+    cfg = smoke_config(get_arch("llama3-8b").config)
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, ServeEngine(cfg, params, slots=slots, s_max=64, rag=rag)
+
+
+def test_generates_and_finishes():
+    cfg, eng = _engine()
+    reqs = [Request(uid=i, prompt=[1, 2, 3], max_new_tokens=4)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(40):
+        if all(r.done for r in reqs):
+            break
+        eng.step()
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out)
+
+
+def test_continuous_batching_reuses_slots():
+    cfg, eng = _engine(slots=1)
+    reqs = [Request(uid=i, prompt=[5, 6], max_new_tokens=2)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while not all(r.done for r in reqs) and steps < 60:
+        eng.step()
+        steps += 1
+    assert all(r.done for r in reqs)   # 3 requests through 1 slot
+
+
+def test_greedy_decode_deterministic():
+    cfg, eng = _engine()
+    r1 = Request(uid=0, prompt=[7, 8, 9], max_new_tokens=5)
+    eng.submit(r1)
+    while not r1.done:
+        eng.step()
+    cfg2, eng2 = _engine()
+    r2 = Request(uid=0, prompt=[7, 8, 9], max_new_tokens=5)
+    eng2.submit(r2)
+    while not r2.done:
+        eng2.step()
+    assert r1.out == r2.out
+
+
+def test_rag_interpolation_shifts_logits():
+    cfg = smoke_config(get_arch("llama3-8b").config)
+    rng = np.random.default_rng(0)
+    n = 512
+    vecs = rng.normal(size=(n, cfg.d_model)).astype(np.float32)
+    index = ivf.build_index(vecs, cfg=IVFConfig(
+        dim=cfg.d_model, target_partition_size=64, kmeans_iters=10,
+        delta_capacity=64))
+    target_tok = 42
+    ds = RagDatastore(index=index,
+                      next_token=jnp.full((n + 1,), target_tok, jnp.int32))
+    rcfg = RagConfig(k=8, n_probe=4, lam=0.9)
+    hidden = jnp.asarray(vecs[:4])
+    lm_logits = jnp.zeros((4, cfg.vocab_size))
+    out = rag_decode_logits(ds, lm_logits, hidden, rcfg)
+    assert (np.asarray(jnp.argmax(out, -1)) == target_tok).all()
+
+
+def test_rag_lambda_zero_is_lm():
+    lm = jnp.asarray(np.random.default_rng(0).normal(size=(2, 16)),
+                     jnp.float32)
+    knn = jnp.full((2, 16), np.log(1 / 16.0))
+    out = interpolate(lm, knn, lam=1e-9)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jax.nn.log_softmax(lm)),
+                               atol=1e-4)

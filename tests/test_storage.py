@@ -1,0 +1,84 @@
+"""SQLite tier + engine durability + checkpoint protocol."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import IVFConfig
+from repro.storage import MicroNN, VectorStore, checkpoint
+from tests.conftest import clustered_data
+
+
+def test_store_upsert_delete(tmp_path):
+    st = VectorStore(str(tmp_path / "v.db"), dim=8, n_attr=1)
+    vecs = np.arange(24, dtype=np.float32).reshape(3, 8)
+    st.upsert([1, 2, 3], vecs, np.ones((3, 1)))
+    assert st.count() == 3
+    st.upsert([2], vecs[:1] + 9)   # upsert replaces
+    assert st.count() == 3
+    ids, got = st.scan_partition(-1)
+    assert set(ids) == {1, 2, 3}
+    st.delete([1])
+    assert st.count() == 2
+
+
+def test_clustered_scan_order(tmp_path):
+    st = VectorStore(str(tmp_path / "v.db"), dim=4)
+    vecs = np.random.default_rng(0).normal(size=(10, 4)).astype(np.float32)
+    st.upsert(list(range(10)), vecs)
+    st.set_partitions(np.arange(10), np.array([2, 0, 1] * 3 + [2]),
+                      np.zeros((3, 4), np.float32), np.zeros(3))
+    ids, parts, _ = st.all_rows()
+    assert (np.diff(parts) >= 0).all()   # physically clustered
+    assert st.generation == 1
+
+
+def test_wal_mode_enabled(tmp_path):
+    st = VectorStore(str(tmp_path / "v.db"), dim=4)
+    mode = st.db.execute("PRAGMA journal_mode").fetchone()[0]
+    assert mode == "wal"
+
+
+def test_engine_recovery_with_pending_delta(tmp_path):
+    X = clustered_data(n=800, seed=21, dim=16)
+    path = str(tmp_path / "e.db")
+    cfg = IVFConfig(dim=16, target_partition_size=50, kmeans_iters=20,
+                    delta_capacity=64)
+    eng = MicroNN(dim=16, n_attr=0, path=path, config=cfg)
+    eng.upsert(np.arange(800), X)
+    eng.build()
+    nv = np.random.default_rng(1).normal(size=(5, 16)).astype(np.float32)
+    eng.upsert(np.arange(9000, 9005), nv)   # lands in delta, durable
+    eng.store.db.commit()
+
+    eng2 = MicroNN(dim=16, n_attr=0, path=path, config=cfg)
+    eng2.recover()
+    r = eng2.search(nv[:2], k=1)
+    assert list(np.asarray(r.ids)[:, 0]) == [9000, 9001]
+
+
+def test_checkpoint_atomic_and_elastic(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32)}}
+    d = str(tmp_path / "ck")
+    checkpoint.save_checkpoint(d, 10, tree, extra={"note": "x"})
+    checkpoint.save_checkpoint(d, 20, tree)
+    assert checkpoint.latest_step(d) == 20
+    restored, step, extra = checkpoint.restore_checkpoint(d, tree, step=10)
+    assert step == 10 and extra["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    # a crashed (partial tmp) save never corrupts the latest pointer
+    os.makedirs(os.path.join(d, "step_30.tmp"), exist_ok=True)
+    assert checkpoint.latest_step(d) == 20
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    tree = {"w": jnp.ones((4, 4))}
+    d = str(tmp_path / "ck2")
+    checkpoint.save_checkpoint(d, 1, tree)
+    bad = {"w": jnp.ones((2, 2))}
+    with pytest.raises(AssertionError):
+        checkpoint.restore_checkpoint(d, bad)

@@ -1,0 +1,66 @@
+"""Top-k merge algebra + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk
+from repro.core.types import INVALID_ID
+
+
+@given(st.integers(1, 50), st.integers(1, 50), st.integers(1, 10),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_merge_equals_global_topk(n_a, n_b, k, seed):
+    rng = np.random.default_rng(seed)
+    sa = rng.normal(size=(1, n_a)).astype(np.float32)
+    sb = rng.normal(size=(1, n_b)).astype(np.float32)
+    ia = rng.integers(0, 10_000, (1, n_a)).astype(np.int32)
+    ib = rng.integers(10_000, 20_000, (1, n_b)).astype(np.int32)
+    kk = min(k, n_a + n_b)
+
+    ta, tia = topk.topk_smallest(jnp.asarray(sa), jnp.asarray(ia),
+                                 min(kk, n_a))
+    tb, tib = topk.topk_smallest(jnp.asarray(sb), jnp.asarray(ib),
+                                 min(kk, n_b))
+    ms, mi = topk.merge_topk(ta, tia, tb, tib, kk)
+
+    all_s = np.concatenate([sa, sb], axis=1)
+    all_i = np.concatenate([ia, ib], axis=1)
+    order = np.argsort(all_s[0], kind="stable")[:kk]
+    np.testing.assert_allclose(np.asarray(ms)[0], all_s[0][order],
+                               rtol=1e-6)
+
+
+@given(st.integers(2, 6), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_merge_associative(parts, k, seed):
+    """merge(merge(a,b),c) == merge(a,merge(b,c)) == topk(a++b++c)."""
+    rng = np.random.default_rng(seed)
+    chunks = [rng.normal(size=(1, 6)).astype(np.float32)
+              for _ in range(parts)]
+    ids = [np.full((1, 6), i, np.int32) * 100 + np.arange(6, dtype=np.int32)
+           for i in range(parts)]
+
+    k = min(k, 6)
+
+    def fold(order):
+        s, i = topk.topk_smallest(jnp.asarray(chunks[order[0]]),
+                                  jnp.asarray(ids[order[0]]), k)
+        for j in order[1:]:
+            s2, i2 = topk.topk_smallest(jnp.asarray(chunks[j]),
+                                        jnp.asarray(ids[j]), k)
+            s, i = topk.merge_topk(s, i, s2, i2, k)
+        return np.asarray(s)
+
+    left = fold(list(range(parts)))
+    right = fold(list(range(parts))[::-1])
+    np.testing.assert_allclose(left, right, rtol=1e-6)
+
+
+def test_dedup_keeps_best():
+    s = jnp.asarray([[3.0, 1.0, 2.0, 1.5]])
+    i = jnp.asarray([[7, 7, 8, 8]], dtype=jnp.int32)
+    ds, di = topk.dedup_by_id(s, i)
+    assert list(np.asarray(di)[0][:2]) == [7, 8]
+    np.testing.assert_allclose(np.asarray(ds)[0][:2], [1.0, 1.5])
+    assert (np.asarray(di)[0][2:] == INVALID_ID).all()

@@ -1,0 +1,114 @@
+"""Streaming updates: delta-store, upsert/delete, maintenance, monitor."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delta, maintenance, monitor, search
+from repro.core.types import IVFConfig
+from repro.core import ivf
+from tests.conftest import clustered_data
+
+
+def _mk(n=1500, delta_cap=128):
+    X = clustered_data(n=n, seed=7)
+    cfg = IVFConfig(dim=32, target_partition_size=50, kmeans_iters=30,
+                    delta_capacity=delta_cap)
+    return ivf.build_index(X, cfg=cfg), X
+
+
+def test_insert_visible_immediately():
+    idx, X = _mk()
+    rng = np.random.default_rng(1)
+    nv = rng.normal(size=(8, 32)).astype(np.float32)
+    idx2 = delta.upsert(idx, jnp.asarray(nv),
+                        jnp.arange(9000, 9008, dtype=jnp.int32),
+                        jnp.zeros((8, 0)))
+    r = search.ann_search(idx2, jnp.asarray(nv[:4]), 1, n_probe=2)
+    assert (np.asarray(r.ids)[:, 0] == np.arange(9000, 9004)).all()
+
+
+def test_upsert_replaces_old_copy():
+    idx, X = _mk()
+    vid = int(idx.ids[0, 0])
+    old_vec = np.array(idx.vectors[0, 0])
+    new_vec = old_vec + 100.0
+    idx2 = delta.upsert(idx, jnp.asarray(new_vec[None]),
+                        jnp.asarray([vid], dtype=jnp.int32),
+                        jnp.zeros((1, 0)))
+    # searching at the new location finds the fresh copy
+    r = search.exact_search(idx2, jnp.asarray(new_vec[None]), 1)
+    assert int(r.ids[0, 0]) == vid
+    # the old copy is tombstoned: vid no longer matches near old location
+    r2 = search.exact_search(idx2, jnp.asarray(old_vec[None]), 5)
+    assert vid not in np.asarray(r2.ids)[0]
+    assert not bool(idx2.valid[0, 0])
+
+
+def test_delete_removes_everywhere():
+    idx, X = _mk()
+    victim = int(idx.ids[1, 0])
+    idx2 = delta.delete(idx, jnp.asarray([victim], dtype=jnp.int32))
+    r = search.exact_search(idx2, jnp.asarray(X[victim][None]), 3)
+    assert victim not in np.asarray(r.ids)[0]
+    assert int(idx2.num_live()) == int(idx.num_live()) - 1
+
+
+def test_flush_preserves_searchability():
+    idx, X = _mk()
+    rng = np.random.default_rng(2)
+    nv = rng.normal(size=(20, 32)).astype(np.float32)
+    idx2 = delta.upsert(idx, jnp.asarray(nv),
+                        jnp.arange(9100, 9120, dtype=jnp.int32),
+                        jnp.zeros((20, 0)))
+    idx3, stats = maintenance.flush_delta(idx2)
+    assert stats.rows_moved == 20
+    assert int(idx3.delta.valid.sum()) == 0
+    r = search.ann_search(idx3, jnp.asarray(nv[:5]), 1, n_probe=idx3.k)
+    assert (np.asarray(r.ids)[:, 0] == np.arange(9100, 9105)).all()
+    # incremental flush writes far less than a full rebuild
+    _, full_stats = maintenance.full_rebuild(idx2)
+    assert stats.bytes_written < 0.25 * full_stats.bytes_written
+
+
+def test_flush_updates_centroids_running_mean():
+    idx, X = _mk()
+    rng = np.random.default_rng(3)
+    nv = rng.normal(size=(10, 32)).astype(np.float32) + 50.0  # far outliers
+    idx2 = delta.upsert(idx, jnp.asarray(nv),
+                        jnp.arange(9200, 9210, dtype=jnp.int32),
+                        jnp.zeros((10, 0)))
+    idx3, _ = maintenance.flush_delta(idx2)
+    assert not np.allclose(np.asarray(idx3.centroids),
+                           np.asarray(idx.centroids))
+
+
+def test_monitor_triggers():
+    idx, X = _mk(delta_cap=64)
+    mon = monitor.IndexMonitor()
+    assert mon.check(idx).action == "none"
+    rng = np.random.default_rng(4)
+    nv = rng.normal(size=(60, 32)).astype(np.float32)
+    idx2 = delta.upsert(idx, jnp.asarray(nv),
+                        jnp.arange(9300, 9360, dtype=jnp.int32),
+                        jnp.zeros((60, 0)))
+    assert mon.check(idx2).action == "flush"   # delta nearly full
+
+
+def test_rebuild_trigger_on_growth():
+    idx, X = _mk()
+    mon = monitor.IndexMonitor(monitor.MonitorConfig(
+        growth_rebuild_threshold=0.1))
+    rng = np.random.default_rng(5)
+    cur = idx
+    for batch in range(4):
+        nv = (clustered_data(n=200, seed=10 + batch))
+        cur = delta.upsert(cur, jnp.asarray(nv),
+                           jnp.arange(10000 + 200 * batch,
+                                      10200 + 200 * batch, dtype=jnp.int32),
+                           jnp.zeros((200, 0)))
+        cur, _ = maintenance.flush_delta(cur)
+    health = mon.check(cur)
+    assert health.growth > 0.1
+    assert health.action == "rebuild"
+    rebuilt, _ = maintenance.full_rebuild(cur)
+    assert int(rebuilt.num_live()) == int(cur.num_live())
+    assert mon.check(rebuilt).growth < 0.1
