@@ -14,8 +14,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import (bench_build, bench_e2e, bench_hybrid, bench_minibatch,
-                   bench_mqo, bench_roofline, bench_updates)
+    from . import (bench_build, bench_e2e, bench_executor, bench_hybrid,
+                   bench_minibatch, bench_mqo, bench_roofline, bench_updates)
     sections = {
         "fig4_5_e2e": bench_e2e.main,
         "fig6_build": bench_build.main,
@@ -24,6 +24,7 @@ def main() -> None:
         "fig9_mqo": bench_mqo.main,
         "fig10_updates": bench_updates.main,
         "roofline": bench_roofline.main,
+        "executor": bench_executor.main,
     }
     print("name,us_per_call,derived")
     failed = 0

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 entry point: import smoke + full pytest run.
+#   scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -c "import repro; print('import ok:', repro.__name__)"
+python -m pytest -q "$@"

@@ -1,0 +1,363 @@
+"""Unified query-execution layer: every search is a QueryPlan run by one
+fused scan primitive (the repo's single implementation of paper Alg. 2).
+
+Module map -- who builds plans, who runs them:
+
+    core/search.py      thin plan-builders: ann_search / exact_search /
+                        prefilter_search (public API preserved)
+    core/mqo.py         thin plan-builder: mqo_search (same shared-scan
+                        plan as ANN, explicit union cap)
+    core/optimizer.py   hybrid pre/post plan choice (paper Eqs. 1-3),
+                        both arms issued through this executor
+    core/rag.py         kNN-LM retrieval -> ANN plans
+    storage/engine.py   MicroNN.search -> plans (ann/exact/predicate/mqo)
+    distributed/        sharded_index phase 3 calls fused_scan directly
+                        on each device's local partition shard
+    kernels/ivf_scan.py the Pallas TPU backend of fused_scan
+    benchmarks/bench_executor.py   backend + plan-cache latency
+
+Plan model (paper Alg. 2 generalised):
+    probe set         part_ids [n]  -- shared partition scan list
+    selection mask    qsel [Q, n]   -- which query wants which partition
+                                       (MQO §3.4; ANN is the batch union)
+    fused predicate   attr_filter   -- compiled hybrid predicate, masked
+                                       *before* top-k (§3.5)
+    k                 running top-k width (§3.3)
+Exact = probe everything; pre-filter = compact qualifying rows into
+virtual partitions and probe those (§3.5, cost ~ the gather cap).
+
+Two interchangeable backends execute the same plan shape-identically:
+    "pallas"  fused kernel (kernels/ivf_scan.py); interpret mode is
+              auto-selected off-TPU
+    "xla"     reference path for CPU/GPU -- one shared [n*p_max] matmul
+Neither materialises the seed's per-query [Q, n_probe, p_max, d] gather:
+the probe union is scanned once and queries mask into it.
+
+Plan/compile cache: the `search` facade buckets the query count to the
+next power of two and routes through one jitted entry point whose cache
+key is (Q_bucket, kind, k, n_probe/u_max/cap, predicate_id, backend) --
+repeated same-shape (or same-bucket) queries never retrace.
+`trace_count()` exposes the retrace counter for tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .topk import dedup_by_id, mask_scores, merge_topk, topk_smallest
+from .types import (INVALID_ID, MASKED_SCORE, IVFIndex, SearchResult,
+                    normalize_if_cosine, pairwise_scores, register_dataclass,
+                    static_field)
+
+# attr_filter: [..., n_attr] float32 -> [...] bool  (hybrid.compile_filter;
+# memoized there so equal predicates are identical objects / cache keys)
+AttrFilter = Callable[[jax.Array], jax.Array]
+
+# Retrace counter: incremented each time the jitted entry point actually
+# traces. Stable counter == plan-cache hit.
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
+
+
+def default_backend() -> str:
+    """Pallas kernel on real TPU, shape-identical XLA path elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def find_nearest_centroids(index: IVFIndex, q: jax.Array, n_probe: int):
+    """[Q, d] -> [Q, n_probe] partition ids (line 3 of Alg. 2)."""
+    cd = pairwise_scores(q, index.centroids, index.config.metric)
+    # Empty partitions can never contribute; push them out of the probe set.
+    cd = jnp.where(index.counts[None, :] > 0, cd, jnp.finfo(cd.dtype).max)
+    n_probe = min(n_probe, index.k)
+    _, parts = jax.lax.top_k(-cd, n_probe)
+    return parts
+
+
+# ---------------------------------------------------------------------------
+# QueryPlan + builders
+# ---------------------------------------------------------------------------
+
+
+@register_dataclass
+@dataclasses.dataclass
+class QueryPlan:
+    """One compiled search: probe set + per-query mask + predicate + k.
+
+    `queries` are already metric-normalised. For kind "prefilter" the probe
+    set is replaced by `rows`, a fixed-cap compaction of qualifying row
+    indices that execute_plan repacks into virtual partitions.
+    """
+
+    queries: jax.Array                    # [Q, d] f32
+    part_ids: Optional[jax.Array]         # [n] int32 (None for prefilter)
+    qsel: Optional[jax.Array]             # [Q, n] bool (None: all queries)
+    rows: Optional[jax.Array]             # [cap] int32 (prefilter only)
+    k: int = static_field(default=10)
+    kind: str = static_field(default="ann")   # ann | exact | prefilter
+    attr_filter: Optional[AttrFilter] = static_field(default=None)
+
+
+def plan_ann(index: IVFIndex, queries: jax.Array, k: int, n_probe: int,
+             attr_filter: Optional[AttrFilter] = None,
+             u_max: Optional[int] = None,
+             qmask: Optional[jax.Array] = None) -> QueryPlan:
+    """ANN / batched-MQO plan: per-query probe sets, shared scan union.
+
+    The union is the u_max most-voted partitions (default covers the whole
+    batch exactly: u_max = min(k_parts, Q * n_probe)); `qsel` masks each
+    query back onto its own probes -- paper §3.4's partition-major shared
+    scan, which is also how single-query ANN avoids a per-query gather.
+    `qmask` marks which query rows are real (False rows = bucket padding:
+    they cast no votes and select nothing).
+    """
+    cfg = index.config
+    q = normalize_if_cosine(queries.astype(jnp.float32), cfg.metric)
+    Q = q.shape[0]
+    kp = index.k
+    n_probe = min(n_probe, kp)
+    if u_max is None:
+        u_max = min(kp, Q * n_probe)
+    parts = find_nearest_centroids(index, q, n_probe)          # [Q, n]
+    sel = jnp.zeros((Q, kp), bool).at[
+        jnp.arange(Q)[:, None], parts].set(True)               # [Q, kp]
+    if qmask is not None:
+        sel = sel & qmask[:, None]
+    votes = sel.sum(axis=0)                                    # [kp]
+    vote_top, upart = jax.lax.top_k(votes, u_max)              # [u_max]
+    qsel = jnp.take_along_axis(sel, upart[None, :], axis=1)    # [Q, u_max]
+    qsel = qsel & (vote_top > 0)[None, :]
+    return QueryPlan(queries=q, part_ids=upart.astype(jnp.int32), qsel=qsel,
+                     rows=None, k=k, kind="ann", attr_filter=attr_filter)
+
+
+def plan_exact(index: IVFIndex, queries: jax.Array, k: int,
+               attr_filter: Optional[AttrFilter] = None) -> QueryPlan:
+    """Exact plan: probe set = every partition, no selection mask."""
+    q = normalize_if_cosine(queries.astype(jnp.float32), index.config.metric)
+    return QueryPlan(queries=q,
+                     part_ids=jnp.arange(index.k, dtype=jnp.int32),
+                     qsel=None, rows=None, k=k, kind="exact",
+                     attr_filter=attr_filter)
+
+
+def plan_prefilter(index: IVFIndex, queries: jax.Array, k: int,
+                   attr_filter: AttrFilter, cap: int) -> QueryPlan:
+    """Pre-filtering plan (paper §3.5): evaluate the predicate first and
+    compact qualifying row indices into a static `cap` budget (the device
+    analogue of the SQLite b-tree row-id fetch); execution brute-forces
+    over just those rows, so cost scales with predicate selectivity."""
+    cfg = index.config
+    q = normalize_if_cosine(queries.astype(jnp.float32), cfg.metric)
+    kp, p_max, _ = index.vectors.shape
+    n_attr = index.attrs.shape[-1]
+    ok = index.valid.reshape(-1) & attr_filter(
+        index.attrs.reshape(kp * p_max, n_attr))
+    (rows,) = jnp.nonzero(ok, size=cap, fill_value=kp * p_max)
+    return QueryPlan(queries=q, part_ids=None, qsel=None,
+                     rows=rows.astype(jnp.int32), k=k, kind="prefilter",
+                     attr_filter=attr_filter)
+
+
+# ---------------------------------------------------------------------------
+# The fused scan primitive (two backends, one shape)
+# ---------------------------------------------------------------------------
+
+
+def fused_scan(
+    queries: jax.Array,          # [Q, d] f32 (normalised)
+    vectors: jax.Array,          # [kp, p_max, d]
+    valid: jax.Array,            # [kp, p_max] bool
+    ids: jax.Array,              # [kp, p_max] int32
+    part_ids: jax.Array,         # [n] int32 probe list
+    k_out: int,
+    *,
+    metric: str = "l2",
+    qsel: Optional[jax.Array] = None,      # [Q, n] bool
+    attrs: Optional[jax.Array] = None,     # [kp, p_max, n_attr]
+    attr_filter: Optional[AttrFilter] = None,
+    backend: Optional[str] = None,         # "pallas" | "xla" | None=auto
+) -> Tuple[jax.Array, jax.Array]:
+    """Alg. 2 hot loop: stream probed partitions, batched distances,
+    running top-k, with the attribute predicate fused before top-k.
+
+    Returns (scores [Q, k_out], ids [Q, k_out]) ascending, rank
+    convention (l2 drops the per-query ||q||^2 constant).
+    """
+    if backend is None:
+        backend = default_backend()
+    if backend == "pallas":
+        from ..kernels import ivf_scan
+        return ivf_scan.ivf_scan_topk(
+            queries, vectors, valid, ids, part_ids, k_out, metric=metric,
+            qsel=qsel, attrs=attrs, attr_filter=attr_filter, interpret=None)
+    assert backend == "xla", backend
+    return _xla_scan(queries, vectors, valid, ids, part_ids, k_out,
+                     metric=metric, qsel=qsel, attrs=attrs,
+                     attr_filter=attr_filter)
+
+
+def _xla_scan(queries, vectors, valid, ids, part_ids, k_out, *, metric,
+              qsel=None, attrs=None, attr_filter=None):
+    """Shape-identical XLA reference backend: gather the probe union once
+    ([n, p_max, d] -- NOT per query), one [Q, d] x [d, n*p_max] matmul."""
+    pv = vectors[part_ids]                          # [n, p_max, d]
+    pid = ids[part_ids]                             # [n, p_max]
+    pok = valid[part_ids]
+    if attr_filter is not None:
+        pok = pok & attr_filter(attrs[part_ids])
+    n, p_max, d = pv.shape
+    flat_v = pv.reshape(n * p_max, d)
+    dots = queries @ flat_v.T                       # [Q, n*p_max]
+    if metric in ("ip", "cosine"):
+        scores = -dots
+    else:
+        v2 = jnp.sum(flat_v * flat_v, axis=-1)
+        scores = v2[None, :] - 2.0 * dots
+    ok = jnp.broadcast_to(pok.reshape(1, n * p_max), scores.shape)
+    if qsel is not None:
+        ok = ok & jnp.repeat(qsel, p_max, axis=1)
+    scores = mask_scores(scores, ok)
+    return topk_smallest(
+        scores, jnp.broadcast_to(pid.reshape(1, -1), scores.shape), k_out)
+
+
+# ---------------------------------------------------------------------------
+# Plan execution (scan + delta merge + dedup epilogue)
+# ---------------------------------------------------------------------------
+
+
+def _delta_candidates(index: IVFIndex, q: jax.Array,
+                      attr_filter: Optional[AttrFilter]):
+    """Delta partition, always scanned (§3.6), in rank convention."""
+    d = index.delta
+    dots = q @ d.vectors.T                           # [Q, cap]
+    if index.config.metric in ("ip", "cosine"):
+        scores = -dots
+    else:
+        scores = jnp.sum(d.vectors * d.vectors, axis=-1)[None, :] - 2.0 * dots
+    ok = d.valid
+    if attr_filter is not None:
+        ok = ok & attr_filter(d.attrs)
+    return mask_scores(scores, ok[None, :]), jnp.broadcast_to(
+        d.ids[None, :], scores.shape)
+
+
+def execute_plan(index: IVFIndex, plan: QueryPlan,
+                 backend: Optional[str] = None) -> SearchResult:
+    """Run a QueryPlan through the fused scan primitive + delta epilogue."""
+    cfg = index.config
+    q = plan.queries
+    kp, p_max, d = index.vectors.shape
+    f = plan.attr_filter
+
+    if plan.kind == "prefilter":
+        # Repack the qualifying rows into virtual partitions so the same
+        # primitive scans them; predicate already applied at compaction.
+        total = kp * p_max
+        got = plan.rows < total
+        rows = jnp.minimum(plan.rows, total - 1)
+        cap = rows.shape[0]
+        vparts = -(-cap // p_max)
+        pad = vparts * p_max - cap
+        sub_v = jnp.pad(index.vectors.reshape(total, d)[rows],
+                        ((0, pad), (0, 0)))
+        sub_i = jnp.pad(jnp.where(got, index.ids.reshape(-1)[rows],
+                                  INVALID_ID), (0, pad),
+                        constant_values=INVALID_ID)
+        sub_ok = jnp.pad(got, (0, pad))
+        k_scan = min(plan.k, vparts * p_max)
+        s, i = fused_scan(
+            q, sub_v.reshape(vparts, p_max, d), sub_ok.reshape(vparts, p_max),
+            sub_i.reshape(vparts, p_max),
+            jnp.arange(vparts, dtype=jnp.int32), k_scan,
+            metric=cfg.metric, backend=backend)
+    else:
+        n = plan.part_ids.shape[0]
+        k_scan = min(plan.k, n * p_max)
+        s, i = fused_scan(
+            q, index.vectors, index.valid, index.ids, plan.part_ids, k_scan,
+            metric=cfg.metric, qsel=plan.qsel,
+            attrs=index.attrs if f is not None else None,
+            attr_filter=f, backend=backend)
+
+    ds, di = _delta_candidates(index, q, f)
+    k_final = min(plan.k, k_scan + ds.shape[-1])
+    s, i = merge_topk(s, i, ds, di, k_final)
+    s, i = dedup_by_id(s, i)
+    if cfg.metric == "l2":
+        # restore full squared distances (the scan drops the rank-invariant
+        # per-query ||q||^2); masked slots stay at the sentinel
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+        s = jnp.where(i == INVALID_ID, MASKED_SCORE, s + q2)
+    return SearchResult(ids=i, scores=s)
+
+
+# ---------------------------------------------------------------------------
+# Cached entry point (the engine-facing facade)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("kind", "k", "n_probe", "u_max", "cap",
+                                   "attr_filter", "backend"))
+def _run(index, queries, qmask, kind, k, n_probe, u_max, cap, attr_filter,
+         backend):
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1          # executes only while tracing
+    if kind == "exact":
+        plan = plan_exact(index, queries, k, attr_filter)
+    elif kind == "prefilter":
+        plan = plan_prefilter(index, queries, k, attr_filter, cap)
+    else:
+        plan = plan_ann(index, queries, k, n_probe, attr_filter,
+                        u_max=u_max, qmask=qmask)
+    return execute_plan(index, plan, backend=backend)
+
+
+def _bucket(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def search(
+    index: IVFIndex,
+    queries: jax.Array,
+    *,
+    k: int,
+    kind: str = "ann",                 # ann | exact | prefilter
+    n_probe: int = 8,
+    u_max: Optional[int] = None,       # MQO union cap (None: exact union)
+    cap: Optional[int] = None,         # prefilter gather budget
+    attr_filter: Optional[AttrFilter] = None,
+    backend: Optional[str] = None,
+    bucket: bool = True,
+) -> SearchResult:
+    """Build + execute a QueryPlan with query-count bucketing.
+
+    Q is padded to the next power of two so the jit cache is keyed on
+    (Q_bucket, kind, k, n_probe/u_max/cap, predicate_id, backend) -- a
+    stream of variable-size batches compiles once per bucket, not once
+    per batch size. Padding queries are masked out of the plan (qmask)
+    and their result rows sliced off.
+    """
+    if kind == "prefilter":
+        assert cap is not None, "kind='prefilter' needs a static cap " \
+            "(the optimizer sizes it from the selectivity estimate)"
+        assert attr_filter is not None, "kind='prefilter' needs attr_filter"
+    q = jnp.asarray(queries, jnp.float32)
+    Q = q.shape[0]
+    b = _bucket(Q) if bucket else Q
+    if b != Q:
+        q = jnp.concatenate([q, jnp.zeros((b - Q, q.shape[1]), q.dtype)])
+    qmask = jnp.arange(b) < Q
+    res = _run(index, q, qmask, kind, k, n_probe, u_max, cap, attr_filter,
+               backend)
+    if b != Q:
+        res = SearchResult(ids=res.ids[:Q], scores=res.scores[:Q])
+    return res

@@ -87,12 +87,32 @@ def eval_predicate(node: Node, attrs: jax.Array) -> jax.Array:
     return out
 
 
+# Compiled predicates are memoized on the frozen tree so the *same* node
+# always yields the *same* callable object: jit caches key static args by
+# identity/hash, so repeated hybrid queries with an equal predicate hit the
+# executor's compile cache instead of retracing (predicate_id in the plan
+# cache key of core/executor.py). FIFO-bounded: ad-hoc one-off predicates
+# from a long-lived service must not grow memory forever (evicting a live
+# predicate only costs a retrace on its next use, never correctness).
+_FILTER_CACHE: Dict[tuple, "object"] = {}
+_FILTER_CACHE_MAX = 1024
+
+
 def compile_filter(node: Node):
     """Predicate tree -> hashable callable usable as a static jit arg."""
+    key = _freeze(node)
+    cached = _FILTER_CACHE.get(key)
+    if cached is not None:
+        return cached
+    if len(_FILTER_CACHE) >= _FILTER_CACHE_MAX:
+        _FILTER_CACHE.pop(next(iter(_FILTER_CACHE)))
+
     def fn(attrs: jax.Array) -> jax.Array:
         return eval_predicate(node, attrs)
     # make it stable under jit static-arg hashing
-    fn.__name__ = f"filter_{hash(_freeze(node)) & 0xFFFFFFFF:x}"
+    fn.__name__ = f"filter_{hash(key) & 0xFFFFFFFF:x}"
+    fn.predicate_id = fn.__name__
+    _FILTER_CACHE[key] = fn
     return fn
 
 

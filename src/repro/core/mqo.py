@@ -4,12 +4,13 @@ Naive batch execution re-reads a partition once per query that probes it.
 MQO inverts the mapping: group queries by partition, read each partition
 once, and score *all* interested queries against it with a single matmul.
 
-Fixed-shape realisation for TPU:
-  * selection matrix  sel[Q, k]   -- which query probes which partition
-  * vote counts       votes[k]    -- how many queries probe each partition
-  * the u_max most-voted partitions form the shared scan set (the true
-    union has |U| <= min(k, Q*n_probe) members; unioned-out slots carry
-    zero votes and are masked)
+In the unified execution layer this is not a separate implementation:
+an MQO batch is exactly an ANN QueryPlan -- the shared probe union is
+the plan's `part_ids` and the query-by-partition selection matrix is its
+`qsel` mask -- so `mqo_search` is a thin plan-builder over core/executor.
+The only extra knob is `u_max`, a static cap on the scan union (the true
+union has |U| <= min(k, Q*n_probe) members; unioned-out slots carry zero
+votes and are masked).
 
 I/O amortisation: bytes gathered drop from  Q * n_probe * p_max * d  (naive)
 to  u_max * p_max * d  (shared) -- the quantity benchmarks/bench_mqo.py
@@ -17,18 +18,15 @@ tracks to reproduce Fig. 9.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from .search import AttrFilter, _delta_scores, find_nearest_centroids
-from .topk import dedup_by_id, mask_scores, topk_smallest
-from .types import IVFIndex, SearchResult, normalize_if_cosine
+from . import executor
+from .executor import AttrFilter
+from .types import IVFIndex, SearchResult
 
 
-@partial(jax.jit, static_argnames=("k", "n_probe", "u_max", "attr_filter"))
 def mqo_search(
     index: IVFIndex,
     queries: jax.Array,           # [Q, d]
@@ -36,55 +34,12 @@ def mqo_search(
     n_probe: int,
     u_max: Optional[int] = None,
     attr_filter: Optional[AttrFilter] = None,
+    backend: Optional[str] = None,
 ) -> SearchResult:
     """Partition-major shared scan for a query batch."""
-    cfg = index.config
-    q = normalize_if_cosine(queries.astype(jnp.float32), cfg.metric)
-    Q = q.shape[0]
-    kp, p_max, d = index.vectors.shape
-    n_probe = min(n_probe, kp)
-    if u_max is None:
-        u_max = min(kp, Q * n_probe)
-
-    parts = find_nearest_centroids(index, q, n_probe)        # [Q, n]
-    sel = jnp.zeros((Q, kp), bool).at[
-        jnp.arange(Q)[:, None], parts].set(True)             # [Q, k]
-    votes = sel.sum(axis=0)                                  # [k]
-
-    # Shared scan set: most-voted partitions first; zero-vote slots are
-    # padding and masked out below.
-    vote_top, upart = jax.lax.top_k(votes, u_max)            # [u_max]
-    uv = index.vectors[upart]                                # [u_max, p_max, d]
-    uid = index.ids[upart]
-    uok = index.valid[upart]
-    if attr_filter is not None:
-        uok = uok & attr_filter(index.attrs[upart])
-    uok = uok & (vote_top > 0)[:, None]
-
-    # One matmul scores the whole batch against the whole shared set --
-    # the paper's "distances ... calculated via a single matrix
-    # multiplication" per partition, fused across partitions.
-    flat_v = uv.reshape(u_max * p_max, d)
-    dots = q @ flat_v.T                                      # [Q, u_max*p_max]
-    if cfg.metric in ("ip", "cosine"):
-        scores = -dots
-    else:
-        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
-        v2 = jnp.sum(flat_v * flat_v, axis=-1)
-        scores = q2 + v2[None, :] - 2.0 * dots
-    scores = scores.reshape(Q, u_max, p_max)
-
-    qsel = jnp.take_along_axis(sel, upart[None, :], axis=1)  # [Q, u_max]
-    ok = uok[None, :, :] & qsel[:, :, None]
-    scores = mask_scores(scores, ok).reshape(Q, -1)
-    flat_i = jnp.broadcast_to(uid.reshape(1, -1), scores.shape)
-
-    ds, di = _delta_scores(index, q, attr_filter)
-    all_s = jnp.concatenate([scores, ds], axis=-1)
-    all_i = jnp.concatenate([flat_i, di], axis=-1)
-    s, i = topk_smallest(all_s, all_i, min(k, all_s.shape[-1]))
-    s, i = dedup_by_id(s, i)
-    return SearchResult(ids=i, scores=s)
+    return executor.search(index, queries, k=k, kind="ann", n_probe=n_probe,
+                           u_max=u_max, attr_filter=attr_filter,
+                           backend=backend)
 
 
 def gathered_bytes(index: IVFIndex, batch: int, n_probe: int,

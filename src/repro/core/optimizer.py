@@ -9,6 +9,11 @@ Chooses between:
 
 Decision rule: pre-filter iff  F_hat_filters < F_hat_IVF  where
 F_hat_IVF = n_probe * p_target / |R|   (Eq. 2).
+
+Both arms are plan-builders over core/executor.py: the decision picks the
+plan *kind* ("prefilter" vs "ann" with the predicate fused), and the same
+fused scan primitive executes either -- which is what makes the two plans'
+costs comparable in the first place.
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from . import mqo, search
+from . import executor
 from .hybrid import AttributeStats, Node, compile_filter
 from .types import IVFIndex, SearchResult
 
@@ -63,18 +68,19 @@ class HybridOptimizer:
         k: int,
         n_probe: int,
         force_plan: Optional[str] = None,
-        use_mqo: bool = False,
+        use_mqo: bool = False,      # kept for API compat: ANN == MQO plan now
+        backend: Optional[str] = None,
     ) -> tuple[SearchResult, PlanDecision]:
+        del use_mqo
         decision = self.choose(index, predicate, n_probe)
         plan = force_plan or decision.plan
         attr_filter = compile_filter(predicate)
         if plan == "pre":
-            res = search.prefilter_search(
-                index, queries, k, attr_filter, cap=decision.prefilter_cap)
-        elif use_mqo:
-            res = mqo.mqo_search(index, queries, k, n_probe,
-                                 attr_filter=attr_filter)
+            res = executor.search(index, queries, k=k, kind="prefilter",
+                                  attr_filter=attr_filter,
+                                  cap=decision.prefilter_cap, backend=backend)
         else:
-            res = search.ann_search(index, queries, k, n_probe,
-                                    attr_filter=attr_filter)
+            res = executor.search(index, queries, k=k, kind="ann",
+                                  n_probe=n_probe, attr_filter=attr_filter,
+                                  backend=backend)
         return res, dataclasses.replace(decision, plan=plan)

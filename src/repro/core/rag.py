@@ -22,7 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from . import search
+from . import executor
 from .types import IVFIndex, SearchResult, static_field, register_dataclass
 
 
@@ -51,8 +51,8 @@ def knn_logits(
     cfg: RagConfig,
 ) -> jax.Array:
     """[B, vocab] log-probabilities from the retrieved neighbourhood."""
-    res: SearchResult = search.ann_search(
-        ds.index, hidden, cfg.k, cfg.n_probe)
+    res: SearchResult = executor.search(
+        ds.index, hidden, k=cfg.k, kind="ann", n_probe=cfg.n_probe)
     ok = res.ids >= 0
     toks = ds.next_token[jnp.maximum(res.ids, 0)]            # [B, K]
     w = jax.nn.softmax(

@@ -1,6 +1,12 @@
-"""ANN / exact KNN search (paper Alg. 2) over the device-resident index.
+"""ANN / exact KNN search (paper Alg. 2): thin plan-builders.
 
-Faithful structure:
+The actual scan lives in core/executor.py -- every public entry point
+here compiles its arguments into a QueryPlan (probe set + per-query
+selection mask + optional fused attribute predicate + k) and hands it to
+the unified executor, which runs one fused scan primitive on either the
+Pallas TPU kernel or the shape-identical XLA reference backend.
+
+Faithful structure (now encoded as plans):
   1. scan centroids, pick the n nearest partitions          (FindNearestCentroids)
   2. always include the delta partition                     (§3.6)
   3. scan chosen partitions, batched distance via matmul    (SIMD -> MXU)
@@ -10,126 +16,56 @@ Faithful structure:
 Attribute post-filtering is fused *before* the top-k, reproducing the
 paper's optimization: "vectors in the requested partitions that don't
 satisfy the predicate filter are filtered before being considered in the
-top-K computation" (§3.5).
-
-All functions are jit-compatible with static (k, n_probe); the batch-MQO
-variant lives in core/mqo.py and the Pallas-tiled single-pass scan in
-kernels/ivf_scan.py.
+top-K computation" (§3.5) -- inside the kernel on the Pallas backend.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
+
+from . import executor
+from .executor import AttrFilter, find_nearest_centroids  # noqa: F401 (re-export)
+from .types import INVALID_ID, SearchResult, IVFIndex
+
 import jax.numpy as jnp
 
-from .topk import dedup_by_id, mask_scores, topk_smallest
-from .types import (INVALID_ID, IVFIndex, SearchResult, normalize_if_cosine,
-                    pairwise_scores)
 
-# attr_filter: [..., n_attr] float32 -> [...] bool  (from hybrid.compile_filter)
-AttrFilter = Callable[[jax.Array], jax.Array]
-
-
-def find_nearest_centroids(index: IVFIndex, q: jax.Array, n_probe: int):
-    """[Q, d] -> [Q, n_probe] partition ids (line 3 of Alg. 2)."""
-    cd = pairwise_scores(q, index.centroids, index.config.metric)
-    # Empty partitions can never contribute; push them out of the probe set.
-    cd = jnp.where(index.counts[None, :] > 0, cd, jnp.finfo(cd.dtype).max)
-    n_probe = min(n_probe, index.k)
-    _, parts = jax.lax.top_k(-cd, n_probe)
-    return parts
-
-
-def _delta_scores(index: IVFIndex, q: jax.Array, attr_filter: Optional[AttrFilter]):
-    """Score the delta partition (always scanned, §3.6)."""
-    d = index.delta
-    scores = pairwise_scores(q, d.vectors, index.config.metric)  # [Q, cap]
-    ok = d.valid
-    if attr_filter is not None:
-        ok = ok & attr_filter(d.attrs)
-    return mask_scores(scores, ok[None, :]), jnp.broadcast_to(
-        d.ids[None, :], scores.shape)
-
-
-@partial(jax.jit, static_argnames=("k", "n_probe", "attr_filter"))
 def ann_search(
     index: IVFIndex,
     queries: jax.Array,            # [Q, d]
     k: int,
     n_probe: int,
     attr_filter: Optional[AttrFilter] = None,
+    backend: Optional[str] = None,
 ) -> SearchResult:
-    """Alg. 2: per-query partition gather + fused scan. Best for small Q;
-    large batches should use mqo.mqo_search (paper §3.4)."""
-    cfg = index.config
-    q = normalize_if_cosine(queries.astype(jnp.float32), cfg.metric)
-    parts = find_nearest_centroids(index, q, n_probe)      # [Q, n]
-
-    pv = index.vectors[parts]                              # [Q, n, p_max, d]
-    pid = index.ids[parts]                                 # [Q, n, p_max]
-    pok = index.valid[parts]
-    if attr_filter is not None:
-        pok = pok & attr_filter(index.attrs[parts])
-
-    dots = jnp.einsum("qd,qnpd->qnp", q, pv)
-    if cfg.metric in ("ip", "cosine"):
-        scores = -dots
-    else:
-        q2 = jnp.sum(q * q, axis=-1)[:, None, None]
-        v2 = jnp.sum(pv * pv, axis=-1)
-        scores = q2 + v2 - 2.0 * dots
-    scores = mask_scores(scores, pok)
-
-    Q = q.shape[0]
-    flat_s = scores.reshape(Q, -1)
-    flat_i = pid.reshape(Q, -1)
-
-    ds, di = _delta_scores(index, q, attr_filter)
-    all_s = jnp.concatenate([flat_s, ds], axis=-1)
-    all_i = jnp.concatenate([flat_i, di], axis=-1)
-    s, i = topk_smallest(all_s, all_i, min(k, all_s.shape[-1]))
-    s, i = dedup_by_id(s, i)
-    return SearchResult(ids=i, scores=s)
+    """Alg. 2 as an ANN plan: per-query probe sets scanned as one shared
+    union with a selection mask (no per-query partition gather)."""
+    return executor.search(index, queries, k=k, kind="ann", n_probe=n_probe,
+                           attr_filter=attr_filter, backend=backend)
 
 
-@partial(jax.jit, static_argnames=("k", "attr_filter"))
 def exact_search(
     index: IVFIndex,
     queries: jax.Array,
     k: int,
     attr_filter: Optional[AttrFilter] = None,
+    backend: Optional[str] = None,
 ) -> SearchResult:
     """Brute-force KNN over every live row (paper: 'trivial but resource
-    intensive'); also the 100%-recall oracle for tests/benchmarks."""
-    cfg = index.config
-    q = normalize_if_cosine(queries.astype(jnp.float32), cfg.metric)
-    kp, p_max, d = index.vectors.shape
-    flat_v = index.vectors.reshape(kp * p_max, d)
-    flat_id = index.ids.reshape(-1)
-    ok = index.valid.reshape(-1)
-    if attr_filter is not None:
-        ok = ok & attr_filter(index.attrs.reshape(kp * p_max, -1))
-    scores = pairwise_scores(q, flat_v, cfg.metric)
-    scores = mask_scores(scores, ok[None, :])
-
-    ds, di = _delta_scores(index, q, attr_filter)
-    all_s = jnp.concatenate([scores, ds], axis=-1)
-    all_i = jnp.concatenate([jnp.broadcast_to(flat_id[None, :], scores.shape), di],
-                            axis=-1)
-    s, i = topk_smallest(all_s, all_i, min(k, all_s.shape[-1]))
-    s, i = dedup_by_id(s, i)
-    return SearchResult(ids=i, scores=s)
+    intensive'); also the 100%-recall oracle for tests/benchmarks.
+    Plan: probe set = all partitions, no selection mask."""
+    return executor.search(index, queries, k=k, kind="exact",
+                           attr_filter=attr_filter, backend=backend)
 
 
-@partial(jax.jit, static_argnames=("k", "cap", "attr_filter"))
 def prefilter_search(
     index: IVFIndex,
     queries: jax.Array,
     k: int,
     attr_filter: AttrFilter,
     cap: int,
+    backend: Optional[str] = None,
 ) -> SearchResult:
     """Pre-filtering plan (paper §3.5): evaluate the predicate first, fetch
     only qualifying rows, brute-force over that subset (100% recall).
@@ -138,30 +74,8 @@ def prefilter_search(
     selectivity estimate (x safety margin). Cost scales with `cap`, i.e.
     with predicate selectivity -- matching the paper's latency behaviour.
     """
-    cfg = index.config
-    q = normalize_if_cosine(queries.astype(jnp.float32), cfg.metric)
-    kp, p_max, d = index.vectors.shape
-    n_attr = index.attrs.shape[-1]
-
-    ok = index.valid.reshape(-1) & attr_filter(index.attrs.reshape(-1, n_attr))
-    # Fixed-size compaction of qualifying row indices (device analogue of
-    # the SQLite b-tree row-id fetch).
-    (rows,) = jnp.nonzero(ok, size=cap, fill_value=kp * p_max)
-    got = rows < kp * p_max
-    rows = jnp.minimum(rows, kp * p_max - 1)
-    sub_v = index.vectors.reshape(-1, d)[rows]
-    sub_i = jnp.where(got, index.ids.reshape(-1)[rows], INVALID_ID)
-
-    scores = pairwise_scores(q, sub_v, cfg.metric)
-    scores = mask_scores(scores, got[None, :])
-
-    ds, di = _delta_scores(index, q, attr_filter)
-    all_s = jnp.concatenate([scores, ds], axis=-1)
-    all_i = jnp.concatenate([jnp.broadcast_to(sub_i[None, :], scores.shape), di],
-                            axis=-1)
-    s, i = topk_smallest(all_s, all_i, min(k, all_s.shape[-1]))
-    s, i = dedup_by_id(s, i)
-    return SearchResult(ids=i, scores=s)
+    return executor.search(index, queries, k=k, kind="prefilter",
+                           attr_filter=attr_filter, cap=cap, backend=backend)
 
 
 def recall_at_k(approx: SearchResult, exact: SearchResult, k: int) -> jax.Array:

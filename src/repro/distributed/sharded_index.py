@@ -9,8 +9,10 @@ Search is Alg. 2 run as 4 SPMD phases inside one `shard_map`:
   1. local centroid scoring        [Q, k/m] matmul per device
   2. global top-n probe selection  log-depth tournament over `model`
      (exact: the union of per-device candidates contains the global top-n)
-  3. owned-partition scan          each device MQO-scans the probed
-     partitions it owns (fixed-cap gather, selection-masked)
+  3. owned-partition scan          each device issues a local plan to the
+     unified executor's fused scan primitive (core/executor.fused_scan)
+     over the probed partitions it owns (fixed-cap probe list,
+     selection-masked) -- the same primitive as single-device search
   4. global top-k result merge     hypercube tournament over `model`
      (the paper's parallel heap merge, on ICI)
 
@@ -28,8 +30,24 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..core import executor
 from ..core import topk as topk_lib
 from ..core.types import IVFIndex, SearchResult, normalize_if_cosine
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map (>=0.5, check_vma) vs experimental shard_map
+    (0.4.x, check_rep) compatibility."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def index_shardings(index: IVFIndex, mesh: Mesh, model_axis: str = "model"):
@@ -109,23 +127,17 @@ def distributed_search(
         (plist,) = jnp.nonzero(want, size=cap, fill_value=0)
         pvalid_probe = jnp.take(want, plist)
 
-        pv = vectors[plist]                                   # [cap,p_max,d]
-        pid = ids[plist]
-        pok = valid[plist] & pvalid_probe[:, None]
         # per-query selection: query q wants local partition plist[j]?
         sel = (gi[:, None, :] == (plist[None, :, None] + me * k_local)
                ).any(-1) & mine.any(-1, keepdims=True)        # [Q, cap]
 
-        dots = jnp.einsum("qd,cpd->qcp", q, pv)
-        if cfg.metric in ("ip", "cosine"):
-            scores = -dots
-        else:
-            v2 = jnp.sum(pv * pv, axis=-1)
-            scores = v2[None] - 2.0 * dots                    # rank-equal
-        ok = pok[None] & sel[:, :, None]
-        scores = jnp.where(ok, scores, jnp.finfo(jnp.float32).max)
-        flat_s = scores.reshape(q.shape[0], -1)
-        flat_i = jnp.broadcast_to(pid.reshape(1, -1), flat_s.shape)
+        # local plan -> the unified fused scan primitive (XLA backend:
+        # shard_map bodies are already device-local XLA; scores stay in
+        # the executor's rank convention, which is rank-equal)
+        k_scan = min(k, cap * vectors.shape[1])
+        ls0, li0 = executor.fused_scan(
+            q, vectors, valid, ids, plist, k_scan, metric=cfg.metric,
+            qsel=sel & pvalid_probe[None, :], backend="xla")
 
         # delta partition: replicated, scanned once on shard 0 of the axis
         ddots = q @ dvec.T
@@ -134,10 +146,9 @@ def distributed_search(
         dok = dvalid[None, :] & (me == 0)
         dsc = jnp.where(dok, dsc, jnp.finfo(jnp.float32).max)
 
-        all_s = jnp.concatenate([flat_s, dsc], axis=-1)
-        all_i = jnp.concatenate(
-            [flat_i, jnp.broadcast_to(dids[None], dsc.shape)], axis=-1)
-        ls, li = topk_lib.topk_smallest(all_s, all_i, k)
+        ls, li = topk_lib.merge_topk(
+            ls0, li0, dsc, jnp.broadcast_to(dids[None], dsc.shape),
+            min(k, k_scan + dsc.shape[-1]))
         ls = jnp.where(li < 0, jnp.finfo(jnp.float32).max, ls)
 
         # -- phase 4: global result merge ------------------------------------
@@ -155,9 +166,8 @@ def distributed_search(
         P(None, None), P(None), P(None, None), P(None), P(),
         P(), dp,
     )
-    fs, fi = jax.shard_map(
-        local, mesh=mesh, in_specs=in_specs, out_specs=(dp, dp),
-        check_vma=False,
+    fs, fi = _shard_map(
+        local, mesh, in_specs, (dp, dp),
     )(index.centroids, index.csizes, index.vectors, index.ids, index.attrs,
       index.valid, index.counts, index.delta.vectors, index.delta.ids,
       index.delta.attrs, index.delta.valid, index.delta.count,

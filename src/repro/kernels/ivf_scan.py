@@ -15,11 +15,22 @@ realisation (DESIGN.md §2):
     a production kernel could swap in a bitonic partial sort, same
     semantics);
   * the MQO variant takes a per-(query, partition) selection mask, giving
-    the batch path (paper §3.4) the same single-pass-over-HBM property.
+    the batch path (paper §3.4) the same single-pass-over-HBM property;
+  * attribute-filter fusion (paper §3.5): when a compiled predicate is
+    passed, the partition's attrs block streams alongside the vectors and
+    the predicate is evaluated *inside* the kernel, masking rows before
+    they ever enter the running top-k -- "filtered before being considered
+    in the top-K computation", with no separate XLA gather pass.
 
 Grid: one step per probed partition; queries/outputs live fully in VMEM.
-VMEM per step ~ Q*d + p_max*d + 2*Q*K floats -- p_max (balanced!) and Q
-tile sizes are chosen so this fits the ~16 MB/core budget.
+VMEM per step ~ Q*d + p_max*d + p_max*n_attr + 2*Q*K floats -- p_max
+(balanced!) and Q tile sizes are chosen so this fits the ~16 MB/core
+budget.
+
+`interpret` is auto-selected from the runtime backend (interpret mode
+everywhere except real TPU); callers can still force it either way.
+This module is the Pallas backend of core/executor.py -- the engine
+never calls it directly.
 """
 from __future__ import annotations
 
@@ -58,10 +69,14 @@ def _merge_topk(run_s, run_i, cand_s, cand_i, k_out: int):
 
 
 def _scan_kernel(part_ids_ref,               # scalar prefetch [n]
-                 q_ref, v_ref, valid_ref, ids_ref, qsel_ref,
-                 out_s_ref, out_i_ref,
-                 run_s, run_i,
-                 *, k_out: int, metric: str, mqo: bool):
+                 *refs,
+                 k_out: int, metric: str, mqo: bool, attr_filter):
+    if attr_filter is not None:
+        (q_ref, v_ref, valid_ref, ids_ref, qsel_ref, attrs_ref,
+         out_s_ref, out_i_ref, run_s, run_i) = refs
+    else:
+        (q_ref, v_ref, valid_ref, ids_ref, qsel_ref,
+         out_s_ref, out_i_ref, run_s, run_i) = refs
     i = pl.program_id(0)
     n = pl.num_programs(0)
 
@@ -80,6 +95,9 @@ def _scan_kernel(part_ids_ref,               # scalar prefetch [n]
     else:
         scores = -dots
     ok = valid_ref[0][None, :] != 0                  # [1, p_max]
+    if attr_filter is not None:
+        # fused predicate: [p_max, n_attr] attrs block -> [p_max] keep mask
+        ok = ok & attr_filter(attrs_ref[0])[None, :]
     if mqo:
         ok = ok & (qsel_ref[:, i][:, None] != 0)     # [Q, 1]
     scores = jnp.where(ok, scores, MASKED)
@@ -97,6 +115,11 @@ def _scan_kernel(part_ids_ref,               # scalar prefetch [n]
         out_i_ref[...] = run_i[...]
 
 
+def default_interpret() -> bool:
+    """Interpret everywhere except a real TPU backend (auto-selection)."""
+    return jax.default_backend() != "tpu"
+
+
 def ivf_scan_topk(
     queries: jax.Array,          # [Q, d]
     vectors: jax.Array,          # [k, p_max, d]
@@ -106,8 +129,12 @@ def ivf_scan_topk(
     k_out: int,
     metric: str = "l2",
     qsel: Optional[jax.Array] = None,   # [Q, n] bool (MQO mask)
-    interpret: bool = True,
+    attrs: Optional[jax.Array] = None,  # [k, p_max, n_attr] f32
+    attr_filter=None,                   # compiled predicate (hybrid.py)
+    interpret: Optional[bool] = None,   # None: auto by backend
 ) -> Tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = default_interpret()
     kp, p_max, d = vectors.shape
     q_n = queries.shape[0]
     n = part_ids.shape[0]
@@ -115,16 +142,26 @@ def ivf_scan_topk(
     if qsel is None:
         qsel = jnp.ones((q_n, n), jnp.int8)
 
+    in_specs = [
+        pl.BlockSpec((q_n, d), lambda i, pids: (0, 0)),
+        pl.BlockSpec((1, p_max, d), lambda i, pids: (pids[i], 0, 0)),
+        pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)),
+        pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)),
+        pl.BlockSpec((q_n, n), lambda i, pids: (0, 0)),
+    ]
+    inputs = [queries, vectors, valid.astype(jnp.int8),
+              ids.astype(jnp.int32), qsel.astype(jnp.int8)]
+    if attr_filter is not None:
+        assert attrs is not None, "attr_filter needs the attrs tensor"
+        n_attr = attrs.shape[-1]
+        in_specs.append(
+            pl.BlockSpec((1, p_max, n_attr), lambda i, pids: (pids[i], 0, 0)))
+        inputs.append(attrs.astype(jnp.float32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n,),
-        in_specs=[
-            pl.BlockSpec((q_n, d), lambda i, pids: (0, 0)),
-            pl.BlockSpec((1, p_max, d), lambda i, pids: (pids[i], 0, 0)),
-            pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)),
-            pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)),
-            pl.BlockSpec((q_n, n), lambda i, pids: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((q_n, k_out), lambda i, pids: (0, 0)),
             pl.BlockSpec((q_n, k_out), lambda i, pids: (0, 0)),
@@ -135,7 +172,8 @@ def ivf_scan_topk(
         ],
     )
     kernel = pl.pallas_call(
-        functools.partial(_scan_kernel, k_out=k_out, metric=metric, mqo=mqo),
+        functools.partial(_scan_kernel, k_out=k_out, metric=metric, mqo=mqo,
+                          attr_filter=attr_filter),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((q_n, k_out), jnp.float32),
@@ -143,6 +181,4 @@ def ivf_scan_topk(
         ],
         interpret=interpret,
     )
-    return tuple(kernel(part_ids.astype(jnp.int32), queries, vectors,
-                        valid.astype(jnp.int8), ids.astype(jnp.int32),
-                        qsel.astype(jnp.int8)))
+    return tuple(kernel(part_ids.astype(jnp.int32), *inputs))

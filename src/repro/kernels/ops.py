@@ -1,8 +1,12 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-`interpret` defaults to True (this container is CPU-only; interpret mode
-executes the kernel bodies exactly). On TPU hardware pass interpret=False
--- the BlockSpecs/grids are written for real VMEM tiling.
+`interpret=None` auto-selects by backend (interpret everywhere except a
+real TPU -- this container is CPU-only; interpret mode executes the
+kernel bodies exactly). On TPU hardware the BlockSpecs/grids are written
+for real VMEM tiling and compile natively.
+
+These wrappers are the Pallas backend of core/executor.py's fused scan;
+engine code routes through the executor, not through this module.
 """
 from __future__ import annotations
 
@@ -17,21 +21,27 @@ from . import kmeans_assign as _km
 from ..core.types import IVFIndex
 
 
-@partial(jax.jit, static_argnames=("k_out", "metric", "interpret"))
+@partial(jax.jit, static_argnames=("k_out", "metric", "attr_filter",
+                                   "interpret"))
 def scan_topk(queries, vectors, valid, ids, part_ids, k_out: int,
-              metric: str = "l2", interpret: bool = True):
-    """Fused partition-scan + top-k (Alg. 2 hot loop)."""
+              metric: str = "l2", attrs=None, attr_filter=None,
+              interpret: Optional[bool] = None):
+    """Fused partition-scan + top-k (Alg. 2 hot loop), optional fused
+    attribute predicate (paper §3.5)."""
     return _ivf.ivf_scan_topk(queries, vectors, valid, ids, part_ids,
-                              k_out, metric=metric, interpret=interpret)
+                              k_out, metric=metric, attrs=attrs,
+                              attr_filter=attr_filter, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("k_out", "metric", "interpret"))
+@partial(jax.jit, static_argnames=("k_out", "metric", "attr_filter",
+                                   "interpret"))
 def scan_topk_mqo(queries, vectors, valid, ids, part_ids, qsel,
-                  k_out: int, metric: str = "l2", interpret: bool = True):
+                  k_out: int, metric: str = "l2", attrs=None,
+                  attr_filter=None, interpret: Optional[bool] = None):
     """MQO variant: qsel [Q, n] masks which query wants which partition."""
     return _ivf.ivf_scan_topk(queries, vectors, valid, ids, part_ids,
-                              k_out, metric=metric, qsel=qsel,
-                              interpret=interpret)
+                              k_out, metric=metric, qsel=qsel, attrs=attrs,
+                              attr_filter=attr_filter, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("balance_weight", "target_size",
@@ -47,10 +57,10 @@ def assign_nearest(batch, centroids, counts, *, balance_weight: float = 0.0,
 
 
 def index_scan_topk(index: IVFIndex, queries: jax.Array, k_out: int,
-                    n_probe: int, interpret: bool = True):
+                    n_probe: int, interpret: Optional[bool] = None):
     """Kernel-backed Alg. 2 over an IVFIndex (no delta / no filters --
-    integration helpers live in core.search which handles those)."""
-    from ..core.search import find_nearest_centroids
+    the full integration lives in core.executor which handles those)."""
+    from ..core.executor import find_nearest_centroids
     parts = find_nearest_centroids(index, queries, n_probe)
     # kernel scans one shared probe list; per-query probe sets use the MQO
     # mask over the union

@@ -27,7 +27,8 @@ import numpy as np
 
 
 def _leaf_paths(tree) -> Dict[str, Any]:
-    flat = jax.tree.flatten_with_path(tree)[0]
+    # tree_util spelling: jax.tree.flatten_with_path only exists on newer jax
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
         key = "/".join(

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import delta as delta_ops
-from ..core import ivf, maintenance, mqo, search
+from ..core import executor, ivf, maintenance
 from ..core.hybrid import AttributeStats, Node, compile_filter
 from ..core.monitor import IndexMonitor, MonitorConfig
 from ..core.optimizer import HybridOptimizer
@@ -139,19 +139,25 @@ class MicroNN:
     # -- queries --------------------------------------------------------------
     def search(self, queries: np.ndarray, k: int = 100, n_probe: int = 8,
                predicate: Optional[Node] = None, exact: bool = False,
-               batch_mqo: Optional[bool] = None) -> SearchResult:
+               batch_mqo: Optional[bool] = None,
+               backend: Optional[str] = None) -> SearchResult:
+        """Every path compiles to a QueryPlan run by core/executor.py's
+        fused scan; the executor's query-count bucketing means a stream of
+        variable-size batches compiles once per bucket, not per call.
+        `batch_mqo` is kept for API compatibility -- a batched ANN plan
+        *is* the MQO shared scan (same union + selection mask)."""
         assert self.index is not None, "build() or recover() first"
+        del batch_mqo
         q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
         if predicate is not None:
             res, _ = self.optimizer.execute(
-                self.index, q, predicate, k, n_probe,
-                use_mqo=bool(batch_mqo))
+                self.index, q, predicate, k, n_probe, backend=backend)
             return res
         if exact:
-            return search.exact_search(self.index, q, k)
-        if batch_mqo or (batch_mqo is None and q.shape[0] >= 16):
-            return mqo.mqo_search(self.index, q, k, n_probe)
-        return search.ann_search(self.index, q, k, n_probe)
+            return executor.search(self.index, q, k=k, kind="exact",
+                                   backend=backend)
+        return executor.search(self.index, q, k=k, kind="ann",
+                               n_probe=n_probe, backend=backend)
 
     # -- helpers --------------------------------------------------------------
     def _refresh_stats(self):

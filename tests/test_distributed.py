@@ -19,14 +19,20 @@ from repro.core import ivf, search
 from repro.core.types import IVFConfig
 from repro.distributed.sharded_index import distributed_search, index_shardings
 
+if jax.device_count() < 8:   # XLA flag ignored (e.g. real accelerator host)
+    print("RESULT SKIP single-device host")
+    raise SystemExit(0)
 out = {}
 rng = np.random.default_rng(0)
 centers = rng.normal(size=(16, 32)) * 5
 X = (centers[rng.integers(0, 16, 2048)] + rng.normal(size=(2048, 32))).astype(np.float32)
 cfg = IVFConfig(dim=32, target_partition_size=64, kmeans_iters=40, delta_capacity=128)
 idx = ivf.build_index(X, cfg=cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+try:    # jax >= 0.5 wants explicit axis types; 0.4.x has neither kwarg
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+except (AttributeError, TypeError):
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
 Q = jnp.asarray(X[:8] + 0.05 * rng.normal(size=(8, 32)).astype(np.float32))
 ref = search.ann_search(idx, Q, 10, n_probe=6)
 for merge in ("tournament", "allgather"):
@@ -49,7 +55,10 @@ shape = ShapeConfig("t", "train", 32, 8)
 lw = steps.train_lowerable(arch, shape, mesh, scan=False)
 lowered = steps.lower(lw, mesh)
 compiled = lowered.compile()
-out["train_flops"] = compiled.cost_analysis()["flops"]
+ca = compiled.cost_analysis()
+if isinstance(ca, (list, tuple)):   # jax 0.4.x returns [dict]
+    ca = ca[0]
+out["train_flops"] = ca["flops"]
 
 # run it with real (randomly initialised) values
 from repro.models import init_model
@@ -73,7 +82,10 @@ def dist_result():
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
     assert line, proc.stdout
-    return json.loads(line[-1][len("RESULT "):])
+    payload = line[-1][len("RESULT "):]
+    if payload.startswith("SKIP"):
+        pytest.skip(payload)
+    return json.loads(payload)
 
 
 def test_distributed_matches_single_device(dist_result):

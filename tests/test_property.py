@@ -1,7 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import delta, ivf, search
 from repro.core.hybrid import AttributeStats, Pred

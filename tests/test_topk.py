@@ -1,7 +1,10 @@
 """Top-k merge algebra + hypothesis property tests."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import topk
 from repro.core.types import INVALID_ID
