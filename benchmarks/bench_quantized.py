@@ -1,0 +1,81 @@
+"""Quantized tier: recall@100 + resident index bytes, float32 vs int8.
+
+The paper's memory headline (top-100 @ 90% recall in ~10 MB at million
+scale) rests on scanning compact codes and reranking at full precision.
+This section measures the reproduction of that trade-off on synthetic
+clustered data:
+
+  * resident scan-tier bytes: int8 codes vs float32 vectors (the codes
+    must come in at ~25% -- acceptance bound <= 30%);
+  * recall@100 of the int8 scan + float32 rerank against the float32
+    ANN path on the *same* plans, at rerank_factor in {1, 2, 4};
+  * latency of both tiers at the same n_probe.
+
+`--smoke` shrinks the dataset so scripts/ci.sh can run this as a fast
+regression gate (the quantized path must not silently rot).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor, ivf
+from repro.core.types import IVFConfig
+
+from .common import _recall, emit, timeit
+
+
+def main(smoke: bool = False):
+    rng = np.random.default_rng(0)
+    n, d, n_centers = (3000, 32, 12) if smoke else (20000, 64, 40)
+    n_q, k, n_probe = (16, 20, 4) if smoke else (64, 100, 8)
+    centers = rng.normal(size=(n_centers, d)).astype(np.float32) * 5
+    X = (centers[rng.integers(0, n_centers, n)]
+         + rng.normal(size=(n, d))).astype(np.float32)
+    cfg = IVFConfig(dim=d, target_partition_size=100,
+                    kmeans_iters=10 if smoke else 20,
+                    quantize="int8", rerank_factor=4)
+    idx = ivf.build_index(X, cfg=cfg)
+    q = jnp.asarray(X[:n_q])
+
+    # -- resident scan-tier bytes (the paper's memory axis) -----------------
+    vec_bytes = idx.vectors.nbytes
+    code_bytes = idx.codes.nbytes + idx.qstats.lo.nbytes + \
+        idx.qstats.scale.nbytes
+    emit("sq_resident_bytes", 0.0,
+         f"codes_mb={code_bytes / 2**20:.2f};f32_mb={vec_bytes / 2**20:.2f};"
+         f"ratio={code_bytes / vec_bytes:.3f}")
+
+    # -- recall + latency: float32 tier vs int8 tier at rerank factors ------
+    r_f32 = executor.search(idx, q, k=k, n_probe=n_probe, quantized=False)
+    us_f32 = timeit(lambda: executor.search(idx, q, k=k, n_probe=n_probe,
+                                            quantized=False))
+    emit(f"sq_f32_scan_k{k}", us_f32, "recall=1.000(reference)")
+    ref_ids = np.asarray(r_f32.ids)
+    recalls = {}
+    for rf in (1, 2, 4):
+        idx_rf = dataclasses.replace(
+            idx, config=dataclasses.replace(cfg, rerank_factor=rf))
+        r = executor.search(idx_rf, q, k=k, n_probe=n_probe, quantized=True)
+        recalls[rf] = _recall(np.asarray(r.ids), ref_ids, k)
+        us = timeit(lambda: executor.search(idx_rf, q, k=k, n_probe=n_probe,
+                                            quantized=True))
+        emit(f"sq_int8_rerank{rf}_k{k}", us,
+             f"recall_at_{k}={recalls[rf]:.3f};vs_f32={us_f32 / us:.2f}x")
+
+    # acceptance gate (scripts/ci.sh --smoke): the quantized path must not
+    # silently rot -- fail loud on the memory ratio or the recall pin
+    assert code_bytes / vec_bytes <= 0.30, \
+        f"code tier too large: {code_bytes / vec_bytes:.3f} > 0.30"
+    assert recalls[4] >= 0.95, \
+        f"int8+rerank4 recall@{k}={recalls[4]:.3f} < 0.95 vs the f32 path"
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for the CI regression gate")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

@@ -15,7 +15,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_build, bench_e2e, bench_executor, bench_hybrid,
-                   bench_minibatch, bench_mqo, bench_roofline, bench_updates)
+                   bench_minibatch, bench_mqo, bench_quantized,
+                   bench_roofline, bench_updates)
     sections = {
         "fig4_5_e2e": bench_e2e.main,
         "fig6_build": bench_build.main,
@@ -25,6 +26,7 @@ def main() -> None:
         "fig10_updates": bench_updates.main,
         "roofline": bench_roofline.main,
         "executor": bench_executor.main,
+        "quantized": bench_quantized.main,
     }
     print("name,us_per_call,derived")
     failed = 0

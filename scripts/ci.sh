@@ -5,4 +5,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -c "import repro; print('import ok:', repro.__name__)"
+# fast regression gate for the int8 scalar-quantization tier (recall +
+# resident-bytes rows; fails loud if the quantized path rots)
+python -m benchmarks.bench_quantized --smoke
 python -m pytest -q "$@"

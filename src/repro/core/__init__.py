@@ -9,17 +9,18 @@
   delta        -- streaming upsert / delete via delta-store (C6)
   maintenance  -- incremental flush + full rebuild (C6)
   monitor      -- index-quality tracking + maintenance triggers (C6)
+  quantize     -- int8 scalar-quantization tier (codes + rerank contract)
   topk         -- running top-k + cross-device tournament merge
   rag          -- kNN-LM integration with the model zoo
 """
 from . import (delta, hybrid, ivf, kmeans, maintenance, monitor, mqo,
-               optimizer, rag, search, topk)
+               optimizer, quantize, rag, search, topk)
 from .types import (DeltaStore, IVFConfig, IVFIndex, SearchResult,
                     INVALID_ID, pairwise_scores, normalize_if_cosine)
 
 __all__ = [
     "delta", "hybrid", "ivf", "kmeans", "maintenance", "monitor", "mqo",
-    "optimizer", "rag", "search", "topk",
+    "optimizer", "quantize", "rag", "search", "topk",
     "DeltaStore", "IVFConfig", "IVFIndex", "SearchResult", "INVALID_ID",
     "pairwise_scores", "normalize_if_cosine",
 ]

@@ -17,11 +17,13 @@ multi-reader regime.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from . import quantize
 from .types import DeltaStore, INVALID_ID, IVFIndex, normalize_if_cosine
 
 
@@ -56,20 +58,22 @@ def upsert(index: IVFIndex, vecs: jax.Array, ids: jax.Array,
     new_valid, new_counts = _tombstone_main(index, ids)
     dvalid = _tombstone_delta(d, ids)
 
-    # 2. append at the write cursor
+    # 2. append at the write cursor (quantized tier: encode on insert, so
+    # flush_delta can move codes verbatim instead of re-deriving them)
     slots = d.count + jnp.arange(B, dtype=jnp.int32)
+    new_codes = d.codes
+    if index.qstats is not None and d.codes is not None:
+        new_codes = d.codes.at[slots].set(quantize.encode(index.qstats, vecs))
     new_delta = DeltaStore(
         vectors=d.vectors.at[slots].set(vecs),
         ids=d.ids.at[slots].set(ids.astype(jnp.int32)),
         attrs=d.attrs.at[slots].set(attrs.astype(jnp.float32)),
         valid=dvalid.at[slots].set(True),
         count=d.count + B,
+        codes=new_codes,
     )
-    return IVFIndex(
-        centroids=index.centroids, csizes=index.csizes,
-        vectors=index.vectors, ids=index.ids, attrs=index.attrs,
-        valid=new_valid, counts=new_counts, delta=new_delta,
-        base_mean_size=index.base_mean_size, config=cfg)
+    return dataclasses.replace(index, valid=new_valid, counts=new_counts,
+                               delta=new_delta)
 
 
 @jax.jit
@@ -77,14 +81,9 @@ def delete(index: IVFIndex, ids: jax.Array) -> IVFIndex:
     """Tombstone a batch of asset ids (no-op for unknown ids)."""
     new_valid, new_counts = _tombstone_main(index, ids)
     dvalid = _tombstone_delta(index.delta, ids)
-    d = index.delta
-    return IVFIndex(
-        centroids=index.centroids, csizes=index.csizes,
-        vectors=index.vectors, ids=index.ids, attrs=index.attrs,
-        valid=new_valid, counts=new_counts,
-        delta=DeltaStore(vectors=d.vectors, ids=d.ids, attrs=d.attrs,
-                         valid=dvalid, count=d.count),
-        base_mean_size=index.base_mean_size, config=index.config)
+    return dataclasses.replace(
+        index, valid=new_valid, counts=new_counts,
+        delta=dataclasses.replace(index.delta, valid=dvalid))
 
 
 def delta_free_slots(index: IVFIndex) -> int:

@@ -14,7 +14,16 @@ Module map -- who builds plans, who runs them:
     distributed/        sharded_index phase 3 calls fused_scan directly
                         on each device's local partition shard
     kernels/ivf_scan.py the Pallas TPU backend of fused_scan
+    kernels/sq_scan.py  the Pallas backend of fused_sq_scan (int8 codes,
+                        dequantize fused into the distance accumulation)
     benchmarks/bench_executor.py   backend + plan-cache latency
+    benchmarks/bench_quantized.py  int8-vs-f32 recall / memory / latency
+
+Quantized two-stage execution (core/quantize.py): on an index carrying
+int8 codes, ann/exact plans scan the code tier for k' = rerank_factor * k
+candidate rows, then _rerank_float32 rescores exactly those rows at full
+precision before the final top-k; prefilter plans and the delta epilogue
+stay float32.
 
 Plan model (paper Alg. 2 generalised):
     probe set         part_ids [n]  -- shared partition scan list
@@ -48,6 +57,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import quantize
 from .topk import dedup_by_id, mask_scores, merge_topk, topk_smallest
 from .types import (INVALID_ID, MASKED_SCORE, IVFIndex, SearchResult,
                     normalize_if_cosine, pairwise_scores, register_dataclass,
@@ -204,15 +214,13 @@ def fused_scan(
                      attr_filter=attr_filter)
 
 
-def _xla_scan(queries, vectors, valid, ids, part_ids, k_out, *, metric,
-              qsel=None, attrs=None, attr_filter=None):
-    """Shape-identical XLA reference backend: gather the probe union once
-    ([n, p_max, d] -- NOT per query), one [Q, d] x [d, n*p_max] matmul."""
-    pv = vectors[part_ids]                          # [n, p_max, d]
-    pid = ids[part_ids]                             # [n, p_max]
-    pok = valid[part_ids]
+def _xla_scan_gathered(queries, pv, pok, pid, k_out, *, metric, qsel=None,
+                       pattrs=None, attr_filter=None):
+    """Shared core of the XLA reference backends, over the already-
+    gathered probe union ([n, p_max, d]): one [Q, d] x [d, n*p_max]
+    matmul, predicate + selection masking, top-k."""
     if attr_filter is not None:
-        pok = pok & attr_filter(attrs[part_ids])
+        pok = pok & attr_filter(pattrs)
     n, p_max, d = pv.shape
     flat_v = pv.reshape(n * p_max, d)
     dots = queries @ flat_v.T                       # [Q, n*p_max]
@@ -227,6 +235,64 @@ def _xla_scan(queries, vectors, valid, ids, part_ids, k_out, *, metric,
     scores = mask_scores(scores, ok)
     return topk_smallest(
         scores, jnp.broadcast_to(pid.reshape(1, -1), scores.shape), k_out)
+
+
+def _xla_scan(queries, vectors, valid, ids, part_ids, k_out, *, metric,
+              qsel=None, attrs=None, attr_filter=None):
+    """Shape-identical XLA reference backend: gather the probe union once
+    ([n, p_max, d] -- NOT per query), then the shared scan core."""
+    return _xla_scan_gathered(
+        queries, vectors[part_ids], valid[part_ids], ids[part_ids], k_out,
+        metric=metric, qsel=qsel,
+        pattrs=None if attr_filter is None else attrs[part_ids],
+        attr_filter=attr_filter)
+
+
+def fused_sq_scan(
+    queries: jax.Array,          # [Q, d] f32 (normalised)
+    codes: jax.Array,            # [kp, p_max, d] int8
+    qstats,                      # quantize.QuantStats
+    valid: jax.Array,            # [kp, p_max] bool
+    ids: jax.Array,              # [kp, p_max] int32 (flat row ids here)
+    part_ids: jax.Array,         # [n] int32 probe list
+    k_out: int,
+    *,
+    metric: str = "l2",
+    qsel: Optional[jax.Array] = None,
+    attrs: Optional[jax.Array] = None,
+    attr_filter: Optional[AttrFilter] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Candidate stage of the quantized two-stage search: the fused scan
+    over the int8 code tier (dequantization fused into the distance
+    accumulation). Same plan shape as fused_scan; scores are approximate
+    (quantized reconstruction) and only used to *select* the k_out
+    candidates that _rerank_float32 rescores exactly."""
+    if backend is None:
+        backend = default_backend()
+    if backend == "pallas":
+        from ..kernels import sq_scan
+        return sq_scan.sq_scan_topk(
+            queries, codes, qstats.lo, qstats.scale, valid, ids, part_ids,
+            k_out, metric=metric, qsel=qsel, attrs=attrs,
+            attr_filter=attr_filter, interpret=None)
+    assert backend == "xla", backend
+    return _xla_sq_scan(queries, codes, qstats, valid, ids, part_ids, k_out,
+                        metric=metric, qsel=qsel, attrs=attrs,
+                        attr_filter=attr_filter)
+
+
+def _xla_sq_scan(queries, codes, qstats, valid, ids, part_ids, k_out, *,
+                 metric, qsel=None, attrs=None, attr_filter=None):
+    """Shape-identical XLA reference for the SQ scan: gather the probe
+    union's int8 codes, dequantize, then the same shared scan core as
+    the float32 reference."""
+    return _xla_scan_gathered(
+        queries, quantize.decode(qstats, codes[part_ids]),
+        valid[part_ids], ids[part_ids], k_out,
+        metric=metric, qsel=qsel,
+        pattrs=None if attr_filter is None else attrs[part_ids],
+        attr_filter=attr_filter)
 
 
 # ---------------------------------------------------------------------------
@@ -250,13 +316,56 @@ def _delta_candidates(index: IVFIndex, q: jax.Array,
         d.ids[None, :], scores.shape)
 
 
+def _rerank_float32(index: IVFIndex, q: jax.Array, rows: jax.Array,
+                    k_out: int):
+    """Stage 2 of the quantized path: gather the candidate rows' float32
+    vectors (the durable-precision tier) and recompute exact distances.
+
+    `rows` are flat row indices (partition * p_max + slot) emitted by the
+    SQ scan, INVALID_ID where the scan found fewer than k' candidates.
+    Gather cost is O(Q * k' * d) -- independent of the scan width, which
+    is the point of scanning codes.
+    """
+    kp, p_max, d = index.vectors.shape
+    total = kp * p_max
+    got = rows != INVALID_ID
+    r = jnp.clip(rows, 0, total - 1)
+    v = index.vectors.reshape(total, d)[r]           # [Q, k', d]
+    ids = index.ids.reshape(total)[r]                # [Q, k']
+    dots = jnp.einsum("qd,qcd->qc", q, v)
+    if index.config.metric in ("ip", "cosine"):
+        s = -dots
+    else:
+        s = jnp.sum(v * v, axis=-1) - 2.0 * dots
+    s = mask_scores(s, got)
+    ids = jnp.where(got, ids, INVALID_ID)
+    return topk_smallest(s, ids, k_out)
+
+
 def execute_plan(index: IVFIndex, plan: QueryPlan,
-                 backend: Optional[str] = None) -> SearchResult:
-    """Run a QueryPlan through the fused scan primitive + delta epilogue."""
+                 backend: Optional[str] = None,
+                 quantized: Optional[bool] = None) -> SearchResult:
+    """Run a QueryPlan through the fused scan primitive + delta epilogue.
+
+    `quantized` selects the scan tier on an index carrying int8 codes:
+    None (default) auto-uses the codes when present; False forces the
+    float32 scan (parity tests / benchmarks); True asserts codes exist.
+    The quantized path is two-stage: the SQ scan over-fetches
+    k' = rerank_factor * k candidate *rows*, then _rerank_float32
+    rescores exactly before the final top-k. Only "ann" plans use the
+    code tier: prefilter plans already gather float32 rows, and "exact"
+    plans keep their 100%-recall oracle contract (brute force over the
+    float32 tier) even on a quantized index.
+    """
     cfg = index.config
     q = plan.queries
     kp, p_max, d = index.vectors.shape
     f = plan.attr_filter
+    if quantized is None:
+        quantized = index.codes is not None
+    elif quantized:
+        assert index.codes is not None, "quantized=True needs index codes"
+    use_sq = quantized and plan.kind == "ann"
 
     if plan.kind == "prefilter":
         # Repack the qualifying rows into virtual partitions so the same
@@ -279,6 +388,27 @@ def execute_plan(index: IVFIndex, plan: QueryPlan,
             sub_i.reshape(vparts, p_max),
             jnp.arange(vparts, dtype=jnp.int32), k_scan,
             metric=cfg.metric, backend=backend)
+    elif use_sq:
+        # Two-stage quantized search: (1) fused SQ scan over int8 codes
+        # selects k' = rerank_factor * k candidate rows; (2) exact f32
+        # rerank over just those rows.
+        n = plan.part_ids.shape[0]
+        k_cand = min(max(plan.k, plan.k * cfg.rerank_factor), n * p_max)
+        row_ids = jnp.arange(kp * p_max, dtype=jnp.int32).reshape(kp, p_max)
+        cand_s, cand_rows = fused_sq_scan(
+            q, index.codes, index.qstats, index.valid, row_ids,
+            plan.part_ids, k_cand, metric=cfg.metric, qsel=plan.qsel,
+            attrs=index.attrs if f is not None else None,
+            attr_filter=f, backend=backend)
+        # fewer than k' qualifying rows: the Pallas running-merge re-emits
+        # an already-extracted row id (argmin over an all-MASKED buffer)
+        # for the exhausted rounds. The f32 path neutralises those via
+        # topk_smallest's score-based invalidation; here the rows feed the
+        # rerank directly, so invalidate by score first or the rerank
+        # would resurrect them as real (duplicate) candidates.
+        cand_rows = jnp.where(cand_s >= MASKED_SCORE, INVALID_ID, cand_rows)
+        k_scan = min(plan.k, k_cand)
+        s, i = _rerank_float32(index, q, cand_rows, k_scan)
     else:
         n = plan.part_ids.shape[0]
         k_scan = min(plan.k, n * p_max)
@@ -306,9 +436,9 @@ def execute_plan(index: IVFIndex, plan: QueryPlan,
 
 
 @partial(jax.jit, static_argnames=("kind", "k", "n_probe", "u_max", "cap",
-                                   "attr_filter", "backend"))
+                                   "attr_filter", "backend", "quantized"))
 def _run(index, queries, qmask, kind, k, n_probe, u_max, cap, attr_filter,
-         backend):
+         backend, quantized):
     global _TRACE_COUNT
     _TRACE_COUNT += 1          # executes only while tracing
     if kind == "exact":
@@ -318,7 +448,7 @@ def _run(index, queries, qmask, kind, k, n_probe, u_max, cap, attr_filter,
     else:
         plan = plan_ann(index, queries, k, n_probe, attr_filter,
                         u_max=u_max, qmask=qmask)
-    return execute_plan(index, plan, backend=backend)
+    return execute_plan(index, plan, backend=backend, quantized=quantized)
 
 
 def _bucket(n: int) -> int:
@@ -336,15 +466,20 @@ def search(
     cap: Optional[int] = None,         # prefilter gather budget
     attr_filter: Optional[AttrFilter] = None,
     backend: Optional[str] = None,
+    quantized: Optional[bool] = None,  # None: auto (codes present)
     bucket: bool = True,
 ) -> SearchResult:
     """Build + execute a QueryPlan with query-count bucketing.
 
     Q is padded to the next power of two so the jit cache is keyed on
-    (Q_bucket, kind, k, n_probe/u_max/cap, predicate_id, backend) -- a
-    stream of variable-size batches compiles once per bucket, not once
-    per batch size. Padding queries are masked out of the plan (qmask)
-    and their result rows sliced off.
+    (Q_bucket, kind, k, n_probe/u_max/cap, predicate_id, backend,
+    quantized) -- a stream of variable-size batches compiles once per
+    bucket, not once per batch size. Padding queries are masked out of
+    the plan (qmask) and their result rows sliced off. `quantized` is
+    the scan-tier dimension of the cache key: the same index can serve
+    int8-scan and float32-scan plans side by side without retracing
+    (the index pytree structure -- codes present or not -- is itself
+    part of jit's implicit key).
     """
     if kind == "prefilter":
         assert cap is not None, "kind='prefilter' needs a static cap " \
@@ -357,7 +492,7 @@ def search(
         q = jnp.concatenate([q, jnp.zeros((b - Q, q.shape[1]), q.dtype)])
     qmask = jnp.arange(b) < Q
     res = _run(index, q, qmask, kind, k, n_probe, u_max, cap, attr_filter,
-               backend)
+               backend, quantized)
     if b != Q:
         res = SearchResult(ids=res.ids[:Q], scores=res.scores[:Q])
     return res

@@ -9,13 +9,14 @@ the padding overhead small (measured in benchmarks/bench_build.py).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import kmeans
+from . import kmeans, quantize
 from .types import (DeltaStore, INVALID_ID, IVFConfig, IVFIndex,
                     normalize_if_cosine)
 
@@ -28,10 +29,14 @@ def pack_partitions(
     k: int,
     pad_to: int = 8,
     p_max: Optional[int] = None,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    codes: Optional[np.ndarray] = None,  # [n, d] int8 SQ codes or None
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+           Optional[np.ndarray]]:
     """Repack rows into the padded partition-major layout (host-side op --
     this is the 'disk reorganisation' tier; SQLite does the same job with a
-    clustered index ORDER BY partition_id)."""
+    clustered index ORDER BY partition_id). When `codes` is given the int8
+    code tier is packed row-for-row with the vectors (same slots), so the
+    SQ scan and the rerank gather agree on row placement."""
     n, d = X.shape
     n_attr = 0 if attrs is None else attrs.shape[1]
     attrs = np.zeros((n, 0), np.float32) if attrs is None else attrs
@@ -44,6 +49,7 @@ def pack_partitions(
     vid = np.full((k, p_max), INVALID_ID, np.int32)
     vat = np.zeros((k, p_max, n_attr), np.float32)
     val = np.zeros((k, p_max), bool)
+    cod = None if codes is None else np.zeros((k, p_max, d), np.int8)
 
     order = np.argsort(assign, kind="stable")
     slot = np.zeros(k, np.int64)
@@ -56,8 +62,10 @@ def pack_partitions(
         vid[p, s] = ids[row]
         vat[p, s] = attrs[row]
         val[p, s] = True
+        if cod is not None:
+            cod[p, s] = codes[row]
         slot[p] = s + 1
-    return vec, vid, vat, val, counts
+    return vec, vid, vat, val, counts, cod
 
 
 def build_index(
@@ -66,18 +74,32 @@ def build_index(
     attrs: Optional[np.ndarray] = None,
     cfg: Optional[IVFConfig] = None,
     k: Optional[int] = None,
+    qstats: Optional[quantize.QuantStats] = None,
 ) -> IVFIndex:
-    """Full index build: Alg. 1 clustering + partition-major packing."""
+    """Full index build: Alg. 1 clustering + partition-major packing.
+
+    With cfg.quantize == "int8" the build also trains the scalar quantizer
+    (unless pre-trained stats are passed, e.g. streamed from the durable
+    store) and encodes every row into the code tier.
+    """
     cfg = cfg or IVFConfig(dim=X.shape[1])
     X = np.asarray(
         normalize_if_cosine(jnp.asarray(X, jnp.float32), cfg.metric))
     n = X.shape[0]
     ids = np.arange(n, dtype=np.int32) if ids is None else ids.astype(np.int32)
 
+    codes = None
+    if cfg.quantize == "int8":
+        if qstats is None:
+            qstats = quantize.train(jnp.asarray(X))
+        codes = quantize.encode_np(qstats, X)
+    else:
+        qstats = None
+
     centroids, csizes, assign = kmeans.fit_in_memory(X, cfg, k=k)
     k = centroids.shape[0]
-    vec, vid, vat, val, counts = pack_partitions(
-        X, ids, attrs, assign, k, pad_to=cfg.pad_to)
+    vec, vid, vat, val, counts, cod = pack_partitions(
+        X, ids, attrs, assign, k, pad_to=cfg.pad_to, codes=codes)
 
     n_attr = vat.shape[-1]
     return IVFIndex(
@@ -88,8 +110,11 @@ def build_index(
         attrs=jnp.asarray(vat),
         valid=jnp.asarray(val),
         counts=jnp.asarray(counts),
-        delta=DeltaStore.empty(cfg.delta_capacity, X.shape[1], n_attr),
+        delta=DeltaStore.empty(cfg.delta_capacity, X.shape[1], n_attr,
+                               quantized=cod is not None),
         base_mean_size=jnp.asarray(counts.mean() if n else 0.0, jnp.float32),
+        codes=None if cod is None else jnp.asarray(cod),
+        qstats=qstats,
         config=cfg,
     )
 
@@ -105,15 +130,11 @@ def grow_layout(index: IVFIndex, new_p_max: int) -> IVFIndex:
         widths = [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
         return jnp.pad(a, widths, constant_values=fill)
 
-    return IVFIndex(
-        centroids=index.centroids,
-        csizes=index.csizes,
+    return dataclasses.replace(
+        index,
         vectors=pad2(index.vectors, 0.0),
         ids=pad2(index.ids, INVALID_ID),
         attrs=pad2(index.attrs, 0.0),
         valid=pad2(index.valid, False),
-        counts=index.counts,
-        delta=index.delta,
-        base_mean_size=index.base_mean_size,
-        config=index.config,
+        codes=None if index.codes is None else pad2(index.codes, 0),
     )

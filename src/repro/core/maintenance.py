@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ivf
+from . import ivf, quantize
 from .types import DeltaStore, INVALID_ID, IVFConfig, IVFIndex, pairwise_scores
 
 
@@ -40,7 +40,9 @@ class MaintenanceStats:
 def _row_bytes(index: IVFIndex) -> int:
     d = index.dim
     n_attr = index.n_attr
-    return 4 * d + 4 + 4 * n_attr + 1  # vector + id + attrs + valid
+    # vector + id + attrs + valid (+ the int8 code tier when quantized)
+    codes = d if index.codes is not None else 0
+    return 4 * d + 4 + 4 * n_attr + 1 + codes
 
 
 def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
@@ -48,16 +50,24 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
     cfg = index.config
     k, p_max, d = index.vectors.shape
 
+    quantized = index.codes is not None
     dvalid = np.asarray(index.delta.valid)
     live = np.nonzero(dvalid)[0]
     if live.size == 0:
-        empty = DeltaStore.empty(index.delta.capacity, d, index.n_attr)
+        empty = DeltaStore.empty(index.delta.capacity, d, index.n_attr,
+                                 quantized=quantized)
         new = dataclasses.replace(index, delta=empty)
         return new, MaintenanceStats("incremental", 0, 0, 0, p_max, p_max)
 
     dx = np.asarray(index.delta.vectors)[live]
     dids = np.asarray(index.delta.ids)[live]
     dattrs = np.asarray(index.delta.attrs)[live]
+    if quantized:
+        # Delta rows were encoded on insert; re-encode only as a fallback
+        # (e.g. an index assembled by hand without a code-backed delta).
+        dcod = (np.asarray(index.delta.codes)[live]
+                if index.delta.codes is not None
+                else quantize.encode_np(index.qstats, dx))
 
     # nearest-centroid assignment on device
     assign = np.asarray(jnp.argmin(
@@ -70,6 +80,7 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
     counts = np.array(index.counts)
     csizes = np.array(index.csizes)
     cent = np.array(index.centroids)
+    cod = np.array(index.codes) if quantized else None
 
     # grow p_max if some partition would overflow (compaction first: reuse
     # tombstoned slots)
@@ -83,6 +94,8 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
         vid = np.pad(vid, [(0, 0), (0, grow)], constant_values=INVALID_ID)
         vat = np.pad(vat, [(0, 0), (0, grow), (0, 0)])
         val = np.pad(val, [(0, 0), (0, grow)])
+        if quantized:
+            cod = np.pad(cod, [(0, 0), (0, grow), (0, 0)])
 
     touched = np.unique(assign)
     for p in touched:
@@ -96,6 +109,9 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
         vid[p, :m] = newi; vid[p, m:] = INVALID_ID
         vat[p, :m] = newa; vat[p, m:] = 0.0
         val[p, :m] = True; val[p, m:] = False
+        if quantized:
+            newc = np.concatenate([cod[p][keep], dcod[assign == p]])
+            cod[p, :m] = newc; cod[p, m:] = 0
         counts[p] = m
         # running-mean centroid update
         mnew = len(rows)
@@ -121,8 +137,11 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
         vectors=jnp.asarray(vec), ids=jnp.asarray(vid),
         attrs=jnp.asarray(vat), valid=jnp.asarray(val),
         counts=jnp.asarray(counts),
-        delta=DeltaStore.empty(index.delta.capacity, d, index.n_attr),
+        delta=DeltaStore.empty(index.delta.capacity, d, index.n_attr,
+                               quantized=quantized),
         base_mean_size=index.base_mean_size,
+        codes=jnp.asarray(cod) if quantized else None,
+        qstats=index.qstats,
         config=cfg)
     return new_index, stats
 

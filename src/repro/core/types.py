@@ -66,6 +66,12 @@ class IVFConfig:
     pad_to: int = static_field(default=8)
     # Rebuild trigger: fraction growth of mean partition size (paper: 0.5).
     rebuild_growth_threshold: float = static_field(default=0.5)
+    # Scalar-quantization tier: "none" keeps the float32-only index;
+    # "int8" adds per-dimension SQ codes scanned by kernels/sq_scan.py
+    # with a float32 rerank over k' = rerank_factor * k candidates
+    # (core/quantize.py).
+    quantize: str = static_field(default="none")  # "none" | "int8"
+    rerank_factor: int = static_field(default=4)
     seed: int = static_field(default=0)
 
 
@@ -79,19 +85,24 @@ class DeltaStore:
     attrs: jax.Array    # [cap, n_attr] float32
     valid: jax.Array    # [cap] bool
     count: jax.Array    # [] int32 -- number of live rows
+    # int8 SQ codes mirroring `vectors`, present iff the owning index is
+    # quantized (encoded at insert, moved verbatim by flush_delta).
+    codes: Optional[jax.Array] = None  # [cap, d] int8
 
     @property
     def capacity(self) -> int:
         return self.vectors.shape[0]
 
     @staticmethod
-    def empty(cap: int, dim: int, n_attr: int) -> "DeltaStore":
+    def empty(cap: int, dim: int, n_attr: int,
+              quantized: bool = False) -> "DeltaStore":
         return DeltaStore(
             vectors=jnp.zeros((cap, dim), jnp.float32),
             ids=jnp.full((cap,), INVALID_ID, jnp.int32),
             attrs=jnp.zeros((cap, n_attr), jnp.float32),
             valid=jnp.zeros((cap,), bool),
             count=jnp.zeros((), jnp.int32),
+            codes=jnp.zeros((cap, dim), jnp.int8) if quantized else None,
         )
 
 
@@ -111,6 +122,11 @@ class IVFIndex:
     # Mean partition size at last (re)build -- the monitor compares the
     # current mean against this to trigger rebuilds (paper §3.6).
     base_mean_size: jax.Array  # [] float32
+    # Scalar-quantization tier (config.quantize == "int8"): per-row int8
+    # codes mirroring `vectors` plus the per-dimension quantizer stats
+    # (core/quantize.QuantStats pytree). None on a float32-only index.
+    codes: Optional[jax.Array] = None   # [k, p_max, d] int8
+    qstats: Optional[Any] = None        # quantize.QuantStats
     config: IVFConfig = static_field(default_factory=IVFConfig)
 
     @property
@@ -128,6 +144,10 @@ class IVFIndex:
     @property
     def n_attr(self) -> int:
         return self.attrs.shape[-1]
+
+    @property
+    def quantized(self) -> bool:
+        return self.codes is not None
 
     def num_live(self) -> jax.Array:
         # delta.count is the write cursor; valid tracks live rows

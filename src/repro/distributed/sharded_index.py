@@ -58,6 +58,14 @@ def index_shardings(index: IVFIndex, mesh: Mesh, model_axis: str = "model"):
         return NamedSharding(mesh, P(*spec))
 
     from ..core.types import DeltaStore
+
+    # The template must mirror the index's pytree structure: the quantized
+    # tier (codes on the model axis next to the vectors, small qstats
+    # replicated) is present iff the index carries it.
+    quantized = isinstance(index, IVFIndex) and index.codes is not None
+    qstats_ns = None
+    if quantized:
+        qstats_ns = jax.tree.map(lambda _: ns(None), index.qstats)
     return IVFIndex(
         centroids=ns(m, None),
         csizes=ns(m),
@@ -68,8 +76,11 @@ def index_shardings(index: IVFIndex, mesh: Mesh, model_axis: str = "model"):
         counts=ns(m),
         delta=DeltaStore(
             vectors=ns(None, None), ids=ns(None), attrs=ns(None, None),
-            valid=ns(None), count=ns()),
+            valid=ns(None), count=ns(),
+            codes=ns(None, None) if quantized else None),
         base_mean_size=ns(),
+        codes=ns(m, None, None) if quantized else None,
+        qstats=qstats_ns,
         config=index.config if not isinstance(index, IVFIndex) else
         index.config,
     )

@@ -1,11 +1,13 @@
 """Pallas TPU kernels for MicroNN's compute hot-spots (+ ops/ref pairs).
 
   ivf_scan      -- fused partition scan + running top-k (Alg. 2 hot loop)
+  sq_scan       -- int8 scalar-quantized scan, dequantization fused into
+                   the distance accumulation (the low-memory tier)
   kmeans_assign -- penalised nearest-centroid assignment (Alg. 1 NEAREST)
 
-Validated in interpret mode against ref.py oracles (tests/test_kernels.py);
-BlockSpecs target real TPU VMEM tiling.
+Validated in interpret mode against ref.py oracles (tests/test_kernels.py,
+tests/test_quantize.py); BlockSpecs target real TPU VMEM tiling.
 """
-from . import ivf_scan, kmeans_assign, ops, ref
+from . import ivf_scan, kmeans_assign, ops, ref, sq_scan
 
-__all__ = ["ivf_scan", "kmeans_assign", "ops", "ref"]
+__all__ = ["ivf_scan", "kmeans_assign", "ops", "ref", "sq_scan"]

@@ -1,0 +1,156 @@
+"""Fused int8 scalar-quantized IVF scan + running top-k Pallas TPU kernel.
+
+Same contract and grid structure as kernels/ivf_scan.py (one grid step per
+probed partition, scalar-prefetched partition ids, VMEM running top-k),
+but the partition payload streamed from HBM is the *int8 code tier* -- 4x
+fewer bytes on the scan's bandwidth-bound axis -- and the per-dimension
+dequantization
+
+    v = (code + 128) * scale + lo
+
+is fused into the distance accumulation: codes are widened to float32 in
+VREGs, the affine decode runs on the VPU, and the [Q, d] x [d, p_max]
+distance matmul hits the MXU, so the reconstruction never round-trips to
+HBM. The quantizer stats (core/quantize.QuantStats) ride along as two
+[1, d] VMEM blocks.
+
+This is the *candidate* stage of the paper's low-memory design: callers
+over-fetch k' = rerank_factor * k rows here and rerank them at float32
+(core/executor.py), so the `ids` input is typically the flat row index
+(partition * p_max + slot) rather than the asset id -- whatever the
+caller needs to gather rerank rows. MQO selection masks and fused
+attribute predicates behave exactly as in ivf_scan.
+
+On a real TPU the int8 tile minimum is (32, 128); keep p_max a multiple
+of 32 (IVFConfig.pad_to) when running compiled. Interpret mode (anything
+that is not a TPU backend) has no such constraint.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ivf_scan import MASKED, _merge_topk, default_interpret
+
+
+def _sq_scan_kernel(part_ids_ref,              # scalar prefetch [n]
+                    *refs,
+                    k_out: int, metric: str, mqo: bool, attr_filter):
+    if attr_filter is not None:
+        (q_ref, lo_ref, scale_ref, c_ref, valid_ref, ids_ref, qsel_ref,
+         attrs_ref, out_s_ref, out_i_ref, run_s, run_i) = refs
+    else:
+        (q_ref, lo_ref, scale_ref, c_ref, valid_ref, ids_ref, qsel_ref,
+         out_s_ref, out_i_ref, run_s, run_i) = refs
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        run_s[...] = jnp.full_like(run_s, MASKED)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[...].astype(jnp.float32)               # [Q, d]
+    # fused dequantization: int8 codes -> f32 reconstruction in-register
+    c = c_ref[0].astype(jnp.float32)                 # [p_max, d]
+    v = (c + 128.0) * scale_ref[0][None, :] + lo_ref[0][None, :]
+    dots = jax.lax.dot_general(q, v, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    if metric == "l2":
+        v2 = jnp.sum(v * v, axis=-1)
+        scores = v2[None, :] - 2.0 * dots
+    else:
+        scores = -dots
+    ok = valid_ref[0][None, :] != 0                  # [1, p_max]
+    if attr_filter is not None:
+        ok = ok & attr_filter(attrs_ref[0])[None, :]
+    if mqo:
+        ok = ok & (qsel_ref[:, i][:, None] != 0)     # [Q, 1]
+    scores = jnp.where(ok, scores, MASKED)
+    cand_i = jnp.broadcast_to(ids_ref[0][None, :], scores.shape)
+    cand_i = jnp.where(scores >= MASKED, -1, cand_i)
+
+    new_s, new_i = _merge_topk(run_s[...], run_i[...], scores, cand_i,
+                               k_out)
+    run_s[...] = new_s
+    run_i[...] = new_i
+
+    @pl.when(i == n - 1)
+    def _out():
+        out_s_ref[...] = run_s[...]
+        out_i_ref[...] = run_i[...]
+
+
+def sq_scan_topk(
+    queries: jax.Array,          # [Q, d] f32 (normalised)
+    codes: jax.Array,            # [k, p_max, d] int8
+    lo: jax.Array,               # [d] f32 quantizer minima
+    scale: jax.Array,            # [d] f32 quantizer scales
+    valid: jax.Array,            # [k, p_max] bool/int8
+    ids: jax.Array,              # [k, p_max] int32 (asset or flat row ids)
+    part_ids: jax.Array,         # [n] int32 -- partitions to stream
+    k_out: int,
+    metric: str = "l2",
+    qsel: Optional[jax.Array] = None,   # [Q, n] bool (MQO mask)
+    attrs: Optional[jax.Array] = None,  # [k, p_max, n_attr] f32
+    attr_filter=None,                   # compiled predicate (hybrid.py)
+    interpret: Optional[bool] = None,   # None: auto by backend
+) -> Tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = default_interpret()
+    kp, p_max, d = codes.shape
+    q_n = queries.shape[0]
+    n = part_ids.shape[0]
+    mqo = qsel is not None
+    if qsel is None:
+        qsel = jnp.ones((q_n, n), jnp.int8)
+
+    in_specs = [
+        pl.BlockSpec((q_n, d), lambda i, pids: (0, 0)),
+        pl.BlockSpec((1, d), lambda i, pids: (0, 0)),
+        pl.BlockSpec((1, d), lambda i, pids: (0, 0)),
+        pl.BlockSpec((1, p_max, d), lambda i, pids: (pids[i], 0, 0)),
+        pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)),
+        pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)),
+        pl.BlockSpec((q_n, n), lambda i, pids: (0, 0)),
+    ]
+    inputs = [queries, lo.reshape(1, d).astype(jnp.float32),
+              scale.reshape(1, d).astype(jnp.float32),
+              codes.astype(jnp.int8), valid.astype(jnp.int8),
+              ids.astype(jnp.int32), qsel.astype(jnp.int8)]
+    if attr_filter is not None:
+        assert attrs is not None, "attr_filter needs the attrs tensor"
+        n_attr = attrs.shape[-1]
+        in_specs.append(
+            pl.BlockSpec((1, p_max, n_attr), lambda i, pids: (pids[i], 0, 0)))
+        inputs.append(attrs.astype(jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((q_n, k_out), lambda i, pids: (0, 0)),
+            pl.BlockSpec((q_n, k_out), lambda i, pids: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_n, k_out), jnp.float32),
+            pltpu.VMEM((q_n, k_out), jnp.int32),
+        ],
+    )
+    kernel = pl.pallas_call(
+        functools.partial(_sq_scan_kernel, k_out=k_out, metric=metric,
+                          mqo=mqo, attr_filter=attr_filter),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, k_out), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, k_out), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    return tuple(kernel(part_ids.astype(jnp.int32), *inputs))

@@ -19,6 +19,7 @@ see updates immediately while the host copy guarantees recoverability --
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
@@ -26,20 +27,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import delta as delta_ops
-from ..core import executor, ivf, maintenance
+from ..core import executor, ivf, maintenance, quantize
 from ..core.hybrid import AttributeStats, Node, compile_filter
 from ..core.monitor import IndexMonitor, MonitorConfig
 from ..core.optimizer import HybridOptimizer
-from ..core.types import IVFConfig, IVFIndex, SearchResult
+from ..core.types import (DeltaStore, IVFConfig, IVFIndex, SearchResult,
+                          normalize_if_cosine)
 from .store import VectorStore
 
 
 class MicroNN:
     def __init__(self, dim: int, n_attr: int = 0, path: str = ":memory:",
                  config: Optional[IVFConfig] = None,
-                 monitor: Optional[MonitorConfig] = None):
+                 monitor: Optional[MonitorConfig] = None,
+                 quantize: Optional[str] = None,
+                 rerank_factor: Optional[int] = None):
+        """`quantize="int8"` turns on the scalar-quantized tier: searches
+        scan int8 codes and rerank `rerank_factor * k` candidates at
+        float32. Both knobs land in IVFConfig (explicit kwargs override a
+        passed config); codes are durable in the SQLite `codes` table."""
         self.store = VectorStore(path, dim=dim, n_attr=n_attr)
-        self.config = config or IVFConfig(dim=dim)
+        cfg = config or IVFConfig(dim=dim)
+        if quantize is not None:
+            cfg = dataclasses.replace(cfg, quantize=quantize)
+        if rerank_factor is not None:
+            cfg = dataclasses.replace(cfg, rerank_factor=rerank_factor)
+        self.config = cfg
         self.monitor = IndexMonitor(monitor)
         self.index: Optional[IVFIndex] = None
         self.optimizer: Optional[HybridOptimizer] = None
@@ -48,11 +61,18 @@ class MicroNN:
     # -- lifecycle -----------------------------------------------------------
     def build(self):
         """Initial clustering from the durable tier (mini-batch k-means
-        streams from SQLite -- never the full dataset in memory)."""
+        streams from SQLite -- never the full dataset in memory). With
+        quantize="int8" the build also trains the quantizer from the
+        store's rows (build_index trains min/max on the same data, so no
+        second pass over SQLite) and persists codes + stats durably
+        *before* the clustering swap: after a crash at any point the
+        codes table is always decode-consistent with the stored qstats.
+        """
         ids, _, vecs = self.store.all_rows()
         attrs = self.store.attributes_for(ids)
         self.index = ivf.build_index(
             vecs, ids.astype(np.int32), attrs, cfg=self.config)
+        self._persist_codes()
         # persist the clustering back to the clustered table
         assign = self._current_assignment()
         self.store.set_partitions(ids, assign[ids], *self._centroid_state())
@@ -64,32 +84,71 @@ class MicroNN:
         attrs = self.store.attributes_for(ids)
         cents, csizes = self.store.centroids()
         if len(cents) == 0:
-            if len(ids):
-                self.index = None
+            # No durable clustering: drop *all* derived state. A stale
+            # index/optimizer pair from a previous build must not keep
+            # answering (hybrid) queries for a store that no longer backs
+            # them.
+            self.index = None
+            self.optimizer = None
             return
         live = parts >= 0
+        # the durable tier stores raw rows; the packed device index (and
+        # the code tier) hold metric-normalised ones -- normalise the
+        # main-tier rows before packing so recovery reproduces exactly
+        # what build() put on device. Pending delta rows stay raw here:
+        # the replay upsert below normalises them itself, exactly once,
+        # like the live engine's write path did.
+        vecs_live = np.asarray(normalize_if_cosine(
+            jnp.asarray(vecs[live], jnp.float32), self.config.metric))
+        qstats = None
+        codes_live = None
+        if self.config.quantize == "int8":
+            qs = self.store.qstats()
+            if qs is not None:
+                # codes were persisted at build/upsert time: restore them
+                # without re-encoding (the durable tier is authoritative);
+                # rows missing a durable code (e.g. written by a pre-
+                # quantization engine) are re-encoded from float32
+                qstats = quantize.stats_from_arrays(*qs)
+                codes_live, found = self.store.codes_for(ids[live])
+                if not found.all():
+                    codes_live[~found] = quantize.encode_np(
+                        qstats, vecs_live[~found])
         packed = ivf.pack_partitions(
-            vecs[live], ids[live].astype(np.int32), attrs[live],
+            vecs_live, ids[live].astype(np.int32), attrs[live],
             parts[live].astype(np.int64), len(cents),
-            pad_to=self.config.pad_to)
-        vec, vid, vat, val, counts = packed
-        from ..core.types import DeltaStore
+            pad_to=self.config.pad_to, codes=codes_live)
+        vec, vid, vat, val, counts, cod = packed
         idx = IVFIndex(
             centroids=jnp.asarray(cents), csizes=jnp.asarray(csizes),
             vectors=jnp.asarray(vec), ids=jnp.asarray(vid),
             attrs=jnp.asarray(vat), valid=jnp.asarray(val),
             counts=jnp.asarray(counts),
             delta=DeltaStore.empty(self.config.delta_capacity, self.store.dim,
-                                   attrs.shape[1]),
+                                   attrs.shape[1],
+                                   quantized=cod is not None),
             base_mean_size=jnp.asarray(max(counts.mean(), 1.0), jnp.float32),
+            codes=None if cod is None else jnp.asarray(cod),
+            qstats=qstats,
             config=self.config)
         self.index = idx
-        # replay delta rows (partition -1)
+        # replay delta rows (partition -1); upsert re-encodes them into
+        # the delta's code block from the same stats, deterministically.
+        # Replay in capacity-sized chunks with a flush in between -- the
+        # store may hold more pending rows than the delta can seat (the
+        # delta scatter would silently drop the overflow otherwise).
         if (~live).any():
-            self.index = delta_ops.upsert(
-                self.index, jnp.asarray(vecs[~live]),
-                jnp.asarray(ids[~live].astype(np.int32)),
-                jnp.asarray(attrs[~live]))
+            rv = vecs[~live]
+            ri = ids[~live].astype(np.int32)
+            ra = attrs[~live]
+            cap = self.config.delta_capacity
+            for s in range(0, len(rv), cap):
+                e = min(s + cap, len(rv))
+                if delta_ops.delta_free_slots(self.index) < e - s:
+                    self.maintain(force="flush")
+                self.index = delta_ops.upsert(
+                    self.index, jnp.asarray(rv[s:e]), jnp.asarray(ri[s:e]),
+                    jnp.asarray(ra[s:e]))
         self._refresh_stats()
 
     # -- writes ---------------------------------------------------------------
@@ -106,6 +165,10 @@ class MicroNN:
         self.index = delta_ops.upsert(
             self.index, jnp.asarray(vecs, jnp.float32),
             jnp.asarray(ids, jnp.int32), jnp.asarray(attrs, jnp.float32))
+        # NB: no durable code write here -- pending (partition -1) rows are
+        # replayed through delta_ops.upsert on recover(), which re-encodes
+        # them deterministically; their durable codes are first written by
+        # the next build()/rebuild's _persist_codes.
 
     def delete(self, ids: np.ndarray):
         self.store.delete(ids)
@@ -128,6 +191,10 @@ class MicroNN:
         if action == "rebuild":
             self.index, stats = maintenance.full_rebuild(self.index)
             self.maintenance_log.append(stats)
+            # a rebuild retrains the quantizer -> every code changes;
+            # persist codes+stats before the clustering swap (same crash
+            # ordering as build())
+            self._persist_codes()
             ids, _, _ = self.store.all_rows()
             assign = self._current_assignment()
             self.store.set_partitions(
@@ -167,14 +234,30 @@ class MicroNN:
         live = np.asarray(idx.valid).reshape(-1)
         self.optimizer = HybridOptimizer(AttributeStats(flat_attrs[live]))
 
+    def _persist_codes(self):
+        """Mirror the resident code tier (+ quantizer stats) durably --
+        one transaction, so codes and stats can never diverge -- letting
+        recover() restore the tier without re-encoding."""
+        idx = self.index
+        if idx is None or idx.codes is None:
+            return
+        val = np.asarray(idx.valid)
+        self.store.set_code_tier(np.asarray(idx.ids)[val],
+                                 np.asarray(idx.codes)[val],
+                                 *quantize.stats_to_arrays(idx.qstats))
+
     def _current_assignment(self) -> np.ndarray:
+        """asset id -> partition id for every live main-tier row, as one
+        numpy scatter from the packed ids/valid arrays (no per-partition
+        host round-trips)."""
         idx = self.index
         vid = np.asarray(idx.ids)
         val = np.asarray(idx.valid)
         out = np.full(int(vid.max()) + 1 if vid.size else 1, -1, np.int64)
-        for p in range(idx.k):
-            rows = vid[p][val[p]]
-            out[rows] = p
+        rows = vid[val]
+        parts = np.broadcast_to(
+            np.arange(idx.k, dtype=np.int64)[:, None], vid.shape)[val]
+        out[rows] = parts
         return out
 
     def _centroid_state(self) -> Tuple[np.ndarray, np.ndarray]:

@@ -60,6 +60,13 @@ class VectorStore:
             self.db.execute(
                 f"CREATE TABLE IF NOT EXISTS attributes ("
                 f" asset_id INTEGER PRIMARY KEY{attr_cols})")
+            # int8 SQ code tier (paper's low-memory resident scan): codes
+            # are durable alongside the float32 vectors so recover() can
+            # restore the quantized index without re-encoding; quantizer
+            # stats live in `meta` under "qstats".
+            self.db.execute(
+                "CREATE TABLE IF NOT EXISTS codes ("
+                " asset_id INTEGER PRIMARY KEY, code BLOB NOT NULL)")
             self.db.execute(
                 "CREATE TABLE IF NOT EXISTS meta (k TEXT PRIMARY KEY, v TEXT)")
             if self._meta("generation") is None:
@@ -107,6 +114,50 @@ class VectorStore:
                                 [(int(a),) for a in asset_ids])
             self.db.executemany("DELETE FROM attributes WHERE asset_id=?",
                                 [(int(a),) for a in asset_ids])
+            self.db.executemany("DELETE FROM codes WHERE asset_id=?",
+                                [(int(a),) for a in asset_ids])
+
+    # -- quantized tier ------------------------------------------------------
+    def codes_for(self, asset_ids: Sequence[int]
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """([n, d] int8 codes, [n] found mask) for the given assets; the
+        caller decides how to fill rows with no durable code (the engine
+        re-encodes them from the float32 tier)."""
+        out = np.zeros((len(asset_ids), self.dim), np.int8)
+        found = np.zeros((len(asset_ids),), bool)
+        pos = {int(a): j for j, a in enumerate(asset_ids)}
+        want = list(pos)
+        chunk = 500  # stay under SQLite's bound-parameter limit
+        for s in range(0, len(want), chunk):
+            ph = ", ".join("?" * len(want[s:s + chunk]))
+            for a, blob in self.db.execute(
+                    f"SELECT asset_id, code FROM codes"
+                    f" WHERE asset_id IN ({ph})", want[s:s + chunk]):
+                j = pos[a]
+                out[j] = np.frombuffer(blob, np.int8)
+                found[j] = True
+        return out, found
+
+    def set_code_tier(self, asset_ids: Sequence[int], codes: np.ndarray,
+                      lo: np.ndarray, scale: np.ndarray):
+        """Atomically persist codes + quantizer stats in one transaction:
+        a crash never leaves codes decodable with the wrong stats."""
+        codes = np.ascontiguousarray(codes, np.int8)
+        with self.db:
+            self.db.executemany(
+                "INSERT OR REPLACE INTO codes(asset_id, code) VALUES (?, ?)",
+                [(int(a), c.tobytes()) for a, c in zip(asset_ids, codes)])
+            self._set_meta("qstats", json.dumps(
+                {"lo": [float(x) for x in lo],
+                 "scale": [float(x) for x in scale]}))
+
+    def qstats(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        raw = self._meta("qstats")
+        if raw is None:
+            return None
+        d = json.loads(raw)
+        return (np.asarray(d["lo"], np.float32),
+                np.asarray(d["scale"], np.float32))
 
     def set_partitions(self, asset_ids: np.ndarray, partition_ids: np.ndarray,
                        centroids: np.ndarray, csizes: np.ndarray):

@@ -1,0 +1,272 @@
+"""Scalar-quantization tier: codec invariants, SQ-scan backend parity,
+rerank recall pins, and code consistency through updates/maintenance.
+
+Parity contract (mirrors tests/test_executor.py): on an identical plan
+the Pallas (interpret) SQ backend and the XLA SQ reference select the
+same candidate rows, and -- because the float32 rerank stage is shared
+code downstream of candidate selection -- the final SearchResults agree
+bit-for-bit.
+
+Recall contract (acceptance pin): int8 scan + rerank_factor=4 rerank
+reaches recall@10 >= 0.95 against the float32 ANN path on synthetic
+clustered data.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delta, executor, ivf, maintenance, quantize, search
+from repro.core.hybrid import And, Pred, compile_filter
+from repro.core.types import INVALID_ID, IVFConfig
+
+
+def _mk_data(n=1500, d=24, n_centers=16, seed=7):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_centers, d)).astype(np.float32) * 5
+    X = (centers[rng.integers(0, n_centers, n)]
+         + rng.normal(size=(n, d))).astype(np.float32)
+    attrs = np.stack([rng.integers(0, 8, n),
+                      rng.normal(size=n) * 10], 1).astype(np.float32)
+    return X, attrs
+
+
+@pytest.fixture(scope="module")
+def sq_index():
+    X, attrs = _mk_data()
+    cfg = IVFConfig(dim=24, target_partition_size=50, kmeans_iters=30,
+                    delta_capacity=128, quantize="int8", rerank_factor=4)
+    idx = ivf.build_index(X, attrs=attrs, cfg=cfg)
+    # live delta rows so the full-precision delta merge is exercised too
+    rng = np.random.default_rng(1)
+    nv = rng.normal(size=(10, 24)).astype(np.float32)
+    idx = delta.upsert(idx, jnp.asarray(nv),
+                       jnp.arange(5000, 5010, dtype=jnp.int32),
+                       jnp.asarray(attrs[:10]))
+    return idx, X, attrs
+
+
+def _ids(res):
+    return np.asarray(res.ids)
+
+
+def _recall(ids, ref_ids, k):
+    hits = sum(len(set(a[:k]) & set(b[:k])) for a, b in zip(ids, ref_ids))
+    return hits / (len(ids) * k)
+
+
+# -- codec invariants --------------------------------------------------------
+
+
+def test_roundtrip_error_bounded():
+    X, _ = _mk_data(n=400)
+    stats = quantize.train(jnp.asarray(X))
+    rec = np.asarray(quantize.decode(stats, quantize.encode(stats, X)))
+    # per-dimension error is at most half a quantization step
+    err = np.abs(rec - X)
+    bound = np.asarray(stats.scale) * 0.5 + 1e-6
+    assert (err <= bound[None, :]).all()
+
+
+def test_encode_deterministic_and_int8():
+    X, _ = _mk_data(n=100)
+    stats = quantize.train(jnp.asarray(X))
+    c1 = np.asarray(quantize.encode(stats, X))
+    c2 = quantize.encode_np(stats, X)
+    assert c1.dtype == np.int8
+    assert np.array_equal(c1, c2)
+
+
+def test_build_packs_codes_row_for_row(sq_index):
+    idx, _, _ = sq_index
+    val = np.asarray(idx.valid)
+    vecs = np.asarray(idx.vectors)[val]
+    codes = np.asarray(idx.codes)[val]
+    assert codes.dtype == np.int8
+    assert np.array_equal(codes, quantize.encode_np(idx.qstats, vecs))
+    # resident code tier is 4x smaller than the float32 tier
+    assert idx.codes.nbytes * 4 == idx.vectors.nbytes
+
+
+# -- SQ scan backend parity --------------------------------------------------
+
+
+def test_sq_backend_parity_ann(sq_index):
+    idx, X, _ = sq_index
+    plan = executor.plan_ann(idx, jnp.asarray(X[:8]), 10, 6)
+    rx = executor.execute_plan(idx, plan, backend="xla")
+    rp = executor.execute_plan(idx, plan, backend="pallas")
+    assert (_ids(rx) == _ids(rp)).all()
+    # shared rerank stage downstream of identical candidates: bit-for-bit
+    assert np.array_equal(np.asarray(rx.scores), np.asarray(rp.scores))
+
+
+def test_sq_backend_parity_mqo(sq_index):
+    idx, X, _ = sq_index
+    plan = executor.plan_ann(idx, jnp.asarray(X[:32]), 10, 4, u_max=24)
+    rx = executor.execute_plan(idx, plan, backend="xla")
+    rp = executor.execute_plan(idx, plan, backend="pallas")
+    assert (_ids(rx) == _ids(rp)).all()
+    assert np.array_equal(np.asarray(rx.scores), np.asarray(rp.scores))
+
+
+def test_sq_backend_parity_filtered(sq_index):
+    idx, X, attrs = sq_index
+    f = compile_filter(And((Pred(0, "eq", 3.0), Pred(1, "gt", 0.0))))
+    plan = executor.plan_ann(idx, jnp.asarray(X[:8]), 10, 8, attr_filter=f)
+    rx = executor.execute_plan(idx, plan, backend="xla")
+    rp = executor.execute_plan(idx, plan, backend="pallas")
+    assert (_ids(rx) == _ids(rp)).all()
+    # predicate fused inside the SQ scan: no disqualified candidate survives
+    for i in _ids(rx).ravel():
+        if 0 <= i < 5000:
+            assert attrs[i, 0] == 3 and attrs[i, 1] > 0
+
+
+# -- rerank recall + score exactness -----------------------------------------
+
+
+def test_int8_rerank_recall_pin_vs_float32(sq_index):
+    """Acceptance pin: int8+rerank recall@10 >= 0.95 vs the float32 ANN
+    path (same plans, same index, scan tier forced per call)."""
+    idx, X, _ = sq_index
+    q = jnp.asarray(X[:32])
+    r_f32 = executor.search(idx, q, k=10, n_probe=8, quantized=False)
+    r_int8 = executor.search(idx, q, k=10, n_probe=8, quantized=True)
+    assert _recall(_ids(r_int8), _ids(r_f32), 10) >= 0.95
+
+
+def test_rerank_scores_are_exact_float32(sq_index):
+    """Reported scores come from the rerank stage, not the quantized
+    approximation: every returned (query, id) score must equal the exact
+    float32 distance."""
+    idx, X, _ = sq_index
+    q = X[:4]
+    res = executor.search(idx, jnp.asarray(q), k=5, n_probe=idx.k)
+    val = np.asarray(idx.valid)
+    by_id = dict(zip(np.asarray(idx.ids)[val].tolist(),
+                     np.asarray(idx.vectors)[val]))
+    dval = np.asarray(idx.delta.valid)
+    by_id.update(zip(np.asarray(idx.delta.ids)[dval].tolist(),
+                     np.asarray(idx.delta.vectors)[dval]))
+    for qi, (ids, scores) in enumerate(zip(_ids(res), np.asarray(res.scores))):
+        for i, s in zip(ids, scores):
+            if i == INVALID_ID:
+                continue
+            exact = float(((q[qi] - by_id[int(i)]) ** 2).sum())
+            np.testing.assert_allclose(s, exact, rtol=1e-4, atol=1e-4)
+
+
+def test_exact_search_stays_float32_oracle(sq_index):
+    """exact_search keeps its 100%-recall oracle contract on a quantized
+    index: it brute-forces the float32 tier, never the SQ+rerank path."""
+    idx, X, _ = sq_index
+    q = jnp.asarray(X[:8])
+    oracle = search.exact_search(idx, q, 10)
+    brute = executor.search(idx, q, k=10, kind="exact", quantized=False)
+    assert np.array_equal(_ids(oracle), _ids(brute))
+    assert np.array_equal(np.asarray(oracle.scores), np.asarray(brute.scores))
+    # full-probe SQ ANN against that oracle still clears the recall pin
+    approx = executor.search(idx, q, k=10, n_probe=idx.k)
+    assert _recall(_ids(approx), _ids(oracle), 10) >= 0.95
+
+
+# -- updates / maintenance keep codes consistent -----------------------------
+
+
+def test_delta_encodes_on_insert(sq_index):
+    idx, _, _ = sq_index
+    dval = np.asarray(idx.delta.valid)
+    dcod = np.asarray(idx.delta.codes)[dval]
+    dvec = np.asarray(idx.delta.vectors)[dval]
+    assert dval.sum() == 10
+    assert np.array_equal(dcod, quantize.encode_np(idx.qstats, dvec))
+
+
+def test_flush_moves_codes_without_drift(sq_index):
+    idx, _, _ = sq_index
+    flushed, stats = maintenance.flush_delta(idx)
+    assert stats.rows_moved == 10
+    val = np.asarray(flushed.valid)
+    assert np.array_equal(
+        np.asarray(flushed.codes)[val],
+        quantize.encode_np(flushed.qstats, np.asarray(flushed.vectors)[val]))
+    # delta emptied but still code-backed
+    assert flushed.delta.codes is not None
+
+
+def test_rebuild_retrains_and_reencodes(sq_index):
+    idx, _, _ = sq_index
+    rebuilt, _ = maintenance.full_rebuild(idx)
+    assert rebuilt.codes is not None
+    val = np.asarray(rebuilt.valid)
+    assert np.array_equal(
+        np.asarray(rebuilt.codes)[val],
+        quantize.encode_np(rebuilt.qstats, np.asarray(rebuilt.vectors)[val]))
+
+
+def test_delete_hides_rows_from_quantized_scan(sq_index):
+    idx, X, _ = sq_index
+    victim = int(_ids(executor.search(idx, jnp.asarray(X[:1]), k=1,
+                                      n_probe=idx.k))[0, 0])
+    idx2 = delta.delete(idx, jnp.asarray([victim], jnp.int32))
+    res = executor.search(idx2, jnp.asarray(X[:1]), k=10, n_probe=idx.k)
+    assert victim not in _ids(res)[0]
+
+
+# -- plan/compile cache ------------------------------------------------------
+
+
+def test_quantized_is_cache_key_dimension(sq_index):
+    idx, X, _ = sq_index
+    q = jnp.asarray(X[:4])
+    executor.search(idx, q, k=10, n_probe=6, quantized=True)
+    executor.search(idx, q, k=10, n_probe=6, quantized=False)
+    c0 = executor.trace_count()
+    # both tiers warm: re-running either never retraces
+    executor.search(idx, q, k=10, n_probe=6, quantized=True)
+    executor.search(idx, q, k=10, n_probe=6, quantized=False)
+    executor.search(idx, q, k=10, n_probe=6)   # auto == quantized path
+    assert executor.trace_count() == c0 + 1    # auto(None) is its own key
+
+
+def test_unquantized_index_rejects_forced_quantized(sq_index):
+    _, X, _ = sq_index
+    cfg = IVFConfig(dim=24, target_partition_size=50, kmeans_iters=5)
+    plain = ivf.build_index(X[:200], cfg=cfg)
+    assert plain.codes is None
+    with pytest.raises(AssertionError):
+        executor.search(plain, jnp.asarray(X[:2]), k=5, quantized=True)
+
+
+# -- storage/streaming + sharding integration --------------------------------
+
+
+def test_train_from_store_matches_in_memory_train(tmp_path):
+    from repro.storage import VectorStore
+    X, _ = _mk_data(n=300, d=16)
+    st = VectorStore(str(tmp_path / "t.db"), dim=16)
+    st.upsert(list(range(300)), X)
+    streamed = quantize.train_from_store(st, batch_size=64)
+    in_mem = quantize.train(jnp.asarray(X))
+    np.testing.assert_array_equal(np.asarray(streamed.lo),
+                                  np.asarray(in_mem.lo))
+    np.testing.assert_array_equal(np.asarray(streamed.scale),
+                                  np.asarray(in_mem.scale))
+
+
+def test_index_shardings_mirror_quantized_pytree(sq_index):
+    """The sharding template must match the index's pytree structure,
+    codes/qstats included, or device_put rejects a quantized index."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.distributed.sharded_index import index_shardings
+
+    idx, _, _ = sq_index
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    tmpl = index_shardings(idx, mesh)
+    assert tmpl.codes is not None and tmpl.qstats is not None
+    placed = jax.device_put(idx, tmpl)
+    assert np.array_equal(np.asarray(placed.codes), np.asarray(idx.codes))
