@@ -15,7 +15,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_build, bench_e2e, bench_executor, bench_hybrid,
-                   bench_minibatch, bench_mqo, bench_quantized,
+                   bench_minibatch, bench_mqo, bench_paged, bench_quantized,
                    bench_roofline, bench_updates)
     sections = {
         "fig4_5_e2e": bench_e2e.main,
@@ -27,6 +27,7 @@ def main() -> None:
         "roofline": bench_roofline.main,
         "executor": bench_executor.main,
         "quantized": bench_quantized.main,
+        "paged": bench_paged.main,
     }
     print("name,us_per_call,derived")
     failed = 0

@@ -8,4 +8,7 @@ python -c "import repro; print('import ok:', repro.__name__)"
 # fast regression gate for the int8 scalar-quantization tier (recall +
 # resident-bytes rows; fails loud if the quantized path rots)
 python -m benchmarks.bench_quantized --smoke
+# regression gate for the disk-resident pager: paged-vs-resident parity,
+# recall pin at every budget, and resident bytes <= budget
+python -m benchmarks.bench_paged --smoke
 python -m pytest -q "$@"

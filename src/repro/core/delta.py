@@ -86,6 +86,36 @@ def delete(index: IVFIndex, ids: jax.Array) -> IVFIndex:
         delta=dataclasses.replace(index.delta, valid=dvalid))
 
 
+def delta_only_upsert(delta: DeltaStore, vecs: jax.Array, ids: jax.Array,
+                      attrs: jax.Array, metric: str,
+                      qstats=None) -> DeltaStore:
+    """Paged-mode insert: append into the delta store alone. The main tier
+    lives in SQLite, so stale main-tier copies are handled durably by the
+    engine (store upsert + frame invalidation) instead of via a device
+    tombstone; only an existing *delta* copy needs tombstoning here."""
+    vecs = normalize_if_cosine(vecs.astype(jnp.float32), metric)
+    B = vecs.shape[0]
+    dvalid = _tombstone_delta(delta, ids)
+    slots = delta.count + jnp.arange(B, dtype=jnp.int32)
+    new_codes = delta.codes
+    if qstats is not None and delta.codes is not None:
+        new_codes = delta.codes.at[slots].set(quantize.encode(qstats, vecs))
+    return DeltaStore(
+        vectors=delta.vectors.at[slots].set(vecs),
+        ids=delta.ids.at[slots].set(ids.astype(jnp.int32)),
+        attrs=delta.attrs.at[slots].set(attrs.astype(jnp.float32)),
+        valid=dvalid.at[slots].set(True),
+        count=delta.count + B,
+        codes=new_codes,
+    )
+
+
+def delta_only_delete(delta: DeltaStore, ids: jax.Array) -> DeltaStore:
+    """Paged-mode delete: tombstone any delta copy of the given asset ids
+    (main-tier copies are deleted durably + invalidated by the engine)."""
+    return dataclasses.replace(delta, valid=_tombstone_delta(delta, ids))
+
+
 def delta_free_slots(index: IVFIndex) -> int:
     return int(index.delta.capacity - index.delta.count)
 

@@ -16,8 +16,12 @@ Module map -- who builds plans, who runs them:
     kernels/ivf_scan.py the Pallas TPU backend of fused_scan
     kernels/sq_scan.py  the Pallas backend of fused_sq_scan (int8 codes,
                         dequantize fused into the distance accumulation)
+    storage/pager.py    the partition frame pool behind paged_search
+                        (PR 3: disk-resident mode on a memory budget)
     benchmarks/bench_executor.py   backend + plan-cache latency
     benchmarks/bench_quantized.py  int8-vs-f32 recall / memory / latency
+    benchmarks/bench_paged.py      resident bytes / recall / latency vs
+                                   memory budget; cache hit rates
 
 Quantized two-stage execution (core/quantize.py): on an index carrying
 int8 codes, ann/exact plans scan the code tier for k' = rerank_factor * k
@@ -56,6 +60,7 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import quantize
 from .topk import dedup_by_id, mask_scores, merge_topk, topk_smallest
@@ -81,14 +86,47 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+def _centroid_scores(centroids, counts, metric, q):
+    """[Q, d] -> [Q, k] centroid distances with empty partitions pushed
+    out of any probe set (they can never contribute)."""
+    cd = pairwise_scores(q, centroids, metric)
+    return jnp.where(counts[None, :] > 0, cd, jnp.finfo(cd.dtype).max)
+
+
 def find_nearest_centroids(index: IVFIndex, q: jax.Array, n_probe: int):
     """[Q, d] -> [Q, n_probe] partition ids (line 3 of Alg. 2)."""
-    cd = pairwise_scores(q, index.centroids, index.config.metric)
-    # Empty partitions can never contribute; push them out of the probe set.
-    cd = jnp.where(index.counts[None, :] > 0, cd, jnp.finfo(cd.dtype).max)
+    cd = _centroid_scores(index.centroids, index.counts,
+                          index.config.metric, q)
     n_probe = min(n_probe, index.k)
     _, parts = jax.lax.top_k(-cd, n_probe)
     return parts
+
+
+def _probe_union(centroids, counts, metric, q, n_probe,
+                 u_max: Optional[int] = None,
+                 qmask: Optional[jax.Array] = None):
+    """Shared probe-set + vote/union construction (paper §3.4): the union
+    is the u_max most-voted partitions (default covers the batch exactly)
+    and `qsel` masks each query back onto its own probes. Used by BOTH
+    plan_ann and the paged planner, so the resident and paged scans visit
+    partitions in the same order -- the structural half of the paged
+    bit-parity contract."""
+    kp = centroids.shape[0]
+    Q = q.shape[0]
+    n_probe = min(n_probe, kp)
+    if u_max is None:
+        u_max = min(kp, Q * n_probe)
+    cd = _centroid_scores(centroids, counts, metric, q)
+    _, parts = jax.lax.top_k(-cd, n_probe)                     # [Q, n]
+    sel = jnp.zeros((Q, kp), bool).at[
+        jnp.arange(Q)[:, None], parts].set(True)               # [Q, kp]
+    if qmask is not None:
+        sel = sel & qmask[:, None]
+    votes = sel.sum(axis=0)                                    # [kp]
+    vote_top, upart = jax.lax.top_k(votes, u_max)              # [u_max]
+    qsel = jnp.take_along_axis(sel, upart[None, :], axis=1)    # [Q, u_max]
+    qsel = qsel & (vote_top > 0)[None, :]
+    return upart.astype(jnp.int32), qsel
 
 
 # ---------------------------------------------------------------------------
@@ -130,21 +168,9 @@ def plan_ann(index: IVFIndex, queries: jax.Array, k: int, n_probe: int,
     """
     cfg = index.config
     q = normalize_if_cosine(queries.astype(jnp.float32), cfg.metric)
-    Q = q.shape[0]
-    kp = index.k
-    n_probe = min(n_probe, kp)
-    if u_max is None:
-        u_max = min(kp, Q * n_probe)
-    parts = find_nearest_centroids(index, q, n_probe)          # [Q, n]
-    sel = jnp.zeros((Q, kp), bool).at[
-        jnp.arange(Q)[:, None], parts].set(True)               # [Q, kp]
-    if qmask is not None:
-        sel = sel & qmask[:, None]
-    votes = sel.sum(axis=0)                                    # [kp]
-    vote_top, upart = jax.lax.top_k(votes, u_max)              # [u_max]
-    qsel = jnp.take_along_axis(sel, upart[None, :], axis=1)    # [Q, u_max]
-    qsel = qsel & (vote_top > 0)[None, :]
-    return QueryPlan(queries=q, part_ids=upart.astype(jnp.int32), qsel=qsel,
+    upart, qsel = _probe_union(index.centroids, index.counts, cfg.metric,
+                               q, n_probe, u_max=u_max, qmask=qmask)
+    return QueryPlan(queries=q, part_ids=upart, qsel=qsel,
                      rows=None, k=k, kind="ann", attr_filter=attr_filter)
 
 
@@ -300,20 +326,61 @@ def _xla_sq_scan(queries, codes, qstats, valid, ids, part_ids, k_out, *,
 # ---------------------------------------------------------------------------
 
 
-def _delta_candidates(index: IVFIndex, q: jax.Array,
-                      attr_filter: Optional[AttrFilter]):
-    """Delta partition, always scanned (§3.6), in rank convention."""
-    d = index.delta
-    dots = q @ d.vectors.T                           # [Q, cap]
-    if index.config.metric in ("ip", "cosine"):
+def _delta_candidates_from(delta, metric: str, q: jax.Array,
+                           attr_filter: Optional[AttrFilter]):
+    """Delta partition, always scanned (§3.6), in rank convention. Shared
+    by the resident and the paged epilogue (the delta stays resident in
+    both modes -- it is small and write-hot)."""
+    dots = q @ delta.vectors.T                       # [Q, cap]
+    if metric in ("ip", "cosine"):
         scores = -dots
     else:
-        scores = jnp.sum(d.vectors * d.vectors, axis=-1)[None, :] - 2.0 * dots
-    ok = d.valid
+        scores = jnp.sum(delta.vectors * delta.vectors,
+                         axis=-1)[None, :] - 2.0 * dots
+    ok = delta.valid
     if attr_filter is not None:
-        ok = ok & attr_filter(d.attrs)
+        ok = ok & attr_filter(delta.attrs)
     return mask_scores(scores, ok[None, :]), jnp.broadcast_to(
-        d.ids[None, :], scores.shape)
+        delta.ids[None, :], scores.shape)
+
+
+def _delta_candidates(index: IVFIndex, q: jax.Array,
+                      attr_filter: Optional[AttrFilter]):
+    return _delta_candidates_from(index.delta, index.config.metric, q,
+                                  attr_filter)
+
+
+def _merge_epilogue(delta, metric: str, q, s, i, k: int, k_scan: int,
+                    attr_filter: Optional[AttrFilter],
+                    qmask: Optional[jax.Array] = None):
+    """Shared tail of every search: delta merge + dedup + l2 restore --
+    one op sequence for the resident and paged paths (bit-parity)."""
+    ds, di = _delta_candidates_from(delta, metric, q, attr_filter)
+    if qmask is not None:
+        ds = mask_scores(ds, qmask[:, None])
+    k_final = min(k, k_scan + ds.shape[-1])
+    s, i = merge_topk(s, i, ds, di, k_final)
+    s, i = dedup_by_id(s, i)
+    if metric == "l2":
+        # restore full squared distances (the scan drops the rank-invariant
+        # per-query ||q||^2); masked slots stay at the sentinel
+        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+        s = jnp.where(i == INVALID_ID, MASKED_SCORE, s + q2)
+    return s, i
+
+
+def _rescore_exact(q, v, got, ids, k_out: int, metric: str):
+    """Shared exact-rescore stage of both rerank paths (resident device
+    gather and paged disk gather): one op sequence, so XLA emits the same
+    floats for both -- the other structural half of paged bit-parity."""
+    dots = jnp.einsum("qd,qcd->qc", q, v)
+    if metric in ("ip", "cosine"):
+        s = -dots
+    else:
+        s = jnp.sum(v * v, axis=-1) - 2.0 * dots
+    s = mask_scores(s, got)
+    ids = jnp.where(got, ids, INVALID_ID)
+    return topk_smallest(s, ids, k_out)
 
 
 def _rerank_float32(index: IVFIndex, q: jax.Array, rows: jax.Array,
@@ -332,14 +399,7 @@ def _rerank_float32(index: IVFIndex, q: jax.Array, rows: jax.Array,
     r = jnp.clip(rows, 0, total - 1)
     v = index.vectors.reshape(total, d)[r]           # [Q, k', d]
     ids = index.ids.reshape(total)[r]                # [Q, k']
-    dots = jnp.einsum("qd,qcd->qc", q, v)
-    if index.config.metric in ("ip", "cosine"):
-        s = -dots
-    else:
-        s = jnp.sum(v * v, axis=-1) - 2.0 * dots
-    s = mask_scores(s, got)
-    ids = jnp.where(got, ids, INVALID_ID)
-    return topk_smallest(s, ids, k_out)
+    return _rescore_exact(q, v, got, ids, k_out, index.config.metric)
 
 
 def execute_plan(index: IVFIndex, plan: QueryPlan,
@@ -418,15 +478,8 @@ def execute_plan(index: IVFIndex, plan: QueryPlan,
             attrs=index.attrs if f is not None else None,
             attr_filter=f, backend=backend)
 
-    ds, di = _delta_candidates(index, q, f)
-    k_final = min(plan.k, k_scan + ds.shape[-1])
-    s, i = merge_topk(s, i, ds, di, k_final)
-    s, i = dedup_by_id(s, i)
-    if cfg.metric == "l2":
-        # restore full squared distances (the scan drops the rank-invariant
-        # per-query ||q||^2); masked slots stay at the sentinel
-        q2 = jnp.sum(q * q, axis=-1, keepdims=True)
-        s = jnp.where(i == INVALID_ID, MASKED_SCORE, s + q2)
+    s, i = _merge_epilogue(index.delta, cfg.metric, q, s, i, plan.k, k_scan,
+                           f)
     return SearchResult(ids=i, scores=s)
 
 
@@ -493,6 +546,216 @@ def search(
     qmask = jnp.arange(b) < Q
     res = _run(index, q, qmask, kind, k, n_probe, u_max, cap, attr_filter,
                backend, quantized)
+    if b != Q:
+        res = SearchResult(ids=res.ids[:Q], scores=res.scores[:Q])
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Paged execution (PR 3): scan the memory-budgeted frame pool instead of a
+# full-resident tier; the rerank gathers f32 rows from the durable store.
+# ---------------------------------------------------------------------------
+#
+# A PagedIndex (core/types.py) keeps only metadata resident; the scan tier
+# is faulted on demand into a storage/pager.PartitionCache. Execution is
+# host-driven: (1) pick the probe set from the resident centroids with the
+# SAME vote/union ordering as plan_ann -- this is what pins paged-vs-
+# resident parity bit-for-bit; (2) fault each probe chunk (<= pool
+# capacity) and run the fused scan over the pool with *frame* indices as
+# the scalar-prefetched probe list (the frame -> partition indirection --
+# both kernels are layout-agnostic, they just stream whichever blocks the
+# probe list names); (3) merge chunk top-k's associatively (streaming scan:
+# an exact search over a 1 GB tier runs in a 10 MB pool); (4) on a
+# quantized index, gather the k' = rerank_factor * k candidate rows from
+# SQLite (_rerank_from_store) and rescore at exact f32 -- the float32 tier
+# is never materialised; (5) the resident-delta merge + dedup epilogue.
+
+
+@partial(jax.jit, static_argnames=("k_out", "metric"))
+def _paged_rerank(q, v, got, cand, *, k_out, metric):
+    """Jitted rescore stage of the paged rerank: literally _rescore_exact
+    (the resident rerank's core), so the reported scores are bit-identical
+    to the resident path's -- XLA compiles the identical-shape expression
+    the same way in both programs."""
+    return _rescore_exact(q, v, got, cand, k_out, metric)
+
+
+def _rerank_from_store(store, q: jax.Array, cand_ids: jax.Array,
+                       k_out: int, metric: str):
+    """Sibling of _rerank_float32 for the paged path: gather exactly the
+    candidate rows' float32 vectors from the durable SQLite tier (batched
+    IN (...) -- the disk analogue of the device gather) and recompute
+    exact distances. `cand_ids` are *asset* ids ([Q, k'], INVALID_ID
+    holes) -- paged frames carry asset ids, and the durable tier is keyed
+    by them. Disk-gather cost is O(unique candidates), independent of the
+    scan width, which is the point of scanning codes."""
+    cand = np.asarray(cand_ids)
+    got = cand != INVALID_ID
+    Q, kc = cand.shape
+    d = store.dim
+    v = np.zeros((Q, kc, d), np.float32)
+    if got.any():
+        uniq = np.unique(cand[got])
+        rows, found = store.vectors_for(uniq)
+        rows = np.asarray(normalize_if_cosine(
+            jnp.asarray(rows, jnp.float32), metric))
+        idx = np.searchsorted(uniq, np.where(got, cand, uniq[0]))
+        idx = np.clip(idx, 0, len(uniq) - 1)
+        got = got & (uniq[idx] == cand) & found[idx]
+        v[got] = rows[idx[got]]
+    return _paged_rerank(q, jnp.asarray(v), jnp.asarray(got),
+                         jnp.asarray(cand), k_out=k_out, metric=metric)
+
+
+def _paged_probes(pindex, q: jax.Array, n_probe: int,
+                  qmask: Optional[jax.Array] = None):
+    """plan_ann's probe construction over a PagedIndex's resident metadata
+    -- literally _probe_union (shared with plan_ann), so paged and
+    resident searches agree on the probe order."""
+    counts = jnp.asarray(np.asarray(pindex.counts), jnp.int32)
+    upart, qsel = _probe_union(pindex.centroids, counts,
+                               pindex.config.metric, q, n_probe,
+                               qmask=qmask)
+    return np.asarray(upart, np.int64), qsel
+
+
+@partial(jax.jit, static_argnames=("k", "k_scan", "metric", "attr_filter"))
+def _paged_epilogue(q, s_m, i_m, delta, qmask, *, k, k_scan, metric,
+                    attr_filter):
+    """Jitted wrapper over _merge_epilogue (execute_plan's shared tail):
+    bit-parity with the resident path by construction."""
+    return _merge_epilogue(delta, metric, q, s_m, i_m, k, k_scan,
+                           attr_filter, qmask=qmask)
+
+
+@partial(jax.jit, static_argnames=("k_out", "metric", "backend",
+                                   "attr_filter"))
+def _scan_frames(q, payload, valid, ids, frame_ids, qsel, attrs, *,
+                 k_out, metric, backend, attr_filter):
+    """Jitted frame-pool scan chunk (f32 payload): the fused kernel runs
+    over the pool with frame indices as its probe list."""
+    return fused_scan(q, payload, valid, ids, frame_ids, k_out,
+                      metric=metric, qsel=qsel, attrs=attrs,
+                      attr_filter=attr_filter, backend=backend)
+
+
+@partial(jax.jit, static_argnames=("k_out", "metric", "backend",
+                                   "attr_filter"))
+def _scan_frames_sq(q, payload, qstats, valid, ids, frame_ids, qsel, attrs,
+                    *, k_out, metric, backend, attr_filter):
+    """Jitted frame-pool scan chunk (int8 payload + fused dequantize)."""
+    return fused_sq_scan(q, payload, qstats, valid, ids, frame_ids, k_out,
+                         metric=metric, qsel=qsel, attrs=attrs,
+                         attr_filter=attr_filter, backend=backend)
+
+
+def paged_search(
+    pindex,
+    queries: jax.Array,
+    *,
+    k: int,
+    kind: str = "ann",                 # ann | exact
+    n_probe: int = 8,
+    attr_filter: Optional[AttrFilter] = None,
+    backend: Optional[str] = None,
+    quantized: Optional[bool] = None,
+) -> SearchResult:
+    """Run a search against a PagedIndex through the budgeted frame pool.
+
+    The probe union is processed in chunks of at most the pool's frame
+    capacity: each chunk is faulted (pinned), scanned by the fused kernel
+    over the pool, unpinned, and its top-k merged into the running result
+    -- so resident scan-tier bytes never exceed the budget even for an
+    exact scan of the whole collection. Hybrid predicates are fused into
+    the frame scan (the cache carries attrs frames); a quantized index
+    scans int8 frames and reranks candidates straight from SQLite.
+    """
+    cfg = pindex.config
+    cache = pindex.cache
+    q = normalize_if_cosine(
+        jnp.atleast_2d(jnp.asarray(queries, jnp.float32)), cfg.metric)
+    Q = q.shape[0]
+    b = _bucket(Q)
+    if b != Q:
+        q = jnp.concatenate([q, jnp.zeros((b - Q, q.shape[1]), q.dtype)])
+    qmask = jnp.arange(b) < Q
+
+    # the pool payload dictates the scan: an int8 pool can only run the SQ
+    # scan (there are no f32 frames to brute-force -- paged "exact" on a
+    # quantized index scans every partition's codes and reranks, a
+    # full-probe near-oracle rather than the resident f32 oracle)
+    use_sq = pindex.cache.payload == "int8"
+    if quantized is not None:
+        assert quantized == use_sq, \
+            f"paged scan tier is fixed by the frame pool payload " \
+            f"({pindex.cache.payload}); cannot force quantized={quantized}"
+
+    if kind == "exact":
+        counts = np.asarray(pindex.counts)
+        upart = np.nonzero(counts > 0)[0]
+        qsel = jnp.broadcast_to(qmask[:, None], (b, len(upart)))
+    else:
+        assert kind == "ann", kind
+        upart, qsel = _paged_probes(pindex, q, n_probe, qmask=qmask)
+
+    n = len(upart)
+    p_max = cache.p_max
+    if use_sq:
+        k_run = min(max(k, k * cfg.rerank_factor), max(n * p_max, 1))
+    else:
+        k_run = min(k, max(n * p_max, 1))
+    run_s = jnp.full((b, k_run), MASKED_SCORE, jnp.float32)
+    run_i = jnp.full((b, k_run), INVALID_ID, jnp.int32)
+
+    if attr_filter is not None:
+        assert cache.attrs_pool is not None, \
+            "attribute predicate needs an attr-backed frame pool " \
+            "(store built with n_attr > 0)"
+    for s in range(0, n, cache.capacity):
+        cpids = upart[s:s + cache.capacity]
+        frames = cache.fault(cpids)
+        try:
+            # read the pools AFTER fault(): the batched scatter rebinds
+            # them (functional .at[].set), so a reference captured before
+            # the fault would scan stale frame contents
+            attrs_pool = cache.attrs_pool if attr_filter is not None \
+                else None
+            fidx = jnp.asarray(frames.astype(np.int32))
+            cq = qsel[:, s:s + cache.capacity]
+            k_chunk = min(k_run, len(cpids) * p_max)
+            if use_sq:
+                cs, ci = _scan_frames_sq(
+                    q, cache.payload_pool, pindex.qstats, cache.valid_pool,
+                    cache.ids_pool, fidx, cq, attrs_pool,
+                    k_out=k_chunk, metric=cfg.metric, backend=backend,
+                    attr_filter=attr_filter)
+            else:
+                cs, ci = _scan_frames(
+                    q, cache.payload_pool, cache.valid_pool, cache.ids_pool,
+                    fidx, cq, attrs_pool,
+                    k_out=k_chunk, metric=cfg.metric, backend=backend,
+                    attr_filter=attr_filter)
+        finally:
+            cache.unpin(frames)
+        run_s, run_i = merge_topk(run_s, run_i, cs, ci, k_run)
+
+    if use_sq:
+        # the frame scan emits asset ids; invalidate re-emitted rows from
+        # exhausted merge rounds by score (as execute_plan does), then
+        # gather + rescore the survivors from the durable tier
+        cand = jnp.where(run_s >= MASKED_SCORE, INVALID_ID, run_i)
+        k_scan = min(k, k_run)
+        s_m, i_m = _rerank_from_store(cache.store, q, cand, k_scan,
+                                      cfg.metric)
+    else:
+        k_scan = k_run if n else 0
+        s_m, i_m = (run_s, run_i) if n else (
+            jnp.zeros((b, 0), jnp.float32), jnp.zeros((b, 0), jnp.int32))
+
+    s_f, i_f = _paged_epilogue(q, s_m, i_m, pindex.delta, qmask,
+                               k=k, k_scan=k_scan, metric=cfg.metric,
+                               attr_filter=attr_filter)
+    res = SearchResult(ids=i_f, scores=s_f)
     if b != Q:
         res = SearchResult(ids=res.ids[:Q], scores=res.scores[:Q])
     return res

@@ -18,7 +18,7 @@ import numpy as np
 
 from . import kmeans, quantize
 from .types import (DeltaStore, INVALID_ID, IVFConfig, IVFIndex,
-                    normalize_if_cosine)
+                    effective_pad_to, normalize_if_cosine)
 
 
 def pack_partitions(
@@ -98,8 +98,10 @@ def build_index(
 
     centroids, csizes, assign = kmeans.fit_in_memory(X, cfg, k=k)
     k = centroids.shape[0]
+    # dtype-aware tile padding: int8 partitions on real TPU pad to the
+    # (32, 128) minimum tile; f32 / interpret keep cfg.pad_to
     vec, vid, vat, val, counts, cod = pack_partitions(
-        X, ids, attrs, assign, k, pad_to=cfg.pad_to, codes=codes)
+        X, ids, attrs, assign, k, pad_to=effective_pad_to(cfg), codes=codes)
 
     n_attr = vat.shape[-1]
     return IVFIndex(

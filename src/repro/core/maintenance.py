@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ivf, quantize
-from .types import DeltaStore, INVALID_ID, IVFConfig, IVFIndex, pairwise_scores
+from .types import (DeltaStore, INVALID_ID, IVFConfig, IVFIndex,
+                    effective_pad_to, pairwise_scores)
 
 
 @dataclasses.dataclass
@@ -35,6 +36,28 @@ class MaintenanceStats:
     bytes_written: int        # host-tier write I/O (flash-wear metric)
     p_max_before: int
     p_max_after: int
+
+
+def assign_nearest_centroid(dx: np.ndarray, centroids) -> np.ndarray:
+    """Nearest-centroid assignment for a flush batch (device matmul) --
+    shared by the resident and paged flush so both agree on placement.
+    Always l2 over the (metric-normalised) rows: for cosine data rows and
+    centroids are unit-norm, so l2 order == cosine order."""
+    return np.asarray(jnp.argmin(
+        pairwise_scores(jnp.asarray(dx), centroids, "l2"), axis=-1))
+
+
+def running_mean_update(cent: np.ndarray, csizes: np.ndarray,
+                        dx: np.ndarray, assign: np.ndarray,
+                        touched: np.ndarray):
+    """The paper's telescoped running-mean rule c' = (v*c + sum x)/(v+m)
+    per touched partition (in place) -- shared by both flush paths so the
+    resident and paged centroid trajectories stay numerically identical."""
+    for p in touched:
+        m = int((assign == p).sum())
+        v = csizes[p]
+        cent[p] = (v * cent[p] + dx[assign == p].sum(0)) / max(v + m, 1.0)
+        csizes[p] = v + m
 
 
 def _row_bytes(index: IVFIndex) -> int:
@@ -70,8 +93,7 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
                 else quantize.encode_np(index.qstats, dx))
 
     # nearest-centroid assignment on device
-    assign = np.asarray(jnp.argmin(
-        pairwise_scores(jnp.asarray(dx), index.centroids, "l2"), axis=-1))
+    assign = assign_nearest_centroid(dx, index.centroids)
 
     vec = np.array(index.vectors)
     vid = np.array(index.ids)
@@ -87,7 +109,8 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
     add = np.bincount(assign, minlength=k)
     need = val.sum(-1) + add
     new_p_max = int(need.max())
-    new_p_max = max(p_max, -(-new_p_max // cfg.pad_to) * cfg.pad_to)
+    pad = effective_pad_to(cfg)   # int8-on-TPU pads to the (32,128) tile
+    new_p_max = max(p_max, -(-new_p_max // pad) * pad)
     if new_p_max > p_max:
         grow = new_p_max - p_max
         vec = np.pad(vec, [(0, 0), (0, grow), (0, 0)])
@@ -99,7 +122,6 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
 
     touched = np.unique(assign)
     for p in touched:
-        rows = live[assign == p]
         keep = np.nonzero(val[p])[0]
         newv = np.concatenate([vec[p][keep], dx[assign == p]])
         newi = np.concatenate([vid[p][keep], dids[assign == p]])
@@ -113,11 +135,7 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
             newc = np.concatenate([cod[p][keep], dcod[assign == p]])
             cod[p, :m] = newc; cod[p, m:] = 0
         counts[p] = m
-        # running-mean centroid update
-        mnew = len(rows)
-        v = csizes[p]
-        cent[p] = (v * cent[p] + dx[assign == p].sum(0)) / max(v + mnew, 1.0)
-        csizes[p] = v + mnew
+    running_mean_update(cent, csizes, dx, assign, touched)
 
     stats = MaintenanceStats(
         kind="incremental",

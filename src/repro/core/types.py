@@ -75,6 +75,21 @@ class IVFConfig:
     seed: int = static_field(default=0)
 
 
+def effective_pad_to(cfg: "IVFConfig", backend: Optional[str] = None) -> int:
+    """Dtype-aware Pallas tile padding for the partition axis.
+
+    Real TPU hardware tiles int8 at a (32, 128) minimum, so a compiled SQ
+    scan needs p_max to be a multiple of 32; float32 tiles at (8, 128) and
+    interpret mode has no constraint. `backend` defaults to the runtime
+    backend, so CPU/GPU tests keep the configured (small) padding while a
+    TPU run of a quantized index is bumped automatically."""
+    if backend is None:
+        backend = jax.default_backend()
+    if cfg.quantize == "int8" and backend == "tpu":
+        return max(cfg.pad_to, 32)
+    return cfg.pad_to
+
+
 @register_dataclass
 @dataclasses.dataclass
 class DeltaStore:
@@ -152,6 +167,50 @@ class IVFIndex:
     def num_live(self) -> jax.Array:
         # delta.count is the write cursor; valid tracks live rows
         return self.counts.sum() + self.delta.valid.sum()
+
+
+@dataclasses.dataclass
+class PagedIndex:
+    """Memory-budgeted *paged* view of the index (the paper's actual
+    disk-resident mode): only metadata is resident -- centroids, csizes,
+    live counts, the delta store, and the quantizer stats. The scan tier
+    (int8 codes when quantized, float32 vectors otherwise) stays in SQLite
+    and is faulted on demand into a storage/pager.PartitionCache frame
+    pool; core/executor.paged_search drives fault -> frame scan -> disk
+    rerank. Deliberately NOT a jax pytree: execution is host-driven and
+    the cache is a stateful host object."""
+
+    centroids: jax.Array       # [k, d] float32
+    csizes: jax.Array          # [k] float32 (kmeans running counts)
+    counts: Any                # [k] int64 host array -- live rows/partition
+    delta: DeltaStore          # resident staging area (small, fixed cap)
+    cache: Any                 # storage.pager.PartitionCache
+    base_mean_size: float
+    qstats: Optional[Any] = None    # quantize.QuantStats (int8 mode)
+    config: IVFConfig = dataclasses.field(default_factory=IVFConfig)
+
+    @property
+    def k(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def p_max(self) -> int:
+        return self.cache.p_max
+
+    @property
+    def n_attr(self) -> int:
+        return self.delta.attrs.shape[-1]
+
+    @property
+    def quantized(self) -> bool:
+        return self.qstats is not None and self.cache.payload == "int8"
+
+    def num_live(self):
+        return int(self.counts.sum()) + int(self.delta.valid.sum())
 
 
 @register_dataclass

@@ -31,6 +31,12 @@ budget.
 everywhere except real TPU); callers can still force it either way.
 This module is the Pallas backend of core/executor.py -- the engine
 never calls it directly.
+
+Frame-indirect entry (storage/pager.py): the paged executor passes the
+pager's frame *pool* [F, p_max, d] as `vectors` and frame indices as
+`part_ids` -- the scalar-prefetched index_map streams whichever blocks
+the probe list names, so a 10 MB pool serves the same kernel that a
+full-resident tier does (HBM traffic stays "probed frames only").
 """
 from __future__ import annotations
 

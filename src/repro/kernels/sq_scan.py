@@ -21,9 +21,17 @@ over-fetch k' = rerank_factor * k rows here and rerank them at float32
 caller needs to gather rerank rows. MQO selection masks and fused
 attribute predicates behave exactly as in ivf_scan.
 
-On a real TPU the int8 tile minimum is (32, 128); keep p_max a multiple
-of 32 (IVFConfig.pad_to) when running compiled. Interpret mode (anything
-that is not a TPU backend) has no such constraint.
+On a real TPU the int8 tile minimum is (32, 128); p_max must be a
+multiple of 32 when running compiled (core/types.effective_pad_to bumps
+the build-time padding automatically; sq_scan_topk asserts it so a
+mis-padded layout fails loud instead of mis-compiling). Interpret mode
+(anything that is not a TPU backend) has no such constraint.
+
+Frame-indirect entry (storage/pager.py): `codes` may be the pager's
+frame *pool* [F, p_max, d] rather than the full code tier, with
+`part_ids` carrying frame indices -- the kernel is layout-agnostic, it
+streams whichever blocks the scalar-prefetched probe list names, so the
+paged and resident scans share this one implementation.
 """
 from __future__ import annotations
 
@@ -36,6 +44,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .ivf_scan import MASKED, _merge_topk, default_interpret
+
+# Minimum second-to-last tile dimension for int8 operands on real TPU
+# hardware (the (32, 128) tile); interpret mode is unconstrained.
+INT8_SUBLANE_MIN = 32
 
 
 def _sq_scan_kernel(part_ids_ref,              # scalar prefetch [n]
@@ -104,6 +116,9 @@ def sq_scan_topk(
     if interpret is None:
         interpret = default_interpret()
     kp, p_max, d = codes.shape
+    assert interpret or p_max % INT8_SUBLANE_MIN == 0, \
+        f"compiled int8 scan needs p_max % {INT8_SUBLANE_MIN} == 0 " \
+        f"(got {p_max}); build with pad_to=32 (types.effective_pad_to)"
     q_n = queries.shape[0]
     n = part_ids.shape[0]
     mqo = qsel is not None

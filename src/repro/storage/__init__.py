@@ -1,3 +1,4 @@
 from .store import VectorStore
 from .engine import MicroNN
-from . import checkpoint
+from .pager import PartitionCache
+from . import checkpoint, pager

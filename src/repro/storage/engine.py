@@ -27,12 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import delta as delta_ops
-from ..core import executor, ivf, maintenance, quantize
+from ..core import executor, ivf, kmeans, maintenance, quantize
 from ..core.hybrid import AttributeStats, Node, compile_filter
 from ..core.monitor import IndexMonitor, MonitorConfig
 from ..core.optimizer import HybridOptimizer
-from ..core.types import (DeltaStore, IVFConfig, IVFIndex, SearchResult,
-                          normalize_if_cosine)
+from ..core.types import (DeltaStore, IVFConfig, IVFIndex, PagedIndex,
+                          SearchResult, effective_pad_to, normalize_if_cosine)
+from . import pager
 from .store import VectorStore
 
 
@@ -41,11 +42,20 @@ class MicroNN:
                  config: Optional[IVFConfig] = None,
                  monitor: Optional[MonitorConfig] = None,
                  quantize: Optional[str] = None,
-                 rerank_factor: Optional[int] = None):
+                 rerank_factor: Optional[int] = None,
+                 memory_budget_mb: Optional[float] = None):
         """`quantize="int8"` turns on the scalar-quantized tier: searches
         scan int8 codes and rerank `rerank_factor * k` candidates at
         float32. Both knobs land in IVFConfig (explicit kwargs override a
-        passed config); codes are durable in the SQLite `codes` table."""
+        passed config); codes are durable in the SQLite `codes` table.
+
+        `memory_budget_mb` switches the engine to the paper's actual
+        *disk-resident* mode: the scan tier (int8 codes when quantized,
+        f32 vectors otherwise) is never fully uploaded -- it stays in
+        SQLite and is paged on demand into a budget-bounded frame pool
+        (storage/pager.PartitionCache), with the rerank gathering f32
+        rows straight from disk. Resident memory is then O(budget +
+        centroids + delta) instead of O(collection)."""
         self.store = VectorStore(path, dim=dim, n_attr=n_attr)
         cfg = config or IVFConfig(dim=dim)
         if quantize is not None:
@@ -54,9 +64,16 @@ class MicroNN:
             cfg = dataclasses.replace(cfg, rerank_factor=rerank_factor)
         self.config = cfg
         self.monitor = IndexMonitor(monitor)
-        self.index: Optional[IVFIndex] = None
+        if memory_budget_mb is not None:
+            assert memory_budget_mb > 0, memory_budget_mb
+        self.memory_budget_mb = memory_budget_mb
+        self.index = None   # IVFIndex (resident) or PagedIndex (paged)
         self.optimizer: Optional[HybridOptimizer] = None
         self.maintenance_log = []
+
+    @property
+    def paged(self) -> bool:
+        return self.memory_budget_mb is not None
 
     # -- lifecycle -----------------------------------------------------------
     def build(self):
@@ -68,6 +85,9 @@ class MicroNN:
         *before* the clustering swap: after a crash at any point the
         codes table is always decode-consistent with the stored qstats.
         """
+        if self.paged:
+            self._build_paged()
+            return
         ids, _, vecs = self.store.all_rows()
         attrs = self.store.attributes_for(ids)
         self.index = ivf.build_index(
@@ -80,6 +100,9 @@ class MicroNN:
 
     def recover(self):
         """Rebuild device state from SQLite after a crash/restart."""
+        if self.paged:
+            self._recover_paged()
+            return
         ids, parts, vecs = self.store.all_rows()
         attrs = self.store.attributes_for(ids)
         cents, csizes = self.store.centroids()
@@ -117,7 +140,7 @@ class MicroNN:
         packed = ivf.pack_partitions(
             vecs_live, ids[live].astype(np.int32), attrs[live],
             parts[live].astype(np.int64), len(cents),
-            pad_to=self.config.pad_to, codes=codes_live)
+            pad_to=effective_pad_to(self.config), codes=codes_live)
         vec, vid, vat, val, counts, cod = packed
         idx = IVFIndex(
             centroids=jnp.asarray(cents), csizes=jnp.asarray(csizes),
@@ -157,8 +180,29 @@ class MicroNN:
         n_attr = self.store.n_attr
         attrs = np.zeros((len(ids), n_attr), np.float32) if attrs is None \
             else attrs
+        old_main = None
+        if self.paged and self.index is not None:
+            # paged mode has no resident main-tier ids to tombstone: note
+            # which partitions hold stale copies BEFORE the durable upsert
+            # moves them, then invalidate those frames. Unique ids only --
+            # a duplicated id in the batch still removes one durable row,
+            # so it must decrement its partition's count exactly once.
+            old = self.store.partitions_for(np.unique(np.asarray(ids)))
+            old_main = old[old >= 0]
         self.store.upsert(ids, vecs, attrs, partition_id=-1)
         if self.index is None:
+            return
+        if self.paged:
+            if old_main is not None and old_main.size:
+                self.index.cache.invalidate(np.unique(old_main))
+                self.index.counts = self.index.counts - np.bincount(
+                    old_main, minlength=self.index.k)
+            if delta_ops.delta_free_slots(self.index) < len(ids):
+                self.maintain(force="flush")
+            self.index.delta = delta_ops.delta_only_upsert(
+                self.index.delta, jnp.asarray(vecs, jnp.float32),
+                jnp.asarray(ids, jnp.int32), jnp.asarray(attrs, jnp.float32),
+                self.config.metric, self.index.qstats)
             return
         if delta_ops.delta_free_slots(self.index) < len(ids):
             self.maintain(force="flush")
@@ -171,15 +215,31 @@ class MicroNN:
         # the next build()/rebuild's _persist_codes.
 
     def delete(self, ids: np.ndarray):
+        old_main = None
+        if self.paged and self.index is not None:
+            # unique ids: one durable row removed -> one count decrement
+            old = self.store.partitions_for(np.unique(np.asarray(ids)))
+            old_main = old[old >= 0]
         self.store.delete(ids)
-        if self.index is not None:
-            self.index = delta_ops.delete(self.index,
-                                          jnp.asarray(ids, jnp.int32))
+        if self.index is None:
+            return
+        if self.paged:
+            if old_main is not None and old_main.size:
+                self.index.cache.invalidate(np.unique(old_main))
+                self.index.counts = self.index.counts - np.bincount(
+                    old_main, minlength=self.index.k)
+            self.index.delta = delta_ops.delta_only_delete(
+                self.index.delta, jnp.asarray(ids, jnp.int32))
+            return
+        self.index = delta_ops.delete(self.index,
+                                      jnp.asarray(ids, jnp.int32))
 
     # -- maintenance ----------------------------------------------------------
     def maintain(self, force: Optional[str] = None) -> Optional[str]:
         if self.index is None:
             return None
+        if self.paged:
+            return self._maintain_paged(force)
         health = self.monitor.check(self.index)
         action = force or health.action
         if action == "flush":
@@ -216,6 +276,15 @@ class MicroNN:
         assert self.index is not None, "build() or recover() first"
         del batch_mqo
         q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
+        if self.paged:
+            # paged mode: every path goes through the frame pool; hybrid
+            # predicates are fused into the frame scan (the pool carries
+            # attrs frames) rather than routed through the pre/post
+            # optimizer, which would need a resident f32 tier to gather
+            f = compile_filter(predicate) if predicate is not None else None
+            return executor.paged_search(
+                self.index, q, k=k, kind="exact" if exact else "ann",
+                n_probe=n_probe, attr_filter=f, backend=backend)
         if predicate is not None:
             res, _ = self.optimizer.execute(
                 self.index, q, predicate, k, n_probe, backend=backend)
@@ -225,6 +294,210 @@ class MicroNN:
                                    backend=backend)
         return executor.search(self.index, q, k=k, kind="ann",
                                n_probe=n_probe, backend=backend)
+
+    # -- observability --------------------------------------------------------
+    def stats(self) -> dict:
+        """Operational counters with uniform keys in both modes: pager
+        hits/misses/evictions plus resident scan-tier bytes. In resident
+        mode the counters are zero and `resident_bytes` is what search
+        must keep in memory (f32 tier + codes when quantized); in paged
+        mode it is the preallocated frame pool (<= the byte budget by
+        construction). Benchmarks and tests assert on these counters
+        instead of re-deriving them."""
+        out = {"paged": self.paged, "hits": 0, "misses": 0, "evictions": 0,
+               "resident_bytes": 0, "budget_bytes": None}
+        idx = self.index
+        if idx is None:
+            return out
+        if self.paged:
+            out.update(idx.cache.stats())
+            return out
+        # same components the paged pool counts: payload(s) + ids + valid
+        # + attrs, so the two modes' resident_bytes are comparable
+        resident = int(idx.vectors.nbytes + idx.ids.nbytes
+                       + idx.valid.nbytes + idx.attrs.nbytes)
+        if idx.codes is not None:
+            resident += int(idx.codes.nbytes)
+        out["resident_bytes"] = resident
+        return out
+
+    # -- paged lifecycle (memory_budget_mb mode) ------------------------------
+    def _build_paged(self):
+        """Cluster + persist durably, then attach a paged view -- fully
+        STREAMED from SQLite, so host memory stays O(batch + ids), never
+        O(collection): the quantizer trains via train_from_store, codes
+        encode batch-by-batch, mini-batch k-means samples from disk, the
+        final assignment streams the clustered scan, and the generation
+        swap moves partition ids with keyed UPDATEs instead of
+        re-materialising the blobs. Same crash ordering as build():
+        codes + qstats land before the clustering swap."""
+        cfg = self.config
+        store = self.store
+        batch = max(cfg.minibatch_size, 4096)
+        ids = store.iter_asset_ids()
+        if cfg.quantize == "int8":
+            qstats = quantize.train_from_store(store, cfg.metric, batch)
+
+            def _code_chunks():
+                off = 0
+                for b in store.iter_batches(batch):
+                    bn = np.asarray(normalize_if_cosine(
+                        jnp.asarray(b, jnp.float32), cfg.metric))
+                    yield (ids[off:off + len(bn)],
+                           quantize.encode_np(qstats, bn))
+                    off += len(bn)
+            # one transaction for the whole stream: a crash never leaves
+            # old codes paired with the retrained stats
+            store.set_code_tier_streaming(
+                _code_chunks(), *quantize.stats_to_arrays(qstats))
+        km = kmeans.MiniBatchKMeans(cfg)
+        km.fit(lambda size, rng: store.sample(size, rng), len(ids))
+        assign = km.assign(store.iter_batches(batch))
+        store.reassign_partitions(ids, assign, km.centroids, km.counts)
+        self._attach_paged()
+
+    def _attach_paged(self):
+        """Build the PagedIndex view from durable metadata only: centroids,
+        per-partition counts, quantizer stats, and an empty frame pool
+        sized to the byte budget."""
+        cfg = self.config
+        cents, csizes = self.store.centroids()
+        if len(cents) == 0:
+            self.index = None
+            self.optimizer = None
+            return
+        counts = self.store.partition_counts(len(cents))
+        qstats, payload = None, "f32"
+        if cfg.quantize == "int8":
+            qs = self.store.qstats()
+            if qs is not None:
+                qstats = quantize.stats_from_arrays(*qs)
+                payload = "int8"
+        pad = effective_pad_to(cfg)
+        p_max = int(max(counts.max() if len(counts) else 0, 1))
+        p_max = max(pad, -(-p_max // pad) * pad)
+        old_cache = self.index.cache \
+            if isinstance(self.index, PagedIndex) else None
+        cache = pager.PartitionCache(
+            self.store, p_max=p_max,
+            budget_bytes=int(self.memory_budget_mb * 2 ** 20),
+            payload=payload, metric=cfg.metric, qstats=qstats,
+            with_attrs=self.store.n_attr > 0)
+        if old_cache is not None:   # counters are cumulative across rebuilds
+            cache.hits, cache.misses, cache.evictions = \
+                old_cache.hits, old_cache.misses, old_cache.evictions
+        nonempty = counts[counts > 0]
+        self.index = PagedIndex(
+            centroids=jnp.asarray(cents),
+            csizes=jnp.asarray(csizes, jnp.float32),
+            counts=counts,
+            delta=DeltaStore.empty(cfg.delta_capacity, self.store.dim,
+                                   self.store.n_attr,
+                                   quantized=payload == "int8"),
+            cache=cache,
+            base_mean_size=float(nonempty.mean()) if nonempty.size else 1.0,
+            qstats=qstats, config=cfg)
+        self.optimizer = None
+
+    def _recover_paged(self):
+        """Paged recovery restores only metadata + centroids (plus the
+        pending delta rows); partitions fault in lazily on first probe."""
+        self._attach_paged()
+        if self.index is None:
+            return
+        pids, pvecs = self.store.scan_partition(-1)
+        if not len(pids):
+            return
+        attrs = self.store.attributes_for(pids)
+        cap = self.config.delta_capacity
+        for s in range(0, len(pids), cap):
+            e = min(s + cap, len(pids))
+            free = self.index.delta.capacity - int(self.index.delta.count)
+            if free < e - s:
+                self.maintain(force="flush")
+            self.index.delta = delta_ops.delta_only_upsert(
+                self.index.delta, jnp.asarray(pvecs[s:e], jnp.float32),
+                jnp.asarray(pids[s:e].astype(np.int32)),
+                jnp.asarray(attrs[s:e], jnp.float32),
+                self.config.metric, self.index.qstats)
+
+    def _maintain_paged(self, force: Optional[str]) -> Optional[str]:
+        idx = self.index
+        mcfg = self.monitor.cfg
+        action = force
+        if action is None:
+            counts = np.asarray(idx.counts)
+            nonempty = counts[counts > 0]
+            mean_size = float(nonempty.mean()) if nonempty.size else 0.0
+            growth = mean_size / max(idx.base_mean_size, 1.0) - 1.0
+            if growth >= mcfg.growth_rebuild_threshold:
+                action = "rebuild"
+            elif int(idx.delta.count) >= \
+                    mcfg.delta_flush_fraction * idx.delta.capacity:
+                action = "flush"
+        if action == "flush":
+            self._paged_flush()
+            return "flush"
+        if action == "rebuild":
+            # full re-cluster straight from the durable tier (pending rows
+            # included); _attach_paged re-sizes the pool and drops every
+            # frame, which IS the rebuild's cache invalidation
+            self._build_paged()
+            self.maintenance_log.append(maintenance.MaintenanceStats(
+                kind="full", rows_moved=self.store.count(),
+                partitions_touched=self.index.k,
+                bytes_written=0, p_max_before=idx.cache.p_max,
+                p_max_after=self.index.cache.p_max))
+            return "rebuild"
+        return None
+
+    def _paged_flush(self):
+        """Incremental paged flush: move live delta rows into their nearest
+        partitions *durably* (the clustered SQLite table is the scan tier
+        here, so unlike resident flush the partition ids must move on
+        disk), write their codes, update centroids by the running-mean
+        rule, and invalidate the touched partitions' frames."""
+        idx = self.index
+        d = idx.delta
+        quantized = idx.quantized
+        live = np.nonzero(np.asarray(d.valid))[0]
+        p_before = idx.cache.p_max
+        if live.size:
+            dx = np.asarray(d.vectors)[live]          # metric-normalised
+            dids = np.asarray(d.ids)[live]
+            assign = maintenance.assign_nearest_centroid(dx, idx.centroids)
+            self.store.move_to_partition(dids, assign)
+            if quantized:
+                # move the insert-time codes verbatim (same contract as
+                # resident flush_delta); re-encode only as a fallback
+                dcod = (np.asarray(d.codes)[live] if d.codes is not None
+                        else quantize.encode_np(idx.qstats, dx))
+                self.store.set_code_tier(
+                    dids, dcod, *quantize.stats_to_arrays(idx.qstats))
+            touched = np.unique(assign)
+            idx.cache.invalidate(touched)
+            idx.counts = idx.counts + np.bincount(assign, minlength=idx.k)
+            cent = np.array(idx.centroids)
+            csz = np.array(idx.csizes)
+            maintenance.running_mean_update(cent, csz, dx, assign, touched)
+            idx.centroids = jnp.asarray(cent)
+            idx.csizes = jnp.asarray(csz)
+            self.store.update_centroids(cent, csz)
+            pad = effective_pad_to(self.config)
+            new_p_max = int(idx.counts.max())
+            new_p_max = max(idx.cache.p_max, -(-new_p_max // pad) * pad)
+            if new_p_max > idx.cache.p_max:   # a partition outgrew a frame
+                idx.cache.resize(new_p_max)
+            self.maintenance_log.append(maintenance.MaintenanceStats(
+                kind="incremental", rows_moved=int(live.size),
+                partitions_touched=int(len(touched)),
+                bytes_written=int(live.size
+                                  * (4 * idx.dim + 4 + 4 * idx.n_attr + 1
+                                     + (idx.dim if quantized else 0))
+                                  + len(touched) * idx.dim * 4),
+                p_max_before=p_before, p_max_after=idx.cache.p_max))
+        idx.delta = DeltaStore.empty(d.capacity, self.store.dim, idx.n_attr,
+                                     quantized=quantized)
 
     # -- helpers --------------------------------------------------------------
     def _refresh_stats(self):

@@ -1,0 +1,256 @@
+"""Disk-resident partition pager: a memory-budgeted buffer pool of
+partition frames (the paper's "~10 MB resident at million scale" made
+literal -- cf. Faiss's on-disk inverted lists).
+
+Frame layout. The pool is a fixed set of F frames preallocated up front
+from the byte budget; each frame seats one partition in the same padded
+layout the resident tier uses:
+
+    payload  [F, p_max, d]   int8 codes (quantized index) or f32 vectors
+    ids      [F, p_max]      asset ids, INVALID_ID marks padding
+    valid    [F, p_max]      live-row mask
+    attrs    [F, p_max, a]   optional, for fused attribute predicates
+
+so the existing fused-scan kernels run over the pool unchanged: the
+scalar-prefetched `part_ids` input simply carries *frame* indices instead
+of partition indices (the frame -> partition indirection lives in this
+module's host-side frame table). F = budget_bytes // frame_bytes; the
+pool never grows, so resident bytes are <= the budget by construction.
+
+Eviction is CLOCK (second chance): a fault sweeps the hand past pinned
+frames and frames whose reference bit is set (clearing it), and reclaims
+the first cold unpinned frame. Frames are *pinned* for the duration of a
+scan chunk (fault() pins, the executor unpins after the scan), so a
+concurrent fault can never steal a frame mid-scan; faulting more
+partitions than the pool seats raises, which is what forces the
+executor's streaming chunked scan.
+
+Fault path: all missing partitions of a probe set are fetched in ONE SQL
+round-trip (VectorStore.scan_partitions -- the clustered primary key
+makes each partition a sequential range read) and scattered into the
+pool in one batched device write.
+
+Invalidation contract: any write that changes a partition's durable rows
+(delta flush into it, upsert/delete of one of its rows, a rebuild) must
+call invalidate(pids) / invalidate_all(); the next fault re-reads the
+partition from SQLite. Counters (hits / misses / evictions) are
+cumulative and surface through MicroNN.stats().
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import quantize
+from ..core.types import INVALID_ID, normalize_if_cosine
+
+
+class PartitionCache:
+    """Memory-budgeted buffer pool of partition frames over a VectorStore."""
+
+    def __init__(self, store, *, p_max: int, budget_bytes: int,
+                 payload: str = "f32", metric: str = "l2",
+                 qstats=None, with_attrs: bool = False):
+        assert payload in ("f32", "int8"), payload
+        if payload == "int8":
+            assert qstats is not None, "int8 frames need quantizer stats"
+        self.store = store
+        self.metric = metric
+        self.payload = payload
+        self.qstats = qstats
+        self.with_attrs = bool(with_attrs and store.n_attr)
+        self.budget_bytes = int(budget_bytes)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._alloc(p_max)
+
+    # -- pool allocation ----------------------------------------------------
+    @staticmethod
+    def compute_frame_bytes(p_max: int, dim: int, payload: str = "f32",
+                            n_attr: int = 0) -> int:
+        """Bytes one partition frame costs: payload + ids + valid + attrs."""
+        per_row = (1 if payload == "int8" else 4) * dim + 4 + 1 + 4 * n_attr
+        return p_max * per_row
+
+    def _alloc(self, p_max: int):
+        store = self.store
+        d = store.dim
+        n_attr = store.n_attr if self.with_attrs else 0
+        # validate before mutating any state: a failed resize must leave
+        # the cache fully usable at its old geometry
+        frame_bytes = self.compute_frame_bytes(p_max, d, self.payload,
+                                               n_attr)
+        cap = self.budget_bytes // frame_bytes
+        if cap < 1:
+            raise ValueError(
+                f"memory budget {self.budget_bytes}B cannot seat one "
+                f"partition frame ({frame_bytes}B at p_max={p_max})")
+        self.p_max = int(p_max)
+        self.frame_bytes = frame_bytes
+        self.capacity = int(cap)
+        shape = (self.capacity, self.p_max, d)
+        if self.payload == "int8":
+            self.payload_pool = jnp.zeros(shape, jnp.int8)
+        else:
+            self.payload_pool = jnp.zeros(shape, jnp.float32)
+        self.ids_pool = jnp.full((self.capacity, self.p_max), INVALID_ID,
+                                 jnp.int32)
+        self.valid_pool = jnp.zeros((self.capacity, self.p_max), bool)
+        self.attrs_pool = (
+            jnp.zeros((self.capacity, self.p_max, n_attr), jnp.float32)
+            if self.with_attrs else None)
+        # host-side frame table (the frame -> partition indirection)
+        self._frame_pid = np.full(self.capacity, -1, np.int64)
+        self._pid_frame: dict = {}
+        self._ref = np.zeros(self.capacity, bool)
+        self._pins = np.zeros(self.capacity, np.int64)
+        self._hand = 0
+
+    def resize(self, p_max: int):
+        """Reallocate the pool for a larger partition size (after a flush
+        grows some partition past p_max). Drops every frame -- the caller
+        already invalidated the moved partitions -- but keeps the
+        cumulative counters and the byte budget."""
+        self._alloc(p_max)
+
+    # -- budget accounting ---------------------------------------------------
+    @property
+    def resident_bytes(self) -> int:
+        pools = [self.payload_pool, self.ids_pool, self.valid_pool]
+        if self.attrs_pool is not None:
+            pools.append(self.attrs_pool)
+        return int(sum(p.nbytes for p in pools))
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "resident_bytes": self.resident_bytes,
+                "budget_bytes": self.budget_bytes,
+                "capacity_frames": self.capacity,
+                "frame_bytes": self.frame_bytes,
+                "resident_partitions": len(self._pid_frame)}
+
+    # -- clock eviction ------------------------------------------------------
+    def _victim(self) -> int:
+        """Second-chance sweep: skip pinned frames, clear reference bits,
+        reclaim the first cold unpinned frame."""
+        for _ in range(3 * self.capacity):
+            f = self._hand
+            self._hand = (self._hand + 1) % self.capacity
+            if self._pins[f] > 0:
+                continue
+            if self._ref[f]:
+                self._ref[f] = False
+                continue
+            return f
+        raise RuntimeError(
+            "all cache frames pinned -- probe chunk exceeds pool capacity")
+
+    # -- fault / pin / invalidate -------------------------------------------
+    def fault(self, pids: Sequence[int]) -> np.ndarray:
+        """Ensure every listed partition is resident; returns the frame
+        index per pid (aligned to input order), with each frame PINNED --
+        the caller must unpin() after its scan. All missing partitions are
+        fetched in one batched SQL round-trip."""
+        want = [int(p) for p in pids]
+        if len(want) > self.capacity:
+            raise ValueError(
+                f"probe set of {len(want)} partitions exceeds the pool's "
+                f"{self.capacity} frames -- chunk the scan")
+        frames = np.empty(len(want), np.int32)
+        missing = []
+        hit_frames = []
+        for j, p in enumerate(want):
+            f = self._pid_frame.get(p)
+            if f is not None:
+                self.hits += 1
+                self._ref[f] = True
+                self._pins[f] += 1
+                frames[j] = f
+                hit_frames.append(f)
+            else:
+                missing.append((j, p))
+        if not missing:
+            return frames
+        new_frames = []
+        for j, p in missing:
+            f = self._victim()
+            old = self._frame_pid[f]
+            if old >= 0:
+                del self._pid_frame[old]
+                self.evictions += 1
+            self._frame_pid[f] = p
+            self._pid_frame[p] = f
+            self._ref[f] = True
+            self._pins[f] += 1
+            self.misses += 1
+            frames[j] = f
+            new_frames.append(f)
+        try:
+            sq = self.payload == "int8"
+            # int8 pools skip the f32 blobs entirely: the fault moves 4x
+            # fewer bytes off disk (the point of the code tier)
+            blocks = self.store.scan_partitions(
+                [p for _, p in missing], self.p_max,
+                with_codes=sq, with_attrs=self.with_attrs, with_vecs=not sq)
+            if sq:
+                codes = blocks.codes
+                stale = blocks.valid & ~blocks.code_ok
+                if stale.any():
+                    # rare: rows without a durable code (written by a
+                    # pre-quantized engine) -- backfill just those rows
+                    # from the f32 tier and re-encode deterministically
+                    rows, _ = self.store.vectors_for(blocks.ids[stale])
+                    rows = np.asarray(normalize_if_cosine(
+                        jnp.asarray(rows, jnp.float32), self.metric))
+                    codes[stale] = quantize.encode_np(self.qstats, rows)
+                payload = jnp.asarray(codes)
+            else:
+                payload = normalize_if_cosine(
+                    jnp.asarray(blocks.vecs, jnp.float32), self.metric)
+            fidx = jnp.asarray(np.asarray(new_frames, np.int32))
+            self.payload_pool = self.payload_pool.at[fidx].set(payload)
+            self.ids_pool = self.ids_pool.at[fidx].set(
+                jnp.asarray(blocks.ids))
+            self.valid_pool = self.valid_pool.at[fidx].set(
+                jnp.asarray(blocks.valid))
+            if self.attrs_pool is not None:
+                self.attrs_pool = self.attrs_pool.at[fidx].set(
+                    jnp.asarray(blocks.attrs))
+        except BaseException:
+            # roll back the provisional registrations: the frames never
+            # received data, so a later fault must not count them as hits
+            # (and their pins must not leak until _victim starves); hit
+            # pins are released too -- the caller gets no frames to unpin
+            for (j, p), f in zip(missing, new_frames):
+                self._pid_frame.pop(p, None)
+                self._frame_pid[f] = -1
+                self._ref[f] = False
+                self._pins[f] -= 1
+            for f in hit_frames:
+                self._pins[f] -= 1
+            raise
+        return frames
+
+    def unpin(self, frames: np.ndarray):
+        for f in np.asarray(frames, np.int64):
+            assert self._pins[f] > 0, f"frame {f} not pinned"
+            self._pins[f] -= 1
+
+    def invalidate(self, pids: Sequence[int]):
+        """Drop the listed partitions' frames (durable rows changed); the
+        next fault re-reads them from SQLite."""
+        for p in pids:
+            f = self._pid_frame.pop(int(p), None)
+            if f is None:
+                continue
+            assert self._pins[f] == 0, \
+                f"invalidating pinned frame {f} (partition {p})"
+            self._frame_pid[f] = -1
+            self._ref[f] = False
+
+    def invalidate_all(self):
+        self.invalidate(list(self._pid_frame))

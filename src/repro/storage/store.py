@@ -18,12 +18,34 @@ the source for HBM uploads, and the substrate for checkpoint/restart.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import sqlite3
 from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
+
+# SQLite bound-parameter ceiling (999 before 3.32); chunk IN (...) queries.
+_PARAM_CHUNK = 500
+
+
+@dataclasses.dataclass
+class PartitionBlocks:
+    """One batched probe-set fetch, packed as padded partition frames.
+
+    Arrays are aligned to the requested pid order: frame j holds partition
+    pids[j]. `vecs` rows are the *raw* durable vectors (the pager applies
+    metric normalisation); `code_ok` marks rows whose int8 code existed in
+    the durable side table (False rows are re-encoded by the caller).
+    """
+
+    vecs: Optional[np.ndarray]          # [m, p_max, d] f32 (None if skipped)
+    ids: np.ndarray                     # [m, p_max] int32 (-1 padding)
+    valid: np.ndarray                   # [m, p_max] bool
+    codes: Optional[np.ndarray] = None  # [m, p_max, d] int8
+    code_ok: Optional[np.ndarray] = None  # [m, p_max] bool
+    attrs: Optional[np.ndarray] = None  # [m, p_max, n_attr] float32
 
 
 class VectorStore:
@@ -117,6 +139,25 @@ class VectorStore:
             self.db.executemany("DELETE FROM codes WHERE asset_id=?",
                                 [(int(a),) for a in asset_ids])
 
+    def _gather_by_asset(self, cols: str, table: str,
+                         asset_ids: Sequence[int]):
+        """Shared scaffolding for every batched asset-id gather: dedup the
+        wanted ids, chunk the IN (...) under the bound-parameter limit,
+        and yield (row, output_index) -- duplicates in `asset_ids` map to
+        every requesting position."""
+        pos: dict = {}
+        for j, a in enumerate(asset_ids):
+            pos.setdefault(int(a), []).append(j)
+        want = list(pos)
+        for s in range(0, len(want), _PARAM_CHUNK):
+            chunk = want[s:s + _PARAM_CHUNK]
+            ph = ", ".join("?" * len(chunk))
+            for row in self.db.execute(
+                    f"SELECT asset_id, {cols} FROM {table}"
+                    f" WHERE asset_id IN ({ph})", chunk):
+                for j in pos[row[0]]:
+                    yield row, j
+
     # -- quantized tier ------------------------------------------------------
     def codes_for(self, asset_ids: Sequence[int]
                   ) -> Tuple[np.ndarray, np.ndarray]:
@@ -125,28 +166,31 @@ class VectorStore:
         re-encodes them from the float32 tier)."""
         out = np.zeros((len(asset_ids), self.dim), np.int8)
         found = np.zeros((len(asset_ids),), bool)
-        pos = {int(a): j for j, a in enumerate(asset_ids)}
-        want = list(pos)
-        chunk = 500  # stay under SQLite's bound-parameter limit
-        for s in range(0, len(want), chunk):
-            ph = ", ".join("?" * len(want[s:s + chunk]))
-            for a, blob in self.db.execute(
-                    f"SELECT asset_id, code FROM codes"
-                    f" WHERE asset_id IN ({ph})", want[s:s + chunk]):
-                j = pos[a]
-                out[j] = np.frombuffer(blob, np.int8)
-                found[j] = True
+        for (_, blob), j in self._gather_by_asset("code", "codes",
+                                                  asset_ids):
+            out[j] = np.frombuffer(blob, np.int8)
+            found[j] = True
         return out, found
 
     def set_code_tier(self, asset_ids: Sequence[int], codes: np.ndarray,
                       lo: np.ndarray, scale: np.ndarray):
         """Atomically persist codes + quantizer stats in one transaction:
         a crash never leaves codes decodable with the wrong stats."""
-        codes = np.ascontiguousarray(codes, np.int8)
+        self.set_code_tier_streaming(iter([(asset_ids, codes)]), lo, scale)
+
+    def set_code_tier_streaming(self, chunks, lo: np.ndarray,
+                                scale: np.ndarray):
+        """set_code_tier over a stream of (asset_ids, codes) chunks, all
+        inside ONE transaction -- the paged build encodes batch-by-batch
+        without losing the codes-consistent-with-stats crash guarantee."""
         with self.db:
-            self.db.executemany(
-                "INSERT OR REPLACE INTO codes(asset_id, code) VALUES (?, ?)",
-                [(int(a), c.tobytes()) for a, c in zip(asset_ids, codes)])
+            for asset_ids, codes in chunks:
+                codes = np.ascontiguousarray(codes, np.int8)
+                self.db.executemany(
+                    "INSERT OR REPLACE INTO codes(asset_id, code)"
+                    " VALUES (?, ?)",
+                    [(int(a), c.tobytes())
+                     for a, c in zip(asset_ids, codes)])
             self._set_meta("qstats", json.dumps(
                 {"lo": [float(x) for x in lo],
                  "scale": [float(x) for x in scale]}))
@@ -185,6 +229,38 @@ class VectorStore:
                             (gen,))
             self._set_meta("generation", str(gen))
 
+    def reassign_partitions(self, asset_ids: Sequence[int],
+                            partition_ids: Sequence[int],
+                            centroids: np.ndarray, csizes: np.ndarray):
+        """Install a new clustering generation WITHOUT materialising the
+        vector blobs (the paged build's swap): partition ids move via
+        keyed UPDATEs against the clustered PK (SQLite re-inserts the row
+        at its new key, preserving the physical clustering), centroids
+        swap generations atomically. Same contract as set_partitions but
+        O(1) vector bytes in host memory."""
+        gen = self.generation + 1
+        with self.db:
+            self.db.executemany(
+                "UPDATE vectors SET partition_id=? WHERE asset_id=?",
+                [(int(p), int(a))
+                 for a, p in zip(asset_ids, partition_ids)])
+            self.db.executemany(
+                "INSERT INTO centroids(generation, partition_id, vec, csize)"
+                " VALUES (?, ?, ?, ?)",
+                [(gen, i, np.ascontiguousarray(c, np.float32).tobytes(),
+                  float(s))
+                 for i, (c, s) in enumerate(zip(centroids, csizes))])
+            self.db.execute("DELETE FROM centroids WHERE generation < ?",
+                            (gen,))
+            self._set_meta("generation", str(gen))
+
+    def iter_asset_ids(self):
+        """All asset ids in the clustered scan order (the same order
+        iter_batches streams the vectors)."""
+        return np.array([r[0] for r in self.db.execute(
+            "SELECT asset_id FROM vectors"
+            " ORDER BY partition_id, asset_id")], np.int64)
+
     def move_to_partition(self, asset_ids: Sequence[int],
                           partition_ids: Sequence[int]):
         """Incremental maintenance: move delta rows into IVF partitions."""
@@ -222,9 +298,109 @@ class VectorStore:
         if not rows:
             return (np.zeros((0,), np.int64),
                     np.zeros((0, self.dim), np.float32))
-        ids = np.array([r[0] for r in rows], np.int64)
-        vecs = np.stack([np.frombuffer(r[1], np.float32) for r in rows])
+        ids = np.fromiter((r[0] for r in rows), np.int64, count=len(rows))
+        # one decode of the concatenated blobs instead of a per-row loop
+        vecs = np.frombuffer(b"".join(r[1] for r in rows), np.float32) \
+            .reshape(len(rows), self.dim).copy()
         return ids, vecs
+
+    def scan_partitions(self, pids: Sequence[int], p_max: int,
+                        with_codes: bool = False,
+                        with_attrs: bool = False,
+                        with_vecs: bool = True) -> PartitionBlocks:
+        """Batched probe-set fetch (the pager's fault path): every listed
+        partition in one SQL round-trip (chunked only by the bound-
+        parameter limit), packed into padded [m, p_max, *] frame blocks.
+        The clustered (partition_id, asset_id) primary key makes each
+        partition a sequential range scan; codes and attributes ride along
+        via LEFT JOINs so a frame fault is a single pass over the rows.
+        `with_vecs=False` skips reading the float32 blobs entirely -- an
+        int8 frame fault then moves 4x fewer bytes off disk, which is the
+        point of the code tier (the rare code-less row is backfilled by
+        the caller via vectors_for)."""
+        m = len(pids)
+        want = [int(p) for p in pids]
+        slot = {p: j for j, p in enumerate(want)}
+        assert len(slot) == m, "duplicate partition ids in one fetch"
+        vecs = np.zeros((m, p_max, self.dim), np.float32) if with_vecs \
+            else None
+        ids = np.full((m, p_max), -1, np.int32)
+        valid = np.zeros((m, p_max), bool)
+        codes = np.zeros((m, p_max, self.dim), np.int8) if with_codes else None
+        code_ok = np.zeros((m, p_max), bool) if with_codes else None
+        n_attr = self.n_attr if with_attrs else 0
+        attrs = np.zeros((m, p_max, n_attr), np.float32) if with_attrs \
+            else None
+        cols = "v.partition_id, v.asset_id"
+        if with_vecs:
+            cols += ", v.vec"
+        joins = ""
+        if with_codes:
+            cols += ", c.code"
+            joins += " LEFT JOIN codes c ON c.asset_id = v.asset_id"
+        if with_attrs and self.n_attr:
+            cols += ", " + ", ".join(f"a.a{i}" for i in range(self.n_attr))
+            joins += " LEFT JOIN attributes a ON a.asset_id = v.asset_id"
+        fill = np.zeros(m, np.int64)
+        for s in range(0, m, _PARAM_CHUNK):
+            chunk = want[s:s + _PARAM_CHUNK]
+            ph = ", ".join("?" * len(chunk))
+            for row in self.db.execute(
+                    f"SELECT {cols} FROM vectors v{joins}"
+                    f" WHERE v.partition_id IN ({ph})"
+                    f" ORDER BY v.partition_id, v.asset_id", chunk):
+                j = slot[row[0]]
+                i = fill[j]
+                if i >= p_max:
+                    raise ValueError(
+                        f"partition {row[0]} overflows frame p_max={p_max}")
+                ids[j, i] = row[1]
+                valid[j, i] = True
+                c = 2
+                if with_vecs:
+                    vecs[j, i] = np.frombuffer(row[c], np.float32)
+                    c += 1
+                if with_codes:
+                    if row[c] is not None:
+                        codes[j, i] = np.frombuffer(row[c], np.int8)
+                        code_ok[j, i] = True
+                    c += 1
+                if with_attrs and self.n_attr and row[c] is not None:
+                    attrs[j, i] = row[c:c + self.n_attr]
+                fill[j] = i + 1
+        return PartitionBlocks(vecs=vecs, ids=ids, valid=valid, codes=codes,
+                               code_ok=code_ok, attrs=attrs)
+
+    def vectors_for(self, asset_ids: Sequence[int]
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """([n, d] f32 raw vectors, [n] found mask) for the given assets in
+        one batched IN (...) query -- the paged rerank's disk gather."""
+        out = np.zeros((len(asset_ids), self.dim), np.float32)
+        found = np.zeros((len(asset_ids),), bool)
+        for (_, blob), j in self._gather_by_asset("vec", "vectors",
+                                                  asset_ids):
+            out[j] = np.frombuffer(blob, np.float32)
+            found[j] = True
+        return out, found
+
+    def partitions_for(self, asset_ids: Sequence[int]) -> np.ndarray:
+        """asset id -> current partition id (-2 where the asset is absent;
+        -1 is the delta partition). Batched IN (...) lookup."""
+        out = np.full((len(asset_ids),), -2, np.int64)
+        for (_, p), j in self._gather_by_asset("partition_id", "vectors",
+                                               asset_ids):
+            out[j] = p
+        return out
+
+    def partition_counts(self, k: int) -> np.ndarray:
+        """[k] live main-tier rows per partition (one GROUP BY scan)."""
+        out = np.zeros((k,), np.int64)
+        for p, c in self.db.execute(
+                "SELECT partition_id, COUNT(*) FROM vectors"
+                " WHERE partition_id >= 0 GROUP BY partition_id"):
+            if 0 <= p < k:
+                out[p] = c
+        return out
 
     def centroids(self) -> Tuple[np.ndarray, np.ndarray]:
         rows = self.db.execute(
@@ -275,16 +451,14 @@ class VectorStore:
         return ids, parts, vecs
 
     def attributes_for(self, asset_ids: np.ndarray) -> np.ndarray:
+        """Batched attribute gather: one IN (...) query per parameter
+        chunk instead of a fetchone round-trip per asset id."""
         if not self.n_attr:
             return np.zeros((len(asset_ids), 0), np.float32)
         cols = ", ".join(f"a{i}" for i in range(self.n_attr))
         out = np.zeros((len(asset_ids), self.n_attr), np.float32)
-        for j, a in enumerate(asset_ids):
-            row = self.db.execute(
-                f"SELECT {cols} FROM attributes WHERE asset_id=?",
-                (int(a),)).fetchone()
-            if row:
-                out[j] = row
+        for row, j in self._gather_by_asset(cols, "attributes", asset_ids):
+            out[j] = row[1:]
         return out
 
     def close(self):
