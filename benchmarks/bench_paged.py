@@ -14,10 +14,15 @@ section measures the reproduction of that trade-off:
     *float32* ANN path (the acceptance pin: >= 0.95);
   * latency (cold faults amortised by the warmup calls -- steady-state);
   * cache hit rate under a Zipfian probe workload (skewed cluster
-    popularity, the on-device access pattern the buffer pool exploits).
+    popularity, the on-device access pattern the buffer pool exploits),
+    with a one-off exact full-collection scan injected mid-stream: the
+    pager's scan-resistant admission (fault(admit=False) rides a small
+    reusable ring) must keep the hot ANN working set resident, asserted
+    as hit-rate non-regression across the scan.
 
-`--smoke` shrinks the dataset so scripts/ci.sh runs this as a regression
-gate (the paged path must not silently rot).
+All queries are issued through the declarative API (QuerySpec ->
+ResultSet). `--smoke` shrinks the dataset so scripts/ci.sh runs this as
+a regression gate (the paged path must not silently rot).
 """
 import os
 import tempfile
@@ -25,6 +30,7 @@ import tempfile
 import numpy as np
 
 from repro.core import executor
+from repro.core.query import Q
 from repro.core.types import IVFConfig
 from repro.storage import MicroNN
 
@@ -60,13 +66,12 @@ def main(smoke: bool = False):
         res = MicroNN(dim=d, path=path, config=cfg)
         res.recover()
         q = X[:n_q]
+        spec = Q.knn(k=k, n_probe=n_probe)       # ONE spec for every engine
         # reference: the resident float32 ANN path (recall denominator)
-        r_f32 = executor.search(res.index, q, k=k, n_probe=n_probe,
-                                quantized=False)
+        r_f32 = executor.run(res.index, q, spec.quantized(False))
         ref_ids = np.asarray(r_f32.ids)
-        r_res = res.search(q, k=k, n_probe=n_probe)     # resident int8 path
-        us_res = timeit(lambda: res.search(q, k=k, n_probe=n_probe),
-                        iters=iters)
+        r_res = res.query(q, spec)               # resident int8 path
+        us_res = timeit(lambda: res.query(q, spec), iters=iters)
         resident_bytes = res.stats()["resident_bytes"]
         emit(f"paged_resident_ref_k{k}", us_res,
              f"resident_mb={resident_bytes / 2**20:.2f};"
@@ -77,7 +82,7 @@ def main(smoke: bool = False):
             pag = MicroNN(dim=d, path=path, config=cfg, memory_budget_mb=mb)
             pag.recover()
             budget = int(mb * 2 ** 20)
-            r_pag = pag.search(q, k=k, n_probe=n_probe)
+            r_pag = pag.query(q, spec)
             # acceptance: bit-identical to the fully-resident path, and the
             # pool never exceeds the budget
             assert np.array_equal(np.asarray(r_pag.ids),
@@ -87,8 +92,7 @@ def main(smoke: bool = False):
                                   np.asarray(r_res.scores)), \
                 f"paged scores diverge from resident at {mb} MB"
             assert pag.index.cache.resident_bytes <= budget
-            us = timeit(lambda: pag.search(q, k=k, n_probe=n_probe),
-                        iters=iters)
+            us = timeit(lambda: pag.query(q, spec), iters=iters)
             assert pag.index.cache.resident_bytes <= budget
             recalls[mb] = _recall(np.asarray(r_pag.ids), ref_ids, k)
             s = pag.stats()
@@ -102,17 +106,36 @@ def main(smoke: bool = False):
             # regime where a small pool captures most of the traffic
             zipf = 1.0 / np.arange(1, n_centers + 1) ** 1.1
             zipf /= zipf.sum()
-            h0, m0 = pag.index.cache.hits, pag.index.cache.misses
-            for _ in range(30 if smoke else 60):
-                c = rng.choice(n_centers, size=4, p=zipf)
-                zq = (centers[c] + rng.normal(size=(4, d))
-                      ).astype(np.float32)
-                pag.search(zq, k=k, n_probe=n_probe)
-                assert pag.index.cache.resident_bytes <= budget
-            h, m = pag.index.cache.hits - h0, pag.index.cache.misses - m0
+
+            def zipf_phase(n_iter):
+                h0, m0 = pag.index.cache.hits, pag.index.cache.misses
+                for _ in range(n_iter):
+                    c = rng.choice(n_centers, size=4, p=zipf)
+                    zq = (centers[c] + rng.normal(size=(4, d))
+                          ).astype(np.float32)
+                    pag.query(zq, spec)
+                    assert pag.index.cache.resident_bytes <= budget
+                h = pag.index.cache.hits - h0
+                m = pag.index.cache.misses - m0
+                return h, m, h / max(h + m, 1)
+
+            n_iter = 30 if smoke else 60
+            h, m, rate1 = zipf_phase(n_iter)
             emit(f"paged_budget{mb}mb_zipf_hit_rate", 0.0,
-                 f"hit_rate={h / max(h + m, 1):.3f};hits={h};misses={m};"
+                 f"hit_rate={rate1:.3f};hits={h};misses={m};"
                  f"evictions={pag.stats()['evictions']}")
+
+            # scan-resistance: a one-off exact full-collection stream
+            # (admit=False faults ride the scan ring) must NOT evict the
+            # hot Zipf working set -- hit rate may not regress
+            pag.query(q[:4], Q.exact(k))
+            assert pag.index.cache.resident_bytes <= budget
+            h2, m2, rate2 = zipf_phase(n_iter)
+            emit(f"paged_budget{mb}mb_zipf_after_exact_scan", 0.0,
+                 f"hit_rate={rate2:.3f};hits={h2};misses={m2}")
+            assert rate2 >= rate1 - 0.05, \
+                f"exact scan flushed the hot set at {mb} MB: " \
+                f"Zipf hit rate {rate1:.3f} -> {rate2:.3f}"
 
         # regression gate (scripts/ci.sh --smoke): the paged path must keep
         # the paper's recall at every budget

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import executor, ivf
+from repro.core.query import Q
 from repro.core.types import IVFConfig
 
 from .common import _recall, emit, timeit
@@ -47,19 +48,18 @@ def main(smoke: bool = False):
          f"ratio={code_bytes / vec_bytes:.3f}")
 
     # -- recall + latency: float32 tier vs int8 tier at rerank factors ------
-    r_f32 = executor.search(idx, q, k=k, n_probe=n_probe, quantized=False)
-    us_f32 = timeit(lambda: executor.search(idx, q, k=k, n_probe=n_probe,
-                                            quantized=False))
+    spec = Q.knn(k=k, n_probe=n_probe)
+    r_f32 = executor.run(idx, q, spec.quantized(False))
+    us_f32 = timeit(lambda: executor.run(idx, q, spec.quantized(False)))
     emit(f"sq_f32_scan_k{k}", us_f32, "recall=1.000(reference)")
     ref_ids = np.asarray(r_f32.ids)
     recalls = {}
     for rf in (1, 2, 4):
         idx_rf = dataclasses.replace(
             idx, config=dataclasses.replace(cfg, rerank_factor=rf))
-        r = executor.search(idx_rf, q, k=k, n_probe=n_probe, quantized=True)
+        r = executor.run(idx_rf, q, spec.quantized(True))
         recalls[rf] = _recall(np.asarray(r.ids), ref_ids, k)
-        us = timeit(lambda: executor.search(idx_rf, q, k=k, n_probe=n_probe,
-                                            quantized=True))
+        us = timeit(lambda: executor.run(idx_rf, q, spec.quantized(True)))
         emit(f"sq_int8_rerank{rf}_k{k}", us,
              f"recall_at_{k}={recalls[rf]:.3f};vs_f32={us_f32 / us:.2f}x")
 

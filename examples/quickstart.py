@@ -1,17 +1,22 @@
-"""MicroNN quickstart: the embedded vector search engine end-to-end.
+"""MicroNN quickstart: the embedded vector search engine end-to-end,
+against the declarative query API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Covers the full paper workflow: build -> ANN search -> hybrid search with
-the query optimizer -> streaming upserts/deletes -> incremental
-maintenance -> durable recovery, all against a real SQLite file.
+Covers the full paper workflow on the two public objects -- `QuerySpec`
+(built with the fluent `Q` builder; one frozen spec == one compile-cache
+entry) and `ResultSet` -- plus batched write sessions: build -> ANN
+search -> hybrid search with the query optimizer -> a write session
+(one transaction) -> incremental maintenance -> durable recovery, all
+against a real SQLite file.
 """
 import os
 import tempfile
 
 import numpy as np
 
-from repro.core.hybrid import And, Pred
+from repro.core.hybrid import Pred
+from repro.core.query import Q
 from repro.core.types import IVFConfig
 from repro.data import synthetic
 from repro.storage import MicroNN
@@ -35,35 +40,46 @@ def main():
         print(f"built IVF index: k={eng.index.k} partitions,"
               f" p_max={eng.index.p_max}")
 
-        # --- ANN search at a recall target -------------------------------
-        res = eng.search(ds.Q[:32], k=100, n_probe=8)
+        # --- ANN search at a recall target: build the spec once ----------
+        knn100 = Q.knn(k=100, n_probe=8)
+        res = eng.query(ds.Q[:32], knn100)
         rec = synthetic.recall(np.asarray(res.ids), ds.gt[:32],
                                np.arange(len(ds.X)), 100)
         print(f"ANN recall@100 (n_probe=8): {rec:.3f}")
 
-        # --- hybrid search: the optimizer picks pre vs post filtering ----
-        selective = And((Pred(0, "eq", 3.0), Pred(1, "ge", 2020)))
-        res = eng.search(ds.Q[:4], k=10, predicate=selective)
-        print(f"hybrid (selective): top ids {np.asarray(res.ids)[0, :5]}")
+        # --- hybrid search: predicates live IN the query object ----------
+        # (the optimizer resolves pre- vs post-filtering from selectivity)
+        hybrid = Q.knn(k=10).where(Pred(0, "==", 3.0),
+                                   Pred(1, ">=", 2020)).with_attrs()
+        res = eng.query(ds.Q[:4], hybrid)
+        top = res[0]                      # per-query ResultSet indexing
+        print(f"hybrid (selective): top ids {top.ids[:5]}"
+              f" attrs {top.attrs[:2].tolist()}")
 
-        # --- streaming updates ------------------------------------------
+        # --- write session: one transaction, one delta-encode batch ------
         new_vecs = ds.Q[:8] + 0.01
-        eng.upsert(np.arange(10_000_000, 10_000_008), new_vecs,
-                   np.zeros((8, 2), np.float32))
-        r = eng.search(new_vecs[:2], k=1)
+        with eng.session() as s:
+            s.upsert(np.arange(10_000_000, 10_000_008), new_vecs,
+                     np.zeros((8, 2), np.float32))
+            s.delete(np.asarray([10_000_000]))        # coalesced at commit
+        r = eng.query(new_vecs[:2], Q.knn(k=1))
         print(f"freshly inserted are immediately searchable:"
               f" {np.asarray(r.ids).ravel()}")
-        eng.delete(np.asarray([10_000_000]))
         eng.maintain(force="flush")
         print(f"after flush: delta live rows ="
               f" {int(np.asarray(eng.index.delta.valid).sum())}")
+
+        # --- observability: the spec cache is part of stats() ------------
+        st = eng.stats()
+        print(f"executor: trace_count={st['trace_count']}"
+              f" compile_cache_size={st['compile_cache_size']}")
 
         # --- durable recovery --------------------------------------------
         eng2 = MicroNN(dim=ds.dim, n_attr=2,
                        path=os.path.join(td, "vectors.db"),
                        config=eng.config)
         eng2.recover()
-        r2 = eng2.search(new_vecs[1:2], k=1)
+        r2 = eng2.query(new_vecs[1:2], Q.knn(k=1))
         print(f"recovered engine still finds upsert:"
               f" {int(r2.ids[0, 0])} (expect 10000001)")
 

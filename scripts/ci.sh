@@ -9,6 +9,11 @@ python -c "import repro; print('import ok:', repro.__name__)"
 # resident-bytes rows; fails loud if the quantized path rots)
 python -m benchmarks.bench_quantized --smoke
 # regression gate for the disk-resident pager: paged-vs-resident parity,
-# recall pin at every budget, and resident bytes <= budget
+# recall pin at every budget, resident bytes <= budget, and the scan-
+# resistant admission hit-rate pin
 python -m benchmarks.bench_paged --smoke
+# public-API smoke: the quickstart exercises QuerySpec/ResultSet, write
+# sessions, hybrid queries and recovery end-to-end -- API breakage fails
+# the gate before the unit tests even start
+python examples/quickstart.py
 python -m pytest -q "$@"

@@ -2,6 +2,7 @@
 
   kmeans       -- Alg. 1: mini-batch balanced k-means (C1)
   ivf          -- index build + padded partition-major device layout (C2)
+  query        -- the declarative API: QuerySpec/Q builder + ResultSet
   search       -- Alg. 2: ANN / exact / pre-filter search (C3)
   mqo          -- batch multi-query optimization (C4)
   hybrid       -- predicates, histograms, selectivity estimation (C5)
@@ -14,13 +15,15 @@
   rag          -- kNN-LM integration with the model zoo
 """
 from . import (delta, hybrid, ivf, kmeans, maintenance, monitor, mqo,
-               optimizer, quantize, rag, search, topk)
+               optimizer, quantize, query, rag, search, topk)
+from .query import Q, QuerySpec, ResultSet
 from .types import (DeltaStore, IVFConfig, IVFIndex, SearchResult,
                     INVALID_ID, pairwise_scores, normalize_if_cosine)
 
 __all__ = [
     "delta", "hybrid", "ivf", "kmeans", "maintenance", "monitor", "mqo",
-    "optimizer", "quantize", "rag", "search", "topk",
+    "optimizer", "quantize", "query", "rag", "search", "topk",
+    "Q", "QuerySpec", "ResultSet",
     "DeltaStore", "IVFConfig", "IVFIndex", "SearchResult", "INVALID_ID",
     "pairwise_scores", "normalize_if_cosine",
 ]

@@ -1,16 +1,17 @@
 """Unified query-execution layer: every search is a QueryPlan run by one
 fused scan primitive (the repo's single implementation of paper Alg. 2).
 
-Module map -- who builds plans, who runs them:
+Module map -- who builds specs, who runs them:
 
-    core/search.py      thin plan-builders: ann_search / exact_search /
-                        prefilter_search (public API preserved)
-    core/mqo.py         thin plan-builder: mqo_search (same shared-scan
-                        plan as ANN, explicit union cap)
-    core/optimizer.py   hybrid pre/post plan choice (paper Eqs. 1-3),
+    core/query.py       the public object model: QuerySpec (frozen,
+                        hashable -- the jit cache key) and ResultSet
+    core/search.py      kwarg shims: ann_search / exact_search /
+                        prefilter_search -> QuerySpec (public API kept)
+    core/mqo.py         kwarg shim: mqo_search -> spec with a union cap
+    core/optimizer.py   hybrid pre/post spec choice (paper Eqs. 1-3),
                         both arms issued through this executor
-    core/rag.py         kNN-LM retrieval -> ANN plans
-    storage/engine.py   MicroNN.search -> plans (ann/exact/predicate/mqo)
+    core/rag.py         kNN-LM retrieval -> ANN specs
+    storage/engine.py   MicroNN.query(vecs, QuerySpec) -> run()
     distributed/        sharded_index phase 3 calls fused_scan directly
                         on each device's local partition shard
     kernels/ivf_scan.py the Pallas TPU backend of fused_scan
@@ -46,11 +47,14 @@ Two interchangeable backends execute the same plan shape-identically:
 Neither materialises the seed's per-query [Q, n_probe, p_max, d] gather:
 the probe union is scanned once and queries mask into it.
 
-Plan/compile cache: the `search` facade buckets the query count to the
-next power of two and routes through one jitted entry point whose cache
-key is (Q_bucket, kind, k, n_probe/u_max/cap, predicate_id, backend) --
-repeated same-shape (or same-bucket) queries never retrace.
-`trace_count()` exposes the retrace counter for tests/benchmarks.
+Plan/compile cache: the `run` facade buckets the query count to the next
+power of two and routes through one jitted entry point whose static
+cache key IS the QuerySpec (core/query.py) -- a frozen, structurally
+hashable dataclass, so two equal specs (including structurally-equal
+predicate trees) provably share one compile-cache entry and a stream of
+variable-size batches compiles once per (Q_bucket, spec).
+`trace_count()` is the retrace counter; `compile_cache_size()` the
+number of live entries -- both surface through MicroNN.stats().
 """
 from __future__ import annotations
 
@@ -63,10 +67,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import quantize
+from .hybrid import compile_filter
+from .query import QuerySpec, ResultSet
 from .topk import dedup_by_id, mask_scores, merge_topk, topk_smallest
-from .types import (INVALID_ID, MASKED_SCORE, IVFIndex, SearchResult,
-                    normalize_if_cosine, pairwise_scores, register_dataclass,
-                    static_field)
+from .types import (INVALID_ID, MASKED_SCORE, IVFIndex, PagedIndex,
+                    SearchResult, normalize_if_cosine, pairwise_scores,
+                    register_dataclass, static_field)
 
 # attr_filter: [..., n_attr] float32 -> [...] bool  (hybrid.compile_filter;
 # memoized there so equal predicates are identical objects / cache keys)
@@ -484,28 +490,100 @@ def execute_plan(index: IVFIndex, plan: QueryPlan,
 
 
 # ---------------------------------------------------------------------------
-# Cached entry point (the engine-facing facade)
+# Cached entry point (the engine-facing facade): the QuerySpec IS the key
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("kind", "k", "n_probe", "u_max", "cap",
-                                   "attr_filter", "backend", "quantized"))
-def _run(index, queries, qmask, kind, k, n_probe, u_max, cap, attr_filter,
-         backend, quantized):
+def _spec_filter(spec: QuerySpec) -> Optional[AttrFilter]:
+    """Spec predicate -> fused filter callable. Predicate trees compile
+    through the memoized hybrid.compile_filter (structurally-equal trees
+    share one callable); pre-compiled callables pass through."""
+    if spec.predicate is None:
+        return None
+    if callable(spec.predicate):
+        return spec.predicate
+    return compile_filter(spec.predicate)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _run_spec(index, queries, qmask, spec: QuerySpec):
+    """THE jitted entry point: its only static argument is the QuerySpec,
+    so the spec (plus the query-count bucket and the index pytree
+    structure) is the entire compile-cache key -- equal specs share one
+    trace by construction."""
     global _TRACE_COUNT
     _TRACE_COUNT += 1          # executes only while tracing
-    if kind == "exact":
-        plan = plan_exact(index, queries, k, attr_filter)
-    elif kind == "prefilter":
-        plan = plan_prefilter(index, queries, k, attr_filter, cap)
+    f = _spec_filter(spec)
+    if spec.kind == "exact":
+        plan = plan_exact(index, queries, spec.k, f)
+    elif f is not None and spec.hybrid == "pre":
+        assert spec.cap is not None, \
+            "pre-filtering needs a static gather cap: use " \
+            "spec.prefilter(cap) or let MicroNN.query size it from the " \
+            "selectivity estimate"
+        plan = plan_prefilter(index, queries, spec.k, f, spec.cap)
     else:
-        plan = plan_ann(index, queries, k, n_probe, attr_filter,
-                        u_max=u_max, qmask=qmask)
-    return execute_plan(index, plan, backend=backend, quantized=quantized)
+        plan = plan_ann(index, queries, spec.k, spec.n_probe, f,
+                        u_max=spec.u_max, qmask=qmask)
+    return execute_plan(index, plan, backend=spec.on_backend,
+                        quantized=spec.use_quantized)
+
+
+def compile_cache_size() -> int:
+    """Live jit cache entries of the spec entry point (observability:
+    MicroNN.stats() reports it next to trace_count())."""
+    try:
+        return int(_run_spec._cache_size())
+    except AttributeError:      # older jax without _cache_size
+        return trace_count()
 
 
 def _bucket(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def run(index, queries: jax.Array, spec: QuerySpec, *,
+        bucket: bool = True) -> ResultSet:
+    """Execute a QuerySpec against a resident IVFIndex or a PagedIndex --
+    the single query entry point every public path routes through.
+
+    Resident execution buckets the query count to the next power of two
+    (padding queries are masked out of the plan and sliced off the
+    result), so the jit cache is keyed on (Q_bucket, spec): a stream of
+    variable-size batches compiles once per bucket, and equal specs
+    share one entry. `spec.use_quantized` is the scan-tier dimension of
+    the key (the index pytree structure -- codes present or not -- is
+    itself part of jit's implicit key). Paged execution streams the
+    probe set through the frame pool (paged_search).
+    """
+    if isinstance(index, PagedIndex):
+        if spec.predicate is not None and spec.hybrid == "pre":
+            raise ValueError(
+                "paged mode fuses predicates into the frame scan "
+                "(post-filtering); pre-filtering needs the resident "
+                "float32 tier")
+        if spec.u_max is not None:
+            # refuse rather than silently diverge: a capped union changes
+            # which partitions are scanned, and the paged probe union is
+            # pinned to the resident plan_ann ordering (bit-parity)
+            raise ValueError(
+                "union_cap is not supported in paged mode (the paged "
+                "probe union mirrors the resident plan exactly)")
+        return paged_search(
+            index, queries, k=spec.k, kind=spec.kind,
+            n_probe=spec.n_probe, attr_filter=_spec_filter(spec),
+            backend=spec.on_backend, quantized=spec.use_quantized,
+            spec=spec)
+    q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+    Q = q.shape[0]
+    b = _bucket(Q) if bucket else Q
+    if b != Q:
+        q = jnp.concatenate([q, jnp.zeros((b - Q, q.shape[1]), q.dtype)])
+    qmask = jnp.arange(b) < Q
+    res = _run_spec(index, q, qmask, spec)
+    if b != Q:
+        res = SearchResult(ids=res.ids[:Q], scores=res.scores[:Q])
+    return ResultSet.of(res, spec)
 
 
 def search(
@@ -521,34 +599,26 @@ def search(
     backend: Optional[str] = None,
     quantized: Optional[bool] = None,  # None: auto (codes present)
     bucket: bool = True,
-) -> SearchResult:
-    """Build + execute a QueryPlan with query-count bucketing.
+) -> ResultSet:
+    """Kwarg-style shim over the QuerySpec entry point (API compat).
 
-    Q is padded to the next power of two so the jit cache is keyed on
-    (Q_bucket, kind, k, n_probe/u_max/cap, predicate_id, backend,
-    quantized) -- a stream of variable-size batches compiles once per
-    bucket, not once per batch size. Padding queries are masked out of
-    the plan (qmask) and their result rows sliced off. `quantized` is
-    the scan-tier dimension of the cache key: the same index can serve
-    int8-scan and float32-scan plans side by side without retracing
-    (the index pytree structure -- codes present or not -- is itself
-    part of jit's implicit key).
+    Builds the equivalent spec and routes through `run`, so repeated
+    calls with equal kwargs -- or a hand-built equal spec -- share the
+    same compile-cache entry.
     """
     if kind == "prefilter":
         assert cap is not None, "kind='prefilter' needs a static cap " \
             "(the optimizer sizes it from the selectivity estimate)"
         assert attr_filter is not None, "kind='prefilter' needs attr_filter"
-    q = jnp.asarray(queries, jnp.float32)
-    Q = q.shape[0]
-    b = _bucket(Q) if bucket else Q
-    if b != Q:
-        q = jnp.concatenate([q, jnp.zeros((b - Q, q.shape[1]), q.dtype)])
-    qmask = jnp.arange(b) < Q
-    res = _run(index, q, qmask, kind, k, n_probe, u_max, cap, attr_filter,
-               backend, quantized)
-    if b != Q:
-        res = SearchResult(ids=res.ids[:Q], scores=res.scores[:Q])
-    return res
+    pred = None if attr_filter is None else \
+        getattr(attr_filter, "predicate", attr_filter)
+    spec = QuerySpec(
+        kind="exact" if kind == "exact" else "ann", k=k, n_probe=n_probe,
+        u_max=u_max, cap=cap, predicate=pred,
+        hybrid="pre" if kind == "prefilter" else
+        ("post" if pred is not None else "auto"),
+        use_quantized=quantized, on_backend=backend)
+    return run(index, queries, spec, bucket=bucket)
 
 
 # ---------------------------------------------------------------------------
@@ -659,7 +729,8 @@ def paged_search(
     attr_filter: Optional[AttrFilter] = None,
     backend: Optional[str] = None,
     quantized: Optional[bool] = None,
-) -> SearchResult:
+    spec: Optional[QuerySpec] = None,  # carried onto the ResultSet
+) -> ResultSet:
     """Run a search against a PagedIndex through the budgeted frame pool.
 
     The probe union is processed in chunks of at most the pool's frame
@@ -711,9 +782,16 @@ def paged_search(
         assert cache.attrs_pool is not None, \
             "attribute predicate needs an attr-backed frame pool " \
             "(store built with n_attr > 0)"
-    for s in range(0, n, cache.capacity):
-        cpids = upart[s:s + cache.capacity]
-        frames = cache.fault(cpids)
+    # Scan-resistant admission (ROADMAP open item): a paged exact search
+    # reads every partition exactly once, so admitting its stream would
+    # flush the hot ANN working set out of the pool. Exact faults run
+    # with admit=False -- they cycle through a small reusable scan ring
+    # inside the pool (budget unchanged) -- and chunk to the ring size.
+    admit = kind != "exact"
+    chunk = cache.capacity if admit else cache.scan_frames
+    for s in range(0, n, chunk):
+        cpids = upart[s:s + chunk]
+        frames = cache.fault(cpids, admit=admit)
         try:
             # read the pools AFTER fault(): the batched scatter rebinds
             # them (functional .at[].set), so a reference captured before
@@ -721,7 +799,7 @@ def paged_search(
             attrs_pool = cache.attrs_pool if attr_filter is not None \
                 else None
             fidx = jnp.asarray(frames.astype(np.int32))
-            cq = qsel[:, s:s + cache.capacity]
+            cq = qsel[:, s:s + chunk]
             k_chunk = min(k_run, len(cpids) * p_max)
             if use_sq:
                 cs, ci = _scan_frames_sq(
@@ -755,7 +833,6 @@ def paged_search(
     s_f, i_f = _paged_epilogue(q, s_m, i_m, pindex.delta, qmask,
                                k=k, k_scan=k_scan, metric=cfg.metric,
                                attr_filter=attr_filter)
-    res = SearchResult(ids=i_f, scores=s_f)
     if b != Q:
-        res = SearchResult(ids=res.ids[:Q], scores=res.scores[:Q])
-    return res
+        s_f, i_f = s_f[:Q], i_f[:Q]
+    return ResultSet(ids=i_f, scores=s_f, spec=spec)

@@ -25,21 +25,30 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 _OPS = ("lt", "le", "gt", "ge", "eq", "ne", "match")
+# symbolic spellings accepted by the query builder; canonicalised at
+# construction so structurally-equal predicates stay hash-equal
+_OP_ALIASES = {"<": "lt", "<=": "le", ">": "gt", ">=": "ge",
+               "==": "eq", "=": "eq", "!=": "ne"}
 
 
 @dataclasses.dataclass(frozen=True)
 class Pred:
     """Leaf predicate: attrs[..., col] <op> value.
 
-    `match` treats the column as a token bitset (each row holds an int
-    bitmask of tags; value is the required tag bitmask) -- our stand-in for
-    the paper's FTS MATCH over tag strings.
+    `op` accepts the canonical names ("lt", ..., "match") or symbolic
+    aliases ("<", "==", ...), canonicalised at construction. `match`
+    treats the column as a token bitset (each row holds an int bitmask of
+    tags; value is the required tag bitmask) -- our stand-in for the
+    paper's FTS MATCH over tag strings.
     """
     col: int
     op: str
     value: float
 
     def __post_init__(self):
+        op = _OP_ALIASES.get(self.op, self.op)
+        if op != self.op:
+            object.__setattr__(self, "op", op)
         assert self.op in _OPS, self.op
 
 
@@ -112,6 +121,9 @@ def compile_filter(node: Node):
     # make it stable under jit static-arg hashing
     fn.__name__ = f"filter_{hash(key) & 0xFFFFFFFF:x}"
     fn.predicate_id = fn.__name__
+    # the source tree rides along so a QuerySpec built from a compiled
+    # filter recovers the structurally-hashable predicate (core/query.py)
+    fn.predicate = node
     _FILTER_CACHE[key] = fn
     return fn
 

@@ -5,12 +5,13 @@ MQO inverts the mapping: group queries by partition, read each partition
 once, and score *all* interested queries against it with a single matmul.
 
 In the unified execution layer this is not a separate implementation:
-an MQO batch is exactly an ANN QueryPlan -- the shared probe union is
-the plan's `part_ids` and the query-by-partition selection matrix is its
-`qsel` mask -- so `mqo_search` is a thin plan-builder over core/executor.
-The only extra knob is `u_max`, a static cap on the scan union (the true
-union has |U| <= min(k, Q*n_probe) members; unioned-out slots carry zero
-votes and are masked).
+an MQO batch is exactly an ANN QuerySpec -- the shared probe union is
+the compiled plan's `part_ids` and the query-by-partition selection
+matrix is its `qsel` mask -- so `mqo_search` is a thin shim that builds
+`Q.knn(...).union_cap(u_max)` and runs it. The only extra knob is
+`u_max`, a static cap on the scan union (the true union has
+|U| <= min(k, Q*n_probe) members; unioned-out slots carry zero votes
+and are masked).
 
 I/O amortisation: bytes gathered drop from  Q * n_probe * p_max * d  (naive)
 to  u_max * p_max * d  (shared) -- the quantity benchmarks/bench_mqo.py
@@ -24,7 +25,8 @@ import jax
 
 from . import executor
 from .executor import AttrFilter
-from .types import IVFIndex, SearchResult
+from .query import Q, ResultSet
+from .types import IVFIndex
 
 
 def mqo_search(
@@ -35,11 +37,12 @@ def mqo_search(
     u_max: Optional[int] = None,
     attr_filter: Optional[AttrFilter] = None,
     backend: Optional[str] = None,
-) -> SearchResult:
+) -> ResultSet:
     """Partition-major shared scan for a query batch."""
-    return executor.search(index, queries, k=k, kind="ann", n_probe=n_probe,
-                           u_max=u_max, attr_filter=attr_filter,
-                           backend=backend)
+    spec = Q.knn(k=k, n_probe=n_probe).union_cap(u_max).backend(backend)
+    if attr_filter is not None:
+        spec = spec.where(attr_filter).postfilter()
+    return executor.run(index, queries, spec)
 
 
 def gathered_bytes(index: IVFIndex, batch: int, n_probe: int,

@@ -10,22 +10,24 @@ Chooses between:
 Decision rule: pre-filter iff  F_hat_filters < F_hat_IVF  where
 F_hat_IVF = n_probe * p_target / |R|   (Eq. 2).
 
-Both arms are plan-builders over core/executor.py: the decision picks the
-plan *kind* ("prefilter" vs "ann" with the predicate fused), and the same
-fused scan primitive executes either -- which is what makes the two plans'
-costs comparable in the first place.
+Both arms are QuerySpec rewrites over core/executor.py: `plan_spec`
+resolves a spec's `hybrid="auto"` into a concrete "pre" (with a sized
+gather cap) or "post" spec, and the same fused scan primitive executes
+either -- which is what makes the two plans' costs comparable in the
+first place. `execute` survives as a kwarg shim over the spec path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import executor
-from .hybrid import AttributeStats, Node, compile_filter
-from .types import IVFIndex, SearchResult
+from .hybrid import AttributeStats, Node
+from .query import Q, QuerySpec, ResultSet
+from .types import IVFIndex
 
 
 @dataclasses.dataclass
@@ -60,6 +62,26 @@ class HybridOptimizer:
         return PlanDecision(plan=plan, f_filters=f_filters, f_ivf=f_ivf,
                             prefilter_cap=cap)
 
+    def plan_spec(self, index: IVFIndex, spec: QuerySpec
+                  ) -> Tuple[QuerySpec, PlanDecision]:
+        """Resolve a hybrid spec into a concrete executable one: pick
+        "pre" vs "post" for `hybrid='auto'` (Eq. 2) and size the
+        prefilter gather cap when the caller left it to us. The rewrite
+        keeps the spec the jit cache key -- equal input specs always
+        resolve to equal output specs while the stats stand."""
+        tree = spec.predicate_tree
+        assert tree is not None, \
+            "plan_spec needs an inspectable predicate tree (opaque " \
+            "filter callables have no selectivity estimate)"
+        decision = self.choose(index, tree, spec.n_probe)
+        plan = decision.plan if spec.hybrid == "auto" else spec.hybrid
+        if plan == "pre":
+            cap = spec.cap if spec.cap is not None else decision.prefilter_cap
+            out = spec.prefilter(cap)
+        else:
+            out = spec.postfilter()
+        return out, dataclasses.replace(decision, plan=plan)
+
     def execute(
         self,
         index: IVFIndex,
@@ -70,17 +92,11 @@ class HybridOptimizer:
         force_plan: Optional[str] = None,
         use_mqo: bool = False,      # kept for API compat: ANN == MQO plan now
         backend: Optional[str] = None,
-    ) -> tuple[SearchResult, PlanDecision]:
+    ) -> tuple[ResultSet, PlanDecision]:
+        """Kwarg shim over the spec path (API compat)."""
         del use_mqo
-        decision = self.choose(index, predicate, n_probe)
-        plan = force_plan or decision.plan
-        attr_filter = compile_filter(predicate)
-        if plan == "pre":
-            res = executor.search(index, queries, k=k, kind="prefilter",
-                                  attr_filter=attr_filter,
-                                  cap=decision.prefilter_cap, backend=backend)
-        else:
-            res = executor.search(index, queries, k=k, kind="ann",
-                                  n_probe=n_probe, attr_filter=attr_filter,
-                                  backend=backend)
-        return res, dataclasses.replace(decision, plan=plan)
+        spec = Q.knn(k=k, n_probe=n_probe).where(predicate).backend(backend)
+        if force_plan is not None:
+            spec = dataclasses.replace(spec, hybrid=force_plan)
+        spec, decision = self.plan_spec(index, spec)
+        return executor.run(index, queries, spec), decision

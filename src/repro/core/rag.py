@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from . import executor
-from .types import IVFIndex, SearchResult, static_field, register_dataclass
+from .query import Q, QuerySpec
+from .types import IVFIndex, static_field, register_dataclass
 
 
 @register_dataclass
@@ -33,6 +34,12 @@ class RagConfig:
     n_probe: int = static_field(default=8)
     lam: float = static_field(default=0.25)     # kNN interpolation weight
     temperature: float = static_field(default=10.0)  # distance -> weight
+
+    def spec(self) -> QuerySpec:
+        """The retrieval QuerySpec this config denotes: one frozen spec
+        per config, so every decode step of a serving session hits the
+        same executor compile-cache entry."""
+        return Q.knn(k=self.k, n_probe=self.n_probe)
 
 
 @register_dataclass
@@ -49,10 +56,15 @@ def knn_logits(
     hidden: jax.Array,        # [B, d] query embeddings (LM hidden states)
     vocab: int,
     cfg: RagConfig,
+    spec: Optional[QuerySpec] = None,
 ) -> jax.Array:
-    """[B, vocab] log-probabilities from the retrieved neighbourhood."""
-    res: SearchResult = executor.search(
-        ds.index, hidden, k=cfg.k, kind="ann", n_probe=cfg.n_probe)
+    """[B, vocab] log-probabilities from the retrieved neighbourhood.
+
+    `spec` overrides the retrieval QuerySpec (e.g. a hybrid predicate
+    over document attributes, or a backend pin); defaults to cfg.spec().
+    """
+    res = executor.run(ds.index, hidden, spec if spec is not None
+                       else cfg.spec())
     ok = res.ids >= 0
     toks = ds.next_token[jnp.maximum(res.ids, 0)]            # [B, K]
     w = jax.nn.softmax(
@@ -81,6 +93,8 @@ def rag_decode_logits(
     lm_logits: jax.Array,
     hidden: jax.Array,
     cfg: RagConfig,
+    spec: Optional[QuerySpec] = None,
 ) -> jax.Array:
     vocab = lm_logits.shape[-1]
-    return interpolate(lm_logits, knn_logits(ds, hidden, vocab, cfg), cfg.lam)
+    return interpolate(lm_logits, knn_logits(ds, hidden, vocab, cfg, spec),
+                       cfg.lam)

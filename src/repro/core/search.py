@@ -1,12 +1,15 @@
-"""ANN / exact KNN search (paper Alg. 2): thin plan-builders.
+"""ANN / exact KNN search (paper Alg. 2): kwarg shims over QuerySpecs.
 
-The actual scan lives in core/executor.py -- every public entry point
-here compiles its arguments into a QueryPlan (probe set + per-query
-selection mask + optional fused attribute predicate + k) and hands it to
-the unified executor, which runs one fused scan primitive on either the
+The public object model lives in core/query.py: a frozen `QuerySpec`
+built with the fluent `Q` builder is THE query representation (and the
+executor's jit cache key), and `ResultSet` is the typed result every
+path returns. The entry points here survive as thin shims that compile
+their arguments into a spec and hand it to `executor.run`, which builds
+the QueryPlan (probe set + per-query selection mask + optional fused
+attribute predicate + k) and runs one fused scan primitive on either the
 Pallas TPU kernel or the shape-identical XLA reference backend.
 
-Faithful structure (now encoded as plans):
+Faithful structure (now encoded as specs -> plans):
   1. scan centroids, pick the n nearest partitions          (FindNearestCentroids)
   2. always include the delta partition                     (§3.6)
   3. scan chosen partitions, batched distance via matmul    (SIMD -> MXU)
@@ -26,7 +29,8 @@ import jax
 
 from . import executor
 from .executor import AttrFilter, find_nearest_centroids  # noqa: F401 (re-export)
-from .types import INVALID_ID, SearchResult, IVFIndex
+from .query import Q, QuerySpec, ResultSet  # noqa: F401 (re-export)
+from .types import INVALID_ID, IVFIndex
 
 import jax.numpy as jnp
 
@@ -38,11 +42,13 @@ def ann_search(
     n_probe: int,
     attr_filter: Optional[AttrFilter] = None,
     backend: Optional[str] = None,
-) -> SearchResult:
-    """Alg. 2 as an ANN plan: per-query probe sets scanned as one shared
+) -> ResultSet:
+    """Alg. 2 as an ANN spec: per-query probe sets scanned as one shared
     union with a selection mask (no per-query partition gather)."""
-    return executor.search(index, queries, k=k, kind="ann", n_probe=n_probe,
-                           attr_filter=attr_filter, backend=backend)
+    spec = Q.knn(k=k, n_probe=n_probe).backend(backend)
+    if attr_filter is not None:
+        spec = spec.where(attr_filter).postfilter()
+    return executor.run(index, queries, spec)
 
 
 def exact_search(
@@ -51,12 +57,14 @@ def exact_search(
     k: int,
     attr_filter: Optional[AttrFilter] = None,
     backend: Optional[str] = None,
-) -> SearchResult:
+) -> ResultSet:
     """Brute-force KNN over every live row (paper: 'trivial but resource
     intensive'); also the 100%-recall oracle for tests/benchmarks.
-    Plan: probe set = all partitions, no selection mask."""
-    return executor.search(index, queries, k=k, kind="exact",
-                           attr_filter=attr_filter, backend=backend)
+    Spec: kind "exact" -- probe set = all partitions, no selection mask."""
+    spec = Q.exact(k=k).backend(backend)
+    if attr_filter is not None:
+        spec = spec.where(attr_filter)
+    return executor.run(index, queries, spec)
 
 
 def prefilter_search(
@@ -66,19 +74,19 @@ def prefilter_search(
     attr_filter: AttrFilter,
     cap: int,
     backend: Optional[str] = None,
-) -> SearchResult:
-    """Pre-filtering plan (paper §3.5): evaluate the predicate first, fetch
+) -> ResultSet:
+    """Pre-filtering spec (paper §3.5): evaluate the predicate first, fetch
     only qualifying rows, brute-force over that subset (100% recall).
 
     `cap` is the static gather budget; the optimizer sizes it from the
     selectivity estimate (x safety margin). Cost scales with `cap`, i.e.
     with predicate selectivity -- matching the paper's latency behaviour.
     """
-    return executor.search(index, queries, k=k, kind="prefilter",
-                           attr_filter=attr_filter, cap=cap, backend=backend)
+    spec = Q.knn(k=k).where(attr_filter).prefilter(cap).backend(backend)
+    return executor.run(index, queries, spec)
 
 
-def recall_at_k(approx: SearchResult, exact: SearchResult, k: int) -> jax.Array:
+def recall_at_k(approx, exact, k: int) -> jax.Array:
     """recall@k: |approx top-k  ∩  exact top-k| / k (paper's metric)."""
     a = approx.ids[:, :k]
     e = exact.ids[:, :k]

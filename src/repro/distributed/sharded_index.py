@@ -32,6 +32,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core import executor
 from ..core import topk as topk_lib
+from ..core.query import Q, QuerySpec, ResultSet
 from ..core.types import IVFIndex, SearchResult, normalize_if_cosine
 
 
@@ -86,21 +87,37 @@ def index_shardings(index: IVFIndex, mesh: Mesh, model_axis: str = "model"):
     )
 
 
-def distributed_search(
+def distributed_query(
     index: IVFIndex,
     queries: jax.Array,              # [Q, d] sharded over data axes
-    k: int,
-    n_probe: int,
+    spec: QuerySpec,
     mesh: Mesh,
     *,
     data_axes: Tuple[str, ...] = ("data",),
     model_axis: str = "model",
     local_cap: Optional[int] = None,
     merge: str = "tournament",       # tournament | allgather
-) -> SearchResult:
-    """Exact-distributed Alg. 2 (bitwise same results as single-device
-    ann_search up to float association, validated in tests)."""
+) -> ResultSet:
+    """Exact-distributed Alg. 2 driven by a QuerySpec (bitwise same
+    results as single-device ann_search up to float association,
+    validated in tests) -- the sharded route of the declarative query
+    API. The per-device phase-3 scan merges into a global top-k, which
+    is exactly ResultSet.merge()'s reduction run on ICI instead of host.
+    """
+    assert spec.kind == "ann", "sharded execution serves ANN specs " \
+        "(exact = n_probe >= k_partitions)"
+    assert spec.predicate is None, \
+        "sharded hybrid predicates are not wired yet (ROADMAP)"
+    # refuse what the sharded path cannot honor rather than silently
+    # diverging from the same spec run through executor.run
+    assert spec.u_max is None and spec.cap is None, \
+        "union_cap/prefilter are not supported in sharded execution"
+    assert spec.use_quantized in (None, False), \
+        "sharded scan is float32 (no sharded code tier yet)"
+    assert spec.on_backend in (None, "xla"), \
+        "shard_map bodies run the XLA backend"
     cfg = index.config
+    k, n_probe = spec.k, spec.n_probe
     m_size = mesh.devices.shape[list(mesh.axis_names).index(model_axis)]
     cap = local_cap or n_probe        # worst case: all probes on one shard
 
@@ -183,4 +200,17 @@ def distributed_search(
       index.valid, index.counts, index.delta.vectors, index.delta.ids,
       index.delta.attrs, index.delta.valid, index.delta.count,
       index.base_mean_size, queries)
-    return SearchResult(ids=fi, scores=fs)
+    return ResultSet(ids=fi, scores=fs, spec=spec)
+
+
+def distributed_search(
+    index: IVFIndex,
+    queries: jax.Array,
+    k: int,
+    n_probe: int,
+    mesh: Mesh,
+    **kwargs,
+) -> ResultSet:
+    """Kwarg shim over distributed_query (API compat)."""
+    return distributed_query(index, queries, Q.knn(k=k, n_probe=n_probe),
+                             mesh, **kwargs)

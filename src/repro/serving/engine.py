@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.query import QuerySpec
 from ..core.rag import RagConfig, RagDatastore, rag_decode_logits
 from ..models import decode as decode_lib
 
@@ -40,13 +41,20 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  s_max: int = 256, rag: Optional[RagDatastore] = None,
-                 rag_cfg: Optional[RagConfig] = None):
+                 rag_cfg: Optional[RagConfig] = None,
+                 rag_spec: Optional[QuerySpec] = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.s_max = s_max
         self.rag = rag
         self.rag_cfg = rag_cfg or RagConfig()
+        # the retrieval QuerySpec every decode step issues (one frozen
+        # spec == one executor compile-cache entry for the whole session);
+        # pass a custom spec to e.g. fuse an attribute predicate over the
+        # datastore or pin a backend
+        self.rag_spec = rag_spec if rag_spec is not None \
+            else self.rag_cfg.spec()
         self.queue: deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.cache = decode_lib.init_cache(cfg, slots, s_max)
@@ -110,7 +118,7 @@ class ServeEngine:
             jnp.asarray(pos, jnp.int32))
         if self.rag is not None:
             logits = rag_decode_logits(self.rag, logits, hidden,
-                                       self.rag_cfg)
+                                       self.rag_cfg, spec=self.rag_spec)
         self.cache = new_cache
         toks = np.asarray(jnp.argmax(logits, axis=-1))
         out = {}

@@ -5,22 +5,32 @@ index monitor, and the hybrid query optimizer -- the public API an
 application links against:
 
     eng = MicroNN(dim=128, n_attr=2)
-    eng.upsert(ids, vecs, attrs)
+    with eng.session() as s:         # batched writes: ONE transaction
+        s.upsert(ids, vecs, attrs)
+        s.delete(stale_ids)
     eng.build()                      # initial clustering
-    res = eng.search(q, k=100, n_probe=8)
-    res = eng.search(q, k=10, predicate=Pred(0, "eq", 3.0))
-    eng.delete(ids)
+    rs = eng.query(q, Q.knn(k=100).probe(8))
+    rs = eng.query(q, Q.knn(k=10).where(Pred(0, "==", 3.0)))
     eng.maintain()                   # flush delta / rebuild as needed
+
+`query(vecs, spec)` is the ONE query entry point: the frozen QuerySpec
+(core/query.py) routes resident / paged / hybrid-optimized execution and
+doubles as the executor's jit cache key; every path returns a ResultSet.
+`search(...)` survives as a deprecation-free kwarg shim over spec
+construction.
 
 Writes are serialised (single writer, paper §3.6); every write lands in
 SQLite (durable, WAL) *and* in the device index (delta-store), so readers
 see updates immediately while the host copy guarantees recoverability --
 `MicroNN.recover()` rebuilds device state from SQLite after a crash.
+`session()` batches a write burst into one SQLite transaction, one
+delta-encode batch, and one deferred pager-invalidation pass at commit.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import warnings
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,13 +38,71 @@ import numpy as np
 
 from ..core import delta as delta_ops
 from ..core import executor, ivf, kmeans, maintenance, quantize
-from ..core.hybrid import AttributeStats, Node, compile_filter
+from ..core.hybrid import AttributeStats, Node
 from ..core.monitor import IndexMonitor, MonitorConfig
 from ..core.optimizer import HybridOptimizer
-from ..core.types import (DeltaStore, IVFConfig, IVFIndex, PagedIndex,
-                          SearchResult, effective_pad_to, normalize_if_cosine)
+from ..core.query import Q, QuerySpec, ResultSet
+from ..core.types import (INVALID_ID, DeltaStore, IVFConfig, IVFIndex,
+                          PagedIndex, SearchResult, effective_pad_to,
+                          normalize_if_cosine)
 from . import pager
 from .store import VectorStore
+
+
+class WriteSession:
+    """Batched write scope: `with db.session() as s: s.upsert(...);
+    s.delete(...)`.
+
+    Ops are buffered and coalesced (last write per asset id wins) until
+    the `with` block exits cleanly, then committed as ONE unit: one
+    SQLite transaction (the durable all-or-nothing boundary), one
+    delta-encode batch (a single delta upsert call encodes every new row
+    in one pass, instead of one encode per call), and one deferred
+    pager-invalidation pass (paged mode drops each touched partition's
+    frame exactly once, however many session ops touched it). An
+    exception inside the block discards the session -- nothing lands.
+    """
+
+    def __init__(self, engine: "MicroNN"):
+        self._engine = engine
+        self._ops: List[tuple] = []
+        self._closed = False
+
+    # -- buffered write ops --------------------------------------------------
+    def upsert(self, ids: np.ndarray, vecs: np.ndarray,
+               attrs: Optional[np.ndarray] = None):
+        assert not self._closed, "session already committed/discarded"
+        n_attr = self._engine.store.n_attr
+        attrs = np.zeros((len(ids), n_attr), np.float32) if attrs is None \
+            else np.array(attrs, np.float32, copy=True)
+        self._ops.append(("up", np.array(ids, np.int64, copy=True),
+                          np.array(vecs, np.float32, copy=True), attrs))
+
+    def delete(self, ids: np.ndarray):
+        assert not self._closed, "session already committed/discarded"
+        self._ops.append(("del", np.array(ids, np.int64, copy=True)))
+
+    # -- lifecycle -----------------------------------------------------------
+    def commit(self):
+        assert not self._closed, "session already committed/discarded"
+        self._closed = True
+        if self._ops:
+            self._engine._commit_session(self._ops)
+        self._ops = []
+
+    def discard(self):
+        self._closed = True
+        self._ops = []
+
+    def __enter__(self) -> "WriteSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.commit()
+        else:
+            self.discard()
+        return False
 
 
 class MicroNN:
@@ -234,6 +302,103 @@ class MicroNN:
         self.index = delta_ops.delete(self.index,
                                       jnp.asarray(ids, jnp.int32))
 
+    def session(self) -> WriteSession:
+        """Open a batched write session: buffered upserts/deletes commit
+        as one SQLite transaction + one delta-encode batch + one deferred
+        pager-invalidation pass when the `with` block exits cleanly."""
+        return WriteSession(self)
+
+    def _commit_session(self, ops: List[tuple]):
+        """Apply a session's coalesced net effect atomically (single
+        writer, paper §3.6). Per-id last-write-wins: an upsert overridden
+        by a later delete never lands, and vice versa -- matching what
+        sequential upsert()/delete() calls would have left behind."""
+        # vectorized last-write-wins coalescing: concatenate every op's
+        # ids in order and keep each id's LAST occurrence (reverse +
+        # np.unique-first-hit) -- no per-row Python loop, so a bulk-load
+        # session coalesces at array speed
+        id_chunks, kind_chunks, row_chunks = [], [], []
+        vec_chunks, attr_chunks = [], []
+        row_off = 0
+        for op in ops:
+            if op[0] == "up":
+                _, ids, vecs, attrs = op
+                row_chunks.append(row_off + np.arange(len(ids)))
+                vec_chunks.append(vecs)
+                attr_chunks.append(attrs)
+                row_off += len(ids)
+                kind_chunks.append(np.ones(len(ids), bool))
+            else:
+                ids = op[1]
+                row_chunks.append(np.full(len(ids), -1))
+                kind_chunks.append(np.zeros(len(ids), bool))
+            id_chunks.append(ids)
+        ids_all = np.concatenate(id_chunks)
+        kind_all = np.concatenate(kind_chunks)       # True = upsert
+        rows_all = np.concatenate(row_chunks)
+        _, first_rev = np.unique(ids_all[::-1], return_index=True)
+        last = len(ids_all) - 1 - first_rev          # last op per id
+        is_up = kind_all[last]
+        up_ids = ids_all[last[is_up]]
+        del_ids = ids_all[last[~is_up]]
+        vecs_all = np.concatenate(vec_chunks) if vec_chunks \
+            else np.zeros((0, self.store.dim), np.float32)
+        attrs_all = np.concatenate(attr_chunks) if attr_chunks \
+            else np.zeros((0, self.store.n_attr), np.float32)
+        up_vecs = vecs_all[rows_all[last[is_up]]]
+        up_attrs = attrs_all[rows_all[last[is_up]]]
+        touched = np.concatenate([up_ids, del_ids])
+        old_main = None
+        if self.paged and self.index is not None:
+            # partitions holding stale copies, noted BEFORE the durable
+            # write moves/removes them -- invalidated once, at commit
+            old = self.store.partitions_for(touched)
+            old_main = old[old >= 0]
+        with self.store.transaction():    # ONE durable transaction
+            if len(up_ids):
+                self.store.upsert(up_ids, up_vecs, up_attrs, partition_id=-1)
+            if len(del_ids):
+                self.store.delete(del_ids)
+        if self.index is None:
+            return
+        if self.paged:
+            if old_main is not None and old_main.size:
+                # the single deferred invalidation pass
+                self.index.cache.invalidate(np.unique(old_main))
+                self.index.counts = self.index.counts - np.bincount(
+                    old_main, minlength=self.index.k)
+            if len(del_ids):
+                self.index.delta = delta_ops.delta_only_delete(
+                    self.index.delta, jnp.asarray(del_ids, jnp.int32))
+        elif len(del_ids):
+            self.index = delta_ops.delete(self.index,
+                                          jnp.asarray(del_ids, jnp.int32))
+        # one delta-encode batch: a single append call quantizes every
+        # new row in one encode (chunked only past the delta capacity)
+        self._delta_append(up_ids, up_vecs, up_attrs)
+
+    def _delta_append(self, ids: np.ndarray, vecs: np.ndarray,
+                      attrs: np.ndarray):
+        """Append rows to the device delta in capacity-sized chunks,
+        flushing when full -- the shared tail of upsert and session
+        commit in both modes."""
+        cap = self.config.delta_capacity
+        for s in range(0, len(ids), cap):
+            e = min(s + cap, len(ids))
+            if delta_ops.delta_free_slots(self.index) < e - s:
+                self.maintain(force="flush")
+            if self.paged:
+                self.index.delta = delta_ops.delta_only_upsert(
+                    self.index.delta, jnp.asarray(vecs[s:e]),
+                    jnp.asarray(ids[s:e].astype(np.int32)),
+                    jnp.asarray(attrs[s:e]),
+                    self.config.metric, self.index.qstats)
+            else:
+                self.index = delta_ops.upsert(
+                    self.index, jnp.asarray(vecs[s:e]),
+                    jnp.asarray(ids[s:e].astype(np.int32)),
+                    jnp.asarray(attrs[s:e]))
+
     # -- maintenance ----------------------------------------------------------
     def maintain(self, force: Optional[str] = None) -> Optional[str]:
         if self.index is None:
@@ -264,48 +429,86 @@ class MicroNN:
         return None
 
     # -- queries --------------------------------------------------------------
+    def query(self, queries: np.ndarray,
+              spec: Optional[QuerySpec] = None) -> ResultSet:
+        """THE query entry point: execute a declarative QuerySpec.
+
+        The spec alone routes execution -- resident fused scan, paged
+        frame-pool streaming, or the hybrid pre/post-filter choice (the
+        optimizer resolves `hybrid='auto'` into a concrete pre/post spec,
+        both arms still spec-routed) -- and, being frozen + hashable, it
+        is also the executor's jit cache key: issuing an equal spec twice
+        never retraces. Returns a ResultSet (ids + exact-f32 scores,
+        optional gathered attrs when `spec.with_attrs()`)."""
+        assert self.index is not None, "build() or recover() first"
+        spec = QuerySpec() if spec is None else spec
+        q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        if not self.paged and spec.predicate_tree is not None \
+                and spec.kind == "ann" \
+                and (spec.hybrid == "auto"
+                     or (spec.hybrid == "pre" and spec.cap is None)):
+            # resolve the pre/post choice (and/or size the prefilter cap)
+            # from the selectivity estimate (paper Eqs. 1-3). Opaque
+            # hand-written filter callables skip the optimizer (nothing
+            # to estimate) and run as fused post-filters.
+            spec, _ = self.optimizer.plan_spec(self.index, spec)
+        res = executor.run(self.index, q, spec)
+        if spec.gather_attrs and self.store.n_attr:
+            res.attrs = self._gather_attrs(np.asarray(res.ids))
+        return res
+
     def search(self, queries: np.ndarray, k: int = 100, n_probe: int = 8,
                predicate: Optional[Node] = None, exact: bool = False,
                batch_mqo: Optional[bool] = None,
-               backend: Optional[str] = None) -> SearchResult:
-        """Every path compiles to a QueryPlan run by core/executor.py's
-        fused scan; the executor's query-count bucketing means a stream of
-        variable-size batches compiles once per bucket, not per call.
-        `batch_mqo` is kept for API compatibility -- a batched ANN plan
-        *is* the MQO shared scan (same union + selection mask)."""
-        assert self.index is not None, "build() or recover() first"
-        del batch_mqo
-        q = jnp.asarray(np.atleast_2d(queries), jnp.float32)
-        if self.paged:
-            # paged mode: every path goes through the frame pool; hybrid
-            # predicates are fused into the frame scan (the pool carries
-            # attrs frames) rather than routed through the pre/post
-            # optimizer, which would need a resident f32 tier to gather
-            f = compile_filter(predicate) if predicate is not None else None
-            return executor.paged_search(
-                self.index, q, k=k, kind="exact" if exact else "ann",
-                n_probe=n_probe, attr_filter=f, backend=backend)
+               backend: Optional[str] = None) -> ResultSet:
+        """Deprecation shim: kwargs -> QuerySpec -> query(). Kept so
+        existing callers survive the API redesign; new code should build
+        specs (`Q.knn(...)...`) and call `query()` directly. `batch_mqo`
+        is dead -- a batched ANN spec *is* the MQO shared scan (same
+        union + selection mask) -- and warns. One deliberate semantic
+        fix vs the old engine: `exact=True` + `predicate` now runs the
+        filtered exact oracle (the old code silently ignored `exact`
+        and let the optimizer answer approximately)."""
+        if batch_mqo is not None:
+            warnings.warn(
+                "MicroNN.search(batch_mqo=...) is deprecated and has no "
+                "effect: a batched ANN QuerySpec is the MQO shared scan; "
+                "use MicroNN.query(vecs, Q.knn(...))",
+                DeprecationWarning, stacklevel=2)
+        spec = Q.exact(k=k) if exact else Q.knn(k=k, n_probe=n_probe)
         if predicate is not None:
-            res, _ = self.optimizer.execute(
-                self.index, q, predicate, k, n_probe, backend=backend)
-            return res
-        if exact:
-            return executor.search(self.index, q, k=k, kind="exact",
-                                   backend=backend)
-        return executor.search(self.index, q, k=k, kind="ann",
-                               n_probe=n_probe, backend=backend)
+            spec = spec.where(predicate)
+        if backend is not None:
+            spec = spec.backend(backend)
+        return self.query(queries, spec)
+
+    def _gather_attrs(self, ids: np.ndarray) -> np.ndarray:
+        """[Q, k] result ids -> [Q, k, n_attr] attribute rows from the
+        durable tier (zeros where INVALID)."""
+        Qn, k = ids.shape
+        flat = ids.reshape(-1)
+        got = flat != INVALID_ID
+        out = np.zeros((Qn * k, self.store.n_attr), np.float32)
+        if got.any():
+            out[got] = self.store.attributes_for(flat[got])
+        return out.reshape(Qn, k, self.store.n_attr)
 
     # -- observability --------------------------------------------------------
     def stats(self) -> dict:
-        """Operational counters with uniform keys in both modes: pager
-        hits/misses/evictions plus resident scan-tier bytes. In resident
-        mode the counters are zero and `resident_bytes` is what search
-        must keep in memory (f32 tier + codes when quantized); in paged
-        mode it is the preallocated frame pool (<= the byte budget by
-        construction). Benchmarks and tests assert on these counters
-        instead of re-deriving them."""
+        """Operational counters with UNIFORM keys in both modes: pager
+        hits/misses/evictions, resident scan-tier bytes, and the query
+        executor's compile-cache counters (`trace_count`,
+        `compile_cache_size` -- pinned against QuerySpecs, so a stable
+        trace_count across a query stream proves the spec cache is
+        hitting). In resident mode the pager counters are zero and
+        `resident_bytes` is what search must keep in memory (f32 tier +
+        codes when quantized); in paged mode it is the preallocated frame
+        pool (<= the byte budget by construction). Benchmarks and tests
+        assert on these counters instead of re-deriving them."""
         out = {"paged": self.paged, "hits": 0, "misses": 0, "evictions": 0,
-               "resident_bytes": 0, "budget_bytes": None}
+               "resident_bytes": 0, "budget_bytes": None,
+               "trace_count": executor.trace_count(),
+               "compile_cache_size": executor.compile_cache_size()}
         idx = self.index
         if idx is None:
             return out

@@ -25,6 +25,16 @@ concurrent fault can never steal a frame mid-scan; faulting more
 partitions than the pool seats raises, which is what forces the
 executor's streaming chunked scan.
 
+Admission policy (scan resistance): `fault(pids, admit=False)` marks a
+one-off stream -- a paged *exact* search reads every partition exactly
+once, and admitting that stream would flush the hot ANN working set.
+Non-admitted faults cycle through a small reusable *scan ring* of at
+most `scan_frames` frames (a fraction of the pool; same byte budget),
+never touching admitted frames' reference bits; ring frames are the
+preferred eviction victims for admitted traffic, and a later admitted
+hit on a ring frame promotes it out of the ring. Probes already resident
+still hit (and stay hot), so a full scan reuses the warm set for free.
+
 Fault path: all missing partitions of a probe set are fetched in ONE SQL
 round-trip (VectorStore.scan_partitions -- the clustered primary key
 makes each partition a sequential range read) and scattered into the
@@ -108,6 +118,13 @@ class PartitionCache:
         self._ref = np.zeros(self.capacity, bool)
         self._pins = np.zeros(self.capacity, np.int64)
         self._hand = 0
+        # scan-resistant admission: ring of frames owned by non-admitted
+        # (one-off stream) faults; scan_frames bounds how much of the
+        # pool a full scan may dirty
+        self.scan_frames = max(1, self.capacity // 4)
+        self._transient = np.zeros(self.capacity, bool)
+        self._ring: list = []
+        self._ring_hand = 0
 
     def resize(self, p_max: int):
         """Reallocate the pool for a larger partition size (after a flush
@@ -134,27 +151,70 @@ class PartitionCache:
                 "resident_partitions": len(self._pid_frame)}
 
     # -- clock eviction ------------------------------------------------------
-    def _victim(self) -> int:
+    def _release_ring(self, f: int):
+        """Remove a frame from the scan ring (promotion or reclaim)."""
+        self._transient[f] = False
+        if f in self._ring:
+            self._ring.remove(f)
+            self._ring_hand = 0
+
+    def _clock_victim(self) -> int:
         """Second-chance sweep: skip pinned frames, clear reference bits,
-        reclaim the first cold unpinned frame."""
+        reclaim the first cold unpinned frame (transient scan-ring frames
+        carry no reference bit, so they fall out first)."""
         for _ in range(3 * self.capacity):
             f = self._hand
             self._hand = (self._hand + 1) % self.capacity
             if self._pins[f] > 0:
                 continue
-            if self._ref[f]:
+            if self._ref[f] and not self._transient[f]:
                 self._ref[f] = False
                 continue
+            if self._transient[f]:
+                self._release_ring(f)
             return f
         raise RuntimeError(
             "all cache frames pinned -- probe chunk exceeds pool capacity")
 
+    def _victim(self) -> int:
+        """Victim for an *admitted* fault: scan-ring frames first (a
+        one-off stream must never force out hot admitted frames), then
+        the CLOCK sweep."""
+        for f in self._ring:
+            if self._pins[f] == 0:
+                self._release_ring(f)
+                return f
+        return self._clock_victim()
+
+    def _scan_victim(self) -> int:
+        """Victim for a NON-admitted (scan-resistant) fault: reuse ring
+        frames round-robin; grow the ring (via the normal sweep) only up
+        to scan_frames."""
+        for _ in range(len(self._ring)):
+            f = self._ring[self._ring_hand % len(self._ring)]
+            self._ring_hand += 1
+            if self._pins[f] == 0:
+                return f
+        if len(self._ring) < self.scan_frames:
+            f = self._clock_victim()
+            self._ring.append(f)
+            self._transient[f] = True
+            return f
+        raise RuntimeError(
+            "scan ring exhausted -- chunk a non-admitted scan to at most "
+            f"scan_frames={self.scan_frames} missing partitions")
+
     # -- fault / pin / invalidate -------------------------------------------
-    def fault(self, pids: Sequence[int]) -> np.ndarray:
+    def fault(self, pids: Sequence[int], admit: bool = True) -> np.ndarray:
         """Ensure every listed partition is resident; returns the frame
         index per pid (aligned to input order), with each frame PINNED --
         the caller must unpin() after its scan. All missing partitions are
-        fetched in one batched SQL round-trip."""
+        fetched in one batched SQL round-trip.
+
+        `admit=False` flags a one-off stream (paged exact scan): misses
+        land in the reusable scan ring instead of the admitted set, and
+        hits do not touch reference bits -- so the stream cannot evict or
+        artificially refresh the hot working set."""
         want = [int(p) for p in pids]
         if len(want) > self.capacity:
             raise ValueError(
@@ -167,7 +227,12 @@ class PartitionCache:
             f = self._pid_frame.get(p)
             if f is not None:
                 self.hits += 1
-                self._ref[f] = True
+                if admit:
+                    self._ref[f] = True
+                    if self._transient[f]:
+                        # an admitted hit proves the frame hot: promote
+                        # it out of the scan ring into the admitted set
+                        self._release_ring(f)
                 self._pins[f] += 1
                 frames[j] = f
                 hit_frames.append(f)
@@ -177,14 +242,14 @@ class PartitionCache:
             return frames
         new_frames = []
         for j, p in missing:
-            f = self._victim()
+            f = self._victim() if admit else self._scan_victim()
             old = self._frame_pid[f]
             if old >= 0:
                 del self._pid_frame[old]
                 self.evictions += 1
             self._frame_pid[f] = p
             self._pid_frame[p] = f
-            self._ref[f] = True
+            self._ref[f] = admit
             self._pins[f] += 1
             self.misses += 1
             frames[j] = f

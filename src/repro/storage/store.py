@@ -18,6 +18,7 @@ the source for HBM uploads, and the substrate for checkpoint/restart.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -54,16 +55,53 @@ class VectorStore:
         self.path = path
         self.dim = dim
         self.n_attr = n_attr
-        self.db = sqlite3.connect(path)
+        # autocommit connection: transaction boundaries are owned by
+        # transaction() below, which NESTS -- a write session wraps many
+        # store calls in one outer BEGIN...COMMIT (paper §3.6's batched
+        # single-writer commit), while standalone calls still get their
+        # own transaction.
+        self.db = sqlite3.connect(path, isolation_level=None)
         self.db.execute("PRAGMA journal_mode=WAL")
         self.db.execute("PRAGMA synchronous=NORMAL")
+        self._txn_depth = 0
         self._create()
+
+    @contextlib.contextmanager
+    def transaction(self):
+        """Nestable transaction scope: only the outermost level issues
+        BEGIN/COMMIT (ROLLBACK on any exception), so engine-level batch
+        operations -- MicroNN.session() commits above all -- can compose
+        store primitives into one atomic durable write."""
+        if self._txn_depth == 0:
+            self.db.execute("BEGIN IMMEDIATE")
+        self._txn_depth += 1
+        try:
+            yield
+        except BaseException:
+            self._txn_depth -= 1
+            if self._txn_depth == 0:
+                self.db.execute("ROLLBACK")
+            raise
+        else:
+            self._txn_depth -= 1
+            if self._txn_depth == 0:
+                try:
+                    self.db.execute("COMMIT")
+                except BaseException:
+                    # a failed COMMIT (disk full, ...) leaves the SQLite
+                    # transaction open: roll it back so the connection is
+                    # not wedged for every later transaction() scope
+                    try:
+                        self.db.execute("ROLLBACK")
+                    except sqlite3.Error:
+                        pass
+                    raise
 
     # -- schema -------------------------------------------------------------
     def _create(self):
         attr_cols = ", ".join(f"a{i} REAL DEFAULT 0" for i in range(self.n_attr))
         attr_cols = (", " + attr_cols) if attr_cols else ""
-        with self.db:
+        with self.transaction():
             self.db.execute(
                 "CREATE TABLE IF NOT EXISTS vectors ("
                 " partition_id INTEGER NOT NULL,"
@@ -112,7 +150,7 @@ class VectorStore:
                attrs: Optional[np.ndarray] = None, partition_id: int = -1):
         """Upsert into the given partition (-1 = delta-store)."""
         vecs = np.ascontiguousarray(vecs, np.float32)
-        with self.db:
+        with self.transaction():
             self.db.executemany(
                 "DELETE FROM vectors WHERE asset_id=?",
                 [(int(a),) for a in asset_ids])
@@ -131,7 +169,7 @@ class VectorStore:
                      for a, row in zip(asset_ids, attrs)])
 
     def delete(self, asset_ids: Sequence[int]):
-        with self.db:
+        with self.transaction():
             self.db.executemany("DELETE FROM vectors WHERE asset_id=?",
                                 [(int(a),) for a in asset_ids])
             self.db.executemany("DELETE FROM attributes WHERE asset_id=?",
@@ -183,7 +221,7 @@ class VectorStore:
         """set_code_tier over a stream of (asset_ids, codes) chunks, all
         inside ONE transaction -- the paged build encodes batch-by-batch
         without losing the codes-consistent-with-stats crash guarantee."""
-        with self.db:
+        with self.transaction():
             for asset_ids, codes in chunks:
                 codes = np.ascontiguousarray(codes, np.int8)
                 self.db.executemany(
@@ -209,7 +247,7 @@ class VectorStore:
         partition IDs in the vector table are updated after (re)clustering).
         The clustered PK physically re-orders rows by partition."""
         gen = self.generation + 1
-        with self.db:
+        with self.transaction():
             rows = self.db.execute(
                 "SELECT asset_id, vec FROM vectors").fetchall()
             by_id = {a: v for a, v in rows}
@@ -239,7 +277,7 @@ class VectorStore:
         swap generations atomically. Same contract as set_partitions but
         O(1) vector bytes in host memory."""
         gen = self.generation + 1
-        with self.db:
+        with self.transaction():
             self.db.executemany(
                 "UPDATE vectors SET partition_id=? WHERE asset_id=?",
                 [(int(p), int(a))
@@ -264,7 +302,7 @@ class VectorStore:
     def move_to_partition(self, asset_ids: Sequence[int],
                           partition_ids: Sequence[int]):
         """Incremental maintenance: move delta rows into IVF partitions."""
-        with self.db:
+        with self.transaction():
             rows = [(int(p), int(a)) for a, p in zip(asset_ids, partition_ids)]
             for p, a in rows:
                 vec = self.db.execute(
@@ -279,7 +317,7 @@ class VectorStore:
 
     def update_centroids(self, centroids: np.ndarray, csizes: np.ndarray):
         gen = self.generation
-        with self.db:
+        with self.transaction():
             self.db.executemany(
                 "INSERT OR REPLACE INTO centroids"
                 " (generation, partition_id, vec, csize) VALUES (?, ?, ?, ?)",

@@ -388,6 +388,85 @@ def test_paged_predicate_on_cold_cache(tmp_path):
     assert len(real2) > 0 and (attrs[real2, 0] == 1.0).all()
 
 
+# -- admission policy: scan-resistant faults (satellite) ---------------------
+
+
+def test_scan_resistant_fault_preserves_hot_set(tmp_path):
+    """A full-collection stream faulted with admit=False must cycle
+    through the scan ring and leave every admitted (hot) frame resident."""
+    st, _, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 8)
+    assert cache.scan_frames == 2
+    hot = [0, 1, 2, 3, 4, 5]
+    cache.unpin(cache.fault(hot))               # admitted working set
+    for s in range(0, 10, cache.scan_frames):   # one-off full scan
+        pids = list(range(s, min(s + cache.scan_frames, 10)))
+        cache.unpin(cache.fault(pids, admit=False))
+    h0, m0 = cache.hits, cache.misses
+    cache.unpin(cache.fault(hot))               # hot set still resident
+    assert (cache.hits, cache.misses) == (h0 + len(hot), m0)
+    # the stream dirtied at most the ring, never the admitted frames
+    assert cache._transient.sum() <= cache.scan_frames
+
+
+def test_scan_ring_promotion_on_admitted_hit(tmp_path):
+    st, _, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 6)
+    f = cache.fault([7], admit=False)           # lands in the scan ring
+    cache.unpin(f)
+    fr = int(f[0])
+    assert cache._transient[fr] and fr in cache._ring
+    f2 = cache.fault([7])                       # admitted hit -> promote
+    cache.unpin(f2)
+    assert int(f2[0]) == fr
+    assert not cache._transient[fr] and fr not in cache._ring
+
+
+def test_admitted_fault_reclaims_ring_first(tmp_path):
+    st, _, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 8)
+    cache.unpin(cache.fault([0, 1, 2, 3]))      # hot admitted frames
+    ring = cache.fault([8], admit=False)        # one transient frame
+    cache.unpin(ring)
+    f_new = cache.fault([9])                    # admitted miss
+    cache.unpin(f_new)
+    # the transient frame is the preferred victim -- hot frames intact
+    assert int(f_new[0]) == int(ring[0])
+    for p in (0, 1, 2, 3):
+        assert p in cache._pid_frame
+
+
+def test_paged_exact_stream_keeps_hot_frames(tmp_path):
+    """Engine-level: a one-off exact scan through a paged engine must not
+    evict the ANN working set (ROADMAP open item)."""
+    X = clustered_data(n=1500, dim=16, seed=15)
+    cfg = IVFConfig(dim=16, target_partition_size=50, kmeans_iters=10)
+    eng = MicroNN(dim=16, path=str(tmp_path / "adm.db"), config=cfg,
+                  memory_budget_mb=0.08)
+    eng.upsert(np.arange(len(X)), X)
+    eng.build()
+    cache = eng.index.cache
+    assert cache.capacity < eng.index.k     # pool can't seat everything
+    for i in range(4):                      # warm an ANN working set
+        eng.search(X[i * 8:(i + 1) * 8], k=10, n_probe=4)
+    hot = {p for p, f in cache._pid_frame.items() if not cache._transient[f]}
+    assert hot
+    r_exact = eng.search(X[:4], k=10, exact=True)   # one-off full stream
+    # the stream may displace at most the scan ring's worth of frames
+    # (ring bootstrap when the pool is fully hot), never the whole pool
+    survivors = hot & set(cache._pid_frame)
+    evicted = len(hot) - len(survivors)
+    assert evicted <= cache.scan_frames, \
+        f"exact scan evicted {evicted} hot frames " \
+        f"(> scan ring {cache.scan_frames})"
+    # and the stream still computed the true oracle
+    res = MicroNN(dim=16, path=str(tmp_path / "adm.db"), config=cfg)
+    res.recover()
+    r_res = res.search(X[:4], k=10, exact=True)
+    np.testing.assert_array_equal(np.asarray(r_exact.ids),
+                                  np.asarray(r_res.ids))
+
+
 # -- dtype-aware tile padding (satellite) ------------------------------------
 
 

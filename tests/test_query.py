@@ -1,0 +1,456 @@
+"""Declarative query API: QuerySpec hashability / jit-cache identity,
+ResultSet semantics, the deprecation shims, and write sessions.
+
+Cache contract (the tentpole's acceptance): the QuerySpec IS the
+executor's jit cache key, so two structurally-equal specs -- built
+independently, with structurally-equal predicate trees -- trigger
+exactly ONE trace, while unequal specs get their own entries. Paged and
+resident engines must return bit-identical results through the new
+ResultSet path on both backends.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import executor, ivf
+from repro.core.hybrid import And, Or, Pred, compile_filter
+from repro.core.query import Q, QuerySpec, ResultSet
+from repro.core.types import INVALID_ID, IVFConfig
+from repro.storage import MicroNN
+from tests.conftest import clustered_data
+
+
+@pytest.fixture(scope="module")
+def spec_index():
+    rng = np.random.default_rng(3)
+    centers = rng.normal(size=(12, 16)).astype(np.float32) * 5
+    X = (centers[rng.integers(0, 12, 1200)]
+         + rng.normal(size=(1200, 16))).astype(np.float32)
+    attrs = np.stack([rng.integers(0, 4, 1200),
+                      rng.normal(size=1200) * 10], 1).astype(np.float32)
+    cfg = IVFConfig(dim=16, target_partition_size=50, kmeans_iters=20,
+                    delta_capacity=64)
+    return ivf.build_index(X, attrs=attrs, cfg=cfg), X, attrs
+
+
+# -- spec construction / hashability ----------------------------------------
+
+
+def test_spec_equality_and_hash():
+    a = Q.knn(k=100).probe(8).where(Pred(0, "==", 3)).backend("xla")
+    b = Q.knn(k=100).probe(8).where(Pred(0, "eq", 3.0)).backend("xla")
+    assert a == b
+    assert hash(a) == hash(b)
+    assert len({a, b}) == 1             # usable as a dict/cache key
+
+
+def test_spec_unequal_variants():
+    base = Q.knn(k=10, n_probe=4)
+    others = [base.top(11), base.probe(5), base.exact(),
+              base.union_cap(8), base.quantized(False),
+              base.backend("xla"), base.where(Pred(0, "eq", 1.0)),
+              base.where(Pred(0, "eq", 2.0))]
+    assert len({base, *others}) == len(others) + 1
+
+
+def test_where_chaining_accumulates():
+    """Chained .where() calls AND together -- a fluent chain never
+    silently drops an earlier filter."""
+    chained = Q.knn().where(Pred(0, "==", 2.0)).where(Pred(1, ">=", 5.0))
+    at_once = Q.knn().where(Pred(0, "eq", 2.0), Pred(1, "ge", 5.0))
+    assert chained == at_once
+    assert chained.predicate == And((Pred(0, "eq", 2.0),
+                                     Pred(1, "ge", 5.0)))
+    # accumulation flattens: three chained calls == one flat And, so the
+    # jit cache key is identical however the chain was spelled
+    three = (Q.knn().where(Pred(0, "eq", 1.0)).where(Pred(1, "gt", 2.0))
+             .where(Pred(1, "lt", 9.0)))
+    flat = Q.knn().where(Pred(0, "eq", 1.0), Pred(1, "gt", 2.0),
+                         Pred(1, "lt", 9.0))
+    assert three == flat and hash(three) == hash(flat)
+
+
+def test_resultset_equality_does_not_raise(spec_index):
+    idx, X, _ = spec_index
+    rs = executor.run(idx, jnp.asarray(X[:2]), Q.knn(k=3, n_probe=2))
+    assert rs == rs and rs in [rs]      # identity-eq; no array ambiguity
+
+
+def test_spec_structural_predicate_equality():
+    t1 = And((Pred(0, "eq", 2.0), Or((Pred(1, "lt", 3.0),
+                                      Pred(1, "ge", 9.0)))))
+    t2 = And((Pred(0, "=", 2.0), Or((Pred(1, "<", 3.0),
+                                     Pred(1, ">=", 9.0)))))
+    assert Q.knn().where(t1) == Q.knn().where(t2)
+    # a compiled filter round-trips back to its tree
+    assert Q.knn().where(compile_filter(t1)) == Q.knn().where(t2)
+
+
+def test_spec_is_frozen():
+    s = Q.knn(k=5)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.k = 6
+    assert s.top(6).k == 6 and s.k == 5   # builder returns new specs
+
+
+def test_spec_builder_permutations_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    ops = {
+        "top": lambda s: s.top(17),
+        "probe": lambda s: s.probe(3),
+        "union": lambda s: s.union_cap(16),
+        "where": lambda s: s.where(Pred(0, "eq", 1.0)),
+        "backend": lambda s: s.backend("xla"),
+        "quant": lambda s: s.quantized(False),
+        "post": lambda s: s.postfilter(),
+        "attrs": lambda s: s.with_attrs(),
+    }
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.permutations(sorted(ops)))
+    def check(order):
+        built = Q.knn()
+        for name in order:
+            built = ops[name](built)
+        ref = Q.knn()
+        for name in sorted(ops):
+            ref = ops[name](ref)
+        # independent builder fields commute: any order, same frozen
+        # spec, same hash -> same jit cache entry
+        assert built == ref and hash(built) == hash(ref)
+
+    check()
+
+
+# -- the spec as the jit cache key ------------------------------------------
+
+
+def test_equal_specs_share_one_trace(spec_index):
+    idx, X, _ = spec_index
+    s1 = Q.knn(k=7, n_probe=3).where(And((Pred(0, "eq", 2.0),
+                                          Pred(1, "le", 5.0))))
+    executor.run(idx, jnp.asarray(X[:4]), s1)       # warm (traces once)
+    c0 = executor.trace_count()
+    s2 = Q.knn(k=7, n_probe=3).where(And((Pred(0, "==", 2.0),
+                                          Pred(1, "<=", 5.0))))
+    assert s1 is not s2 and s1 == s2
+    r1 = executor.run(idx, jnp.asarray(X[:4]), s1)
+    r2 = executor.run(idx, jnp.asarray(X[:4]), s2)
+    assert executor.trace_count() == c0             # exactly one trace
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    executor.run(idx, jnp.asarray(X[:3]), s2)       # same Q bucket
+    assert executor.trace_count() == c0
+
+
+def test_unequal_specs_do_not_collide(spec_index):
+    idx, X, _ = spec_index
+    q = jnp.asarray(X[:4])
+    base = Q.knn(k=9, n_probe=3)
+    executor.run(idx, q, base)
+    c0 = executor.trace_count()
+    for variant in (base.top(10), base.probe(4), base.exact(),
+                    base.where(Pred(0, "eq", 1.0))):
+        executor.run(idx, q, variant)
+    assert executor.trace_count() == c0 + 4         # one entry each
+    # and the cache keeps serving all of them without retracing
+    for variant in (base, base.top(10), base.probe(4), base.exact()):
+        executor.run(idx, q, variant)
+    assert executor.trace_count() == c0 + 4
+
+
+def test_compile_cache_size_grows_with_distinct_specs(spec_index):
+    idx, X, _ = spec_index
+    q = jnp.asarray(X[:2])
+    n0 = executor.compile_cache_size()
+    executor.run(idx, q, Q.knn(k=31, n_probe=5))   # specs no other test
+    executor.run(idx, q, Q.knn(k=37, n_probe=5))   # in this session uses
+    assert executor.compile_cache_size() >= n0 + 2
+
+
+# -- ResultSet ---------------------------------------------------------------
+
+
+def test_resultset_iteration_and_numpy(spec_index):
+    idx, X, _ = spec_index
+    rs = executor.run(idx, jnp.asarray(X[:5]),
+                      Q.exact(k=50).where(And((Pred(0, "eq", 3.0),
+                                               Pred(1, "gt", 20.0)))))
+    assert len(rs) == 5 and rs.k == 50
+    ids, scores = rs.to_numpy()
+    assert ids.shape == scores.shape == (5, 50)
+    for qi, hit in enumerate(rs):
+        # iteration trims INVALID padding; scores stay aligned
+        assert (hit.ids != INVALID_ID).all()
+        assert len(hit.ids) == (ids[qi] != INVALID_ID).sum()
+        assert len(hit) == len(hit.scores)
+    first = rs[0]
+    assert np.array_equal(first.ids, next(iter(rs)).ids)
+
+
+def test_resultset_merge_matches_unfiltered_topk(spec_index):
+    """Merging per-predicate candidate streams reproduces the global
+    top-k -- the sharded/chunked reduction contract."""
+    idx, X, _ = spec_index
+    q = jnp.asarray(X[:6])
+    lo = executor.run(idx, q, Q.exact(k=10).where(Pred(0, "lt", 2.0)))
+    hi = executor.run(idx, q, Q.exact(k=10).where(Pred(0, "ge", 2.0)))
+    merged = lo.merge(hi, k=10)
+    full = executor.run(idx, q, Q.exact(k=10))
+    np.testing.assert_array_equal(np.asarray(merged.ids),
+                                  np.asarray(full.ids))
+    np.testing.assert_allclose(np.asarray(merged.scores),
+                               np.asarray(full.scores), rtol=1e-5)
+
+
+def test_resultset_merge_dedups_overlap(spec_index):
+    idx, X, _ = spec_index
+    q = jnp.asarray(X[:3])
+    rs = executor.run(idx, q, Q.exact(k=8))
+    merged = rs.merge(rs, k=8)          # fully overlapping candidates
+    np.testing.assert_array_equal(np.asarray(merged.ids),
+                                  np.asarray(rs.ids))
+
+
+# -- engine: query() + the search() deprecation shim ------------------------
+
+
+@pytest.fixture(scope="module")
+def engine(tmp_path_factory):
+    X = clustered_data(n=900, dim=16, seed=5)
+    attrs = np.stack(
+        [np.random.default_rng(0).integers(0, 4, len(X))],
+        1).astype(np.float32)
+    eng = MicroNN(dim=16, n_attr=1,
+                  path=str(tmp_path_factory.mktemp("query") / "q.db"),
+                  config=IVFConfig(dim=16, target_partition_size=50,
+                                   kmeans_iters=15, delta_capacity=64))
+    eng.upsert(np.arange(len(X)), X, attrs)
+    eng.build()
+    return eng, X, attrs
+
+
+def test_search_shim_matches_query(engine):
+    """Satellite: MicroNN.search is a thin wrapper over spec construction
+    -- identical ids + scores vs the explicit query() path."""
+    eng, X, _ = engine
+    cases = [
+        (dict(k=20, n_probe=4), Q.knn(k=20, n_probe=4)),
+        (dict(k=10, exact=True), Q.exact(k=10)),
+        (dict(k=10, n_probe=4, predicate=Pred(0, "eq", 2.0)),
+         Q.knn(k=10, n_probe=4).where(Pred(0, "eq", 2.0))),
+        (dict(k=10, n_probe=4, backend="xla"),
+         Q.knn(k=10, n_probe=4).backend("xla")),
+    ]
+    for kwargs, spec in cases:
+        r_old = eng.search(X[:6], **kwargs)
+        r_new = eng.query(X[:6], spec)
+        np.testing.assert_array_equal(np.asarray(r_old.ids),
+                                      np.asarray(r_new.ids))
+        np.testing.assert_array_equal(np.asarray(r_old.scores),
+                                      np.asarray(r_new.scores))
+
+
+def test_search_shim_batch_mqo_deprecation(engine):
+    eng, X, _ = engine
+    with pytest.warns(DeprecationWarning, match="batch_mqo"):
+        eng.search(X[:4], k=5, batch_mqo=True)
+
+
+def test_query_gathers_attrs(engine):
+    eng, X, attrs = engine
+    rs = eng.query(X[:4], Q.knn(k=5, n_probe=4).with_attrs())
+    assert rs.attrs is not None and rs.attrs.shape == (4, 5, 1)
+    ids = np.asarray(rs.ids)
+    got = ids != INVALID_ID
+    np.testing.assert_array_equal(rs.attrs[got][:, 0], attrs[ids[got], 0])
+
+
+def test_stats_uniform_observability(engine, tmp_path):
+    """Satellite: resident stats() reports the executor compile-cache
+    next to the pager counters, same keys in both modes."""
+    eng, X, _ = engine
+    eng.query(X[:2], Q.knn(k=3, n_probe=2))
+    s = eng.stats()
+    for key in ("paged", "hits", "misses", "evictions", "resident_bytes",
+                "budget_bytes", "trace_count", "compile_cache_size"):
+        assert key in s, key
+    assert not s["paged"] and s["resident_bytes"] > 0
+    assert s["trace_count"] >= 1 and s["compile_cache_size"] >= 1
+
+    pag = MicroNN(dim=16, path=str(tmp_path / "p.db"),
+                  config=IVFConfig(dim=16, target_partition_size=40,
+                                   kmeans_iters=8),
+                  memory_budget_mb=0.05)
+    pag.upsert(np.arange(400), clustered_data(n=400, dim=16, seed=6))
+    pag.build()
+    pag.query(clustered_data(n=4, dim=16, seed=7), Q.knn(k=3, n_probe=2))
+    sp = pag.stats()
+    for key in ("paged", "hits", "misses", "evictions", "resident_bytes",
+                "budget_bytes", "trace_count", "compile_cache_size"):
+        assert key in sp, key
+    assert sp["paged"] and sp["misses"] > 0
+
+
+# -- paged vs resident parity through the new path --------------------------
+
+
+@pytest.fixture(scope="module", params=["none", "int8"])
+def paged_pair(request, tmp_path_factory):
+    quant = request.param
+    X = clustered_data(n=1200, dim=16, seed=11)
+    path = str(tmp_path_factory.mktemp("qparity") / f"{quant}.db")
+    cfg = IVFConfig(dim=16, target_partition_size=50, kmeans_iters=12,
+                    delta_capacity=64, quantize=quant, rerank_factor=4)
+    eng = MicroNN(dim=16, path=path, config=cfg)
+    eng.upsert(np.arange(len(X)), X)
+    eng.build()
+    res = MicroNN(dim=16, path=path, config=cfg)
+    res.recover()
+    pag = MicroNN(dim=16, path=path, config=cfg, memory_budget_mb=0.05)
+    pag.recover()
+    return res, pag, X
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_query_paged_matches_resident_bitwise(paged_pair, backend):
+    """Acceptance: the SAME QuerySpec routed to a resident and a paged
+    engine returns bit-identical ResultSets on both backends."""
+    res, pag, X = paged_pair
+    spec = Q.knn(k=10, n_probe=8).backend(backend)
+    r1 = res.query(X[:12], spec)
+    r2 = pag.query(X[:12], spec)
+    assert isinstance(r1, ResultSet) and isinstance(r2, ResultSet)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(np.asarray(r1.scores),
+                                  np.asarray(r2.scores))
+
+
+def test_query_paged_rejects_prefilter(paged_pair):
+    res, pag, X = paged_pair
+    with pytest.raises(ValueError, match="paged"):
+        pag.query(X[:2], Q.knn(k=5).where(Pred(0, "eq", 0.0)).prefilter(64))
+
+
+def test_query_paged_rejects_union_cap(paged_pair):
+    """A capped union would silently diverge from the resident plan --
+    refused explicitly rather than dropped."""
+    _, pag, X = paged_pair
+    with pytest.raises(ValueError, match="union_cap"):
+        pag.query(X[:2], Q.knn(k=5).union_cap(4))
+
+
+def test_handwritten_filter_callable_runs_as_postfilter(engine):
+    """An opaque callable predicate (no tree) skips the optimizer and
+    runs fused -- matching the equivalent tree predicate's results."""
+    eng, X, attrs = engine
+
+    def fn(a):
+        return a[..., 0] == 2.0
+
+    r_fn = eng.query(X[:4], Q.knn(k=10, n_probe=8).where(fn))
+    r_tree = eng.query(X[:4], Q.knn(k=10, n_probe=8)
+                       .where(Pred(0, "eq", 2.0)).postfilter())
+    np.testing.assert_array_equal(np.asarray(r_fn.ids),
+                                  np.asarray(r_tree.ids))
+    with pytest.raises(TypeError, match="sole"):
+        Q.knn().where(fn, Pred(0, "eq", 1.0))   # callables don't compose
+
+
+def test_merge_propagates_attrs(engine):
+    eng, X, attrs = engine
+    spec = Q.exact(k=6).with_attrs()
+    lo = eng.query(X[:3], spec.where(Pred(0, "lt", 2.0)))
+    hi = eng.query(X[:3], spec.where(Pred(0, "ge", 2.0)))
+    merged = lo.merge(hi, k=6)
+    assert merged.attrs is not None
+    ids = np.asarray(merged.ids)
+    got = ids != INVALID_ID
+    np.testing.assert_array_equal(merged.attrs[got][:, 0],
+                                  attrs[ids[got], 0])
+
+
+# -- write sessions ----------------------------------------------------------
+
+
+def _mk_engine(path, n=500, seed=13, paged=False, n_attr=1):
+    X = clustered_data(n=n, dim=16, seed=seed)
+    eng = MicroNN(dim=16, n_attr=n_attr, path=path,
+                  config=IVFConfig(dim=16, target_partition_size=40,
+                                   kmeans_iters=8, delta_capacity=64),
+                  memory_budget_mb=0.05 if paged else None)
+    eng.upsert(np.arange(n), X, np.ones((n, n_attr), np.float32))
+    eng.build()
+    return eng, X
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_session_matches_sequential_ops(tmp_path, paged):
+    """A session commit leaves the same durable + device state as the
+    equivalent sequence of individual upsert/delete calls."""
+    eng_a, X = _mk_engine(str(tmp_path / "a.db"), paged=paged)
+    eng_b, _ = _mk_engine(str(tmp_path / "b.db"), paged=paged)
+    rng = np.random.default_rng(0)
+    nv = rng.normal(size=(6, 16)).astype(np.float32)
+    na = np.full((6, 1), 7.0, np.float32)
+
+    eng_a.upsert(np.arange(9000, 9006), nv, na)
+    eng_a.delete(np.asarray([9001, 3]))
+
+    with eng_b.session() as s:
+        s.upsert(np.arange(9000, 9006), nv, na)
+        s.delete(np.asarray([9001, 3]))
+
+    assert eng_a.store.count() == eng_b.store.count()
+    q = np.concatenate([nv[:3], X[:3]])
+    ra = eng_a.query(q, Q.knn(k=5, n_probe=8))
+    rb = eng_b.query(q, Q.knn(k=5, n_probe=8))
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.scores),
+                                  np.asarray(rb.scores))
+
+
+def test_session_coalesces_last_write_wins(tmp_path):
+    eng, X = _mk_engine(str(tmp_path / "c.db"))
+    v1 = np.full((1, 16), 30.0, np.float32)
+    v2 = np.full((1, 16), -30.0, np.float32)
+    with eng.session() as s:
+        s.upsert(np.asarray([7777]), v1)
+        s.delete(np.asarray([7777]))
+        s.upsert(np.asarray([7777]), v2)   # the surviving write
+        s.upsert(np.asarray([8888]), v1)
+        s.delete(np.asarray([8888]))       # 8888 never lands
+    r = eng.query(v2, Q.knn(k=1))
+    assert int(np.asarray(r.ids)[0, 0]) == 7777
+    ids = eng.store.partitions_for(np.asarray([7777, 8888]))
+    assert ids[0] == -1 and ids[1] == -2   # delta row / absent
+
+
+def test_session_discard_on_exception(tmp_path):
+    eng, X = _mk_engine(str(tmp_path / "d.db"))
+    n0 = eng.store.count()
+    with pytest.raises(RuntimeError):
+        with eng.session() as s:
+            s.upsert(np.asarray([5555]), np.zeros((1, 16), np.float32))
+            raise RuntimeError("abort")
+    assert eng.store.count() == n0                    # nothing landed
+    assert eng.store.partitions_for(np.asarray([5555]))[0] == -2
+
+
+def test_session_durable_recovery(tmp_path):
+    """Session writes are durable: a fresh engine recovered from the same
+    file sees exactly the committed net effect."""
+    path = str(tmp_path / "r.db")
+    eng, X = _mk_engine(path)
+    nv = np.random.default_rng(2).normal(size=(4, 16)).astype(np.float32)
+    with eng.session() as s:
+        s.upsert(np.arange(9100, 9104), nv, np.zeros((4, 1), np.float32))
+        s.delete(np.asarray([9100]))
+    eng2 = MicroNN(dim=16, n_attr=1, path=path, config=eng.config)
+    eng2.recover()
+    r = eng2.query(nv[1:3], Q.knn(k=1))
+    assert list(np.asarray(r.ids)[:, 0]) == [9101, 9102]
+    assert 9100 not in np.asarray(eng2.query(nv[:1], Q.knn(k=3)).ids)
