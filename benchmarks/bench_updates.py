@@ -1,5 +1,24 @@
-"""Fig. 10: incremental vs full index rebuild across insert epochs:
-recall, per-query latency, rebuild time, write I/O."""
+"""Fig. 10: incremental vs full index rebuild under updates.
+
+Two sections:
+
+  * `fig10()` -- the original micro-level epochs: delta flush vs full
+    rebuild on a bare IVFIndex (recall, rebuild time, write I/O).
+  * `churn()` (PR 5, Fig. 10d-style) -- the engine-level sustained
+    upsert/delete churn: a MicroNN maintained ONLY by the incremental
+    split/merge scheduler (`maintain(until_idle=True)`, no full_rebuild
+    ever) against a twin maintained the legacy way (flush + full rebuild
+    at 50% mean-size growth). Reports bytes-written-per-row (flash wear)
+    and recall@100 against a freshly rebuilt oracle index, and asserts
+    the PR's acceptance pins:
+      - scheduler recall@100 >= 0.95x the fresh-rebuild oracle's,
+      - scheduler write bytes <= 0.25x the rebuild-at-50%-growth arm's,
+      - every scheduler step respects max_rows_per_step,
+      - the scheduler log contains no "full" rebuild.
+
+`--smoke` shrinks the workload so scripts/ci.sh runs the churn as a
+regression gate.
+"""
 import time
 
 import jax.numpy as jnp
@@ -8,11 +27,12 @@ import numpy as np
 from repro.core import delta, ivf, maintenance, search
 from repro.core.types import IVFConfig
 from repro.data import synthetic
+from repro.storage import MicroNN
 
 from .common import emit, _recall
 
 
-def main():
+def fig10():
     ds = synthetic.make("internala", scale=0.04)
     n = len(ds.X)
     half = n // 2
@@ -62,5 +82,149 @@ def main():
          f"incremental_vs_full={io_inc/max(io_full,1):.4f}")
 
 
+def churn(smoke: bool = False):
+    rng = np.random.default_rng(0)
+    # sustained growth + update/delete churn (int8 tier, as on device).
+    # The Fig. 10d question is the cost of keeping the CLUSTERING healthy
+    # under that stream: the scheduler's local split/merge repairs vs the
+    # legacy policy's full rebuilds (at 50% mean-size growth). The delta
+    # flush is identical work in both arms and reported alongside.
+    if smoke:
+        n0, d, epochs, target = 3000, 32, 10, 50
+        n_q, k, n_probe = 32, 100, 8
+    else:
+        n0, d, epochs, target = 20000, 64, 10, 100
+        n_q, k, n_probe = 64, 100, 8
+    grow = n0 // 7                   # ~+14%/epoch: 2+ legacy rebuilds
+    n_upd = n0 // 30                 # light in-place churn rides along
+    n_del = n0 // 60
+    n_centers = max(8, n0 // 200)
+    centers = rng.normal(size=(n_centers, d)).astype(np.float32) * 5
+    cfg = IVFConfig(dim=d, target_partition_size=target,
+                    kmeans_iters=10 if smoke else 20, quantize="int8",
+                    delta_capacity=max(1024, grow + n_upd + 8))
+
+    def make_rows(m):
+        lab = rng.integers(0, n_centers, m)
+        return (centers[lab]
+                + rng.normal(size=(m, d)).astype(np.float32))
+
+    X0 = make_rows(n0)
+    sched = MicroNN(dim=d, config=cfg)              # split/merge only
+    legacy = MicroNN(dim=d, config=cfg)             # legacy flush+rebuild
+    for e in (sched, legacy):
+        e.upsert(np.arange(n0), X0)
+        e.build()
+
+    quantum = sched.scheduler.max_rows_per_step
+    live = {i: X0[i] for i in range(n0)}
+    next_id = n0
+    rows_written = n0
+    rebuilds = 0
+    t_sched = t_legacy = 0.0
+    for ep in range(epochs):
+        nv = make_rows(grow)
+        ids = np.arange(next_id, next_id + grow)
+        next_id += grow
+        upd_ids = rng.choice(np.asarray(sorted(live)), n_upd,
+                             replace=False)
+        upd = make_rows(len(upd_ids))
+        del_ids = rng.choice(
+            np.setdiff1d(np.asarray(sorted(live)), upd_ids),
+            n_del, replace=False)
+        rows_written += grow + len(upd_ids)
+        for eng in (sched, legacy):
+            with eng.session() as s:
+                s.upsert(ids, nv)
+                s.upsert(upd_ids, upd)
+                s.delete(del_ids)
+        for i, v in zip(ids, nv):
+            live[int(i)] = v
+        for i, v in zip(upd_ids, upd):
+            live[int(i)] = v
+        for i in del_ids:
+            del live[int(i)]
+
+        t0 = time.perf_counter()
+        reports = sched.maintain(until_idle=True)
+        t_sched += time.perf_counter() - t0
+        assert all(r.rows <= quantum for r in reports), \
+            "scheduler step exceeded max_rows_per_step"
+        t0 = time.perf_counter()
+        legacy.maintain(force="flush")
+        if legacy.maintain() == "rebuild":    # growth/tombstone verdict
+            rebuilds += 1
+        t_legacy += time.perf_counter() - t0
+
+        io_s = sum(s.bytes_written for s in sched.maintenance_log)
+        io_l = sum(s.bytes_written for s in legacy.maintenance_log)
+        emit(f"fig10d_epoch{ep}", 0.0,
+             f"io_sched_MB={io_s/1e6:.2f};io_legacy_MB={io_l/1e6:.2f};"
+             f"steps={len(reports)};k_sched={sched.index.k};"
+             f"rebuilds={rebuilds}")
+
+    assert rebuilds >= 2, "workload must trip the legacy rebuild bar"
+    assert not any(s.kind == "full" for s in sched.maintenance_log), \
+        "scheduler arm must never full-rebuild"
+
+    # recall@100 against the live set's exact top-k; the oracle is a
+    # FRESH index rebuilt from the scheduler arm's durable rows
+    q = np.stack([live[i] for i in
+                  rng.choice(np.asarray(sorted(live)), n_q, replace=False)])
+    gt = np.asarray(sched.search(q, k=k, exact=True).ids)
+    oracle = MicroNN(dim=d, config=cfg)
+    ids_all, _, vecs_all = sched.store.all_rows()
+    oracle.upsert(ids_all, vecs_all)
+    oracle.build()
+
+    rec_sched = _recall(np.asarray(
+        sched.search(q, k=k, n_probe=n_probe).ids), gt, k)
+    rec_legacy = _recall(np.asarray(
+        legacy.search(q, k=k, n_probe=n_probe).ids), gt, k)
+    rec_oracle = _recall(np.asarray(
+        oracle.search(q, k=k, n_probe=n_probe).ids), gt, k)
+
+    # clustering-maintenance bytes: local repairs vs full rebuilds (the
+    # delta flush is the same work in both arms -- reported, not compared)
+    repair = sum(s.bytes_written for s in sched.maintenance_log
+                 if s.kind != "incremental")
+    rebuild = sum(s.bytes_written for s in legacy.maintenance_log
+                  if s.kind == "full")
+    flush_s = sum(s.bytes_written for s in sched.maintenance_log
+                  if s.kind == "incremental")
+    flush_l = sum(s.bytes_written for s in legacy.maintenance_log
+                  if s.kind == "incremental")
+    emit("fig10d_recall", 0.0,
+         f"sched={rec_sched:.3f};legacy={rec_legacy:.3f};"
+         f"oracle={rec_oracle:.3f};ratio={rec_sched/max(rec_oracle,1e-9):.3f}")
+    emit("fig10d_write_bytes", 0.0,
+         f"repair_per_row={repair/rows_written:.0f};"
+         f"rebuild_per_row={rebuild/rows_written:.0f};"
+         f"flush_per_row={flush_s/rows_written:.0f};"
+         f"total_sched_MB={(repair+flush_s)/1e6:.2f};"
+         f"total_legacy_MB={(rebuild+flush_l)/1e6:.2f};"
+         f"repair_vs_rebuild={repair/max(rebuild,1):.3f};"
+         f"maintain_s_sched={t_sched:.2f};maintain_s_legacy={t_legacy:.2f}")
+
+    # acceptance pins (scripts/ci.sh --smoke regression gate)
+    assert rec_sched >= 0.95 * rec_oracle, \
+        f"scheduler recall {rec_sched:.3f} < 0.95x oracle {rec_oracle:.3f}"
+    assert repair <= 0.25 * rebuild, \
+        f"local repairs wrote {repair}B > 0.25x the rebuild arm's " \
+        f"{rebuild}B of clustering maintenance"
+    assert repair + flush_s <= rebuild + flush_l, \
+        "scheduler total maintenance I/O exceeded the rebuild arm's"
+
+
+def main(smoke: bool = False):
+    if not smoke:
+        fig10()
+    churn(smoke=smoke)
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + acceptance asserts (CI gate)")
+    main(**vars(ap.parse_args()))

@@ -12,6 +12,12 @@ python -m benchmarks.bench_quantized --smoke
 # recall pin at every budget, resident bytes <= budget, and the scan-
 # resistant admission hit-rate pin
 python -m benchmarks.bench_paged --smoke
+# regression gate for the incremental maintenance subsystem (Fig. 10d):
+# sustained churn maintained by the split/merge scheduler alone must keep
+# recall >= 0.95x a freshly rebuilt oracle while its local repairs write
+# <= 0.25x the bytes of the legacy rebuild-at-50%-growth policy, with
+# every step bounded by max_rows_per_step
+python -m benchmarks.bench_updates --smoke
 # public-API smoke: the quickstart exercises QuerySpec/ResultSet, write
 # sessions, hybrid queries and recovery end-to-end -- API breakage fails
 # the gate before the unit tests even start

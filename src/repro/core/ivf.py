@@ -117,6 +117,7 @@ def build_index(
         base_mean_size=jnp.asarray(counts.mean() if n else 0.0, jnp.float32),
         codes=None if cod is None else jnp.asarray(cod),
         qstats=qstats,
+        drift=jnp.zeros((k,), jnp.float32),
         config=cfg,
     )
 

@@ -1,14 +1,30 @@
-"""Index maintenance: incremental delta flush + full rebuild (paper §3.6).
+"""Index maintenance: incremental delta flush, LIRE-style local repair
+(split / merge / recluster), and the legacy full rebuild (paper §3.6).
 
 Incremental flush ([1]-style, as the paper implements): each live delta
 vector is assigned to the partition with the nearest centroid; centroids
 update by the running-mean rule  c' = (v*c + sum x) / (v + m)  (the same
 telescoped form as Alg. 1's eta=1/v update, see core/kmeans.py).
 
-A flush only rewrites the partitions it touches -- the I/O win over a full
-rebuild that Fig. 10d quantifies. We account bytes for both paths
-(`MaintenanceStats`) so benchmarks/bench_updates.py can reproduce the
-figure.
+Local repair (the paper's Fig. 10d updatability claim, made incremental):
+instead of retraining the world when partitions drift out of shape, a
+repair touches only a *neighbourhood* of partitions -- an oversized
+partition is 2-means-split, underfull siblings are merged, and only rows
+in the touched centroid neighbourhood are reassigned. Quantized codes are
+re-encoded with the *existing* quantizer (deterministic, so codes stay
+byte-stable everywhere; in practice no code bytes change at all). The
+planning half (`plan_split` / `plan_merge` / `plan_local_recluster`) is a
+pure host computation over a `RowBlock` fetch callback, shared by the
+resident and paged engines so both modes make bit-identical decisions;
+`apply_plan` rewrites the resident packed layout, while both engines
+persist the plan durably through one atomic repair transaction
+(VectorStore.apply_repair) -- the paged engine additionally invalidates
+exactly the touched pager frames.
+
+A flush/repair only rewrites the partitions it touches -- the I/O win
+over a full rebuild that Fig. 10d quantifies. We account bytes for every
+path (`MaintenanceStats`) so benchmarks/bench_updates.py can reproduce
+the figure.
 
 The flush itself is a host-side repack (it changes row placement --
 the 'SSD reorganisation' tier); the nearest-centroid assignment runs on
@@ -17,7 +33,7 @@ device.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +46,8 @@ from .types import (DeltaStore, INVALID_ID, IVFConfig, IVFIndex,
 
 @dataclasses.dataclass
 class MaintenanceStats:
-    kind: str                 # "incremental" | "full"
+    kind: str                 # "incremental" | "full" | "split" | "merge"
+    #                            | "recluster"
     rows_moved: int
     partitions_touched: int
     bytes_written: int        # host-tier write I/O (flash-wear metric)
@@ -49,15 +66,31 @@ def assign_nearest_centroid(dx: np.ndarray, centroids) -> np.ndarray:
 
 def running_mean_update(cent: np.ndarray, csizes: np.ndarray,
                         dx: np.ndarray, assign: np.ndarray,
-                        touched: np.ndarray):
+                        touched: np.ndarray,
+                        drift: Optional[np.ndarray] = None):
     """The paper's telescoped running-mean rule c' = (v*c + sum x)/(v+m)
     per touched partition (in place) -- shared by both flush paths so the
-    resident and paged centroid trajectories stay numerically identical."""
-    for p in touched:
-        m = int((assign == p).sum())
-        v = csizes[p]
-        cent[p] = (v * cent[p] + dx[assign == p].sum(0)) / max(v + m, 1.0)
-        csizes[p] = v + m
+    resident and paged centroid trajectories stay numerically identical.
+
+    Vectorized as one np.add.at scatter over the whole batch: bitwise
+    identical to the per-partition loop it replaced, because an axis-0
+    float32 sum accumulates rows sequentially in row order exactly like
+    the scatter does (pinned by tests/test_maintenance.py).
+
+    When `drift` is given, each touched partition's centroid displacement
+    accumulates into it (in place) -- the monitor's recluster signal.
+    """
+    sums = np.zeros_like(cent)
+    np.add.at(sums, assign, dx)
+    m = np.bincount(assign, minlength=cent.shape[0]).astype(csizes.dtype)
+    t = np.asarray(touched)
+    old = cent[t].copy() if drift is not None else None
+    v = csizes[t]
+    cent[t] = (v[:, None] * cent[t] + sums[t]) \
+        / np.maximum(v + m[t], 1.0)[:, None]
+    csizes[t] = v + m[t]
+    if drift is not None:
+        drift[t] += np.linalg.norm(cent[t] - old, axis=-1)
 
 
 def _row_bytes(index: IVFIndex) -> int:
@@ -68,18 +101,62 @@ def _row_bytes(index: IVFIndex) -> int:
     return 4 * d + 4 + 4 * n_attr + 1 + codes
 
 
-def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
-    """Incrementally fold live delta rows into the IVF partitions."""
+def compact_delta(d: DeltaStore, keep: np.ndarray, n_attr: int,
+                  quantized: bool, qstats=None) -> DeltaStore:
+    """Compact the delta rows listed in `keep` into a fresh DeltaStore --
+    the tail of a *partial* flush (the scheduler's bounded work quantum
+    flushes only `max_rows` rows per step and must not drop the rest).
+    Shared by the resident and paged flush paths."""
+    cap, dim = d.capacity, d.vectors.shape[1]
+    out = DeltaStore.empty(cap, dim, n_attr, quantized=quantized)
+    if keep.size == 0:
+        return out
+    r = keep.size
+    vec = np.zeros((cap, dim), np.float32)
+    vec[:r] = np.asarray(d.vectors)[keep]
+    ids = np.full((cap,), INVALID_ID, np.int32)
+    ids[:r] = np.asarray(d.ids)[keep]
+    attrs = np.zeros((cap, n_attr), np.float32)
+    attrs[:r] = np.asarray(d.attrs)[keep]
+    valid = np.zeros((cap,), bool)
+    valid[:r] = True
+    codes = None
+    if quantized:
+        codes = np.zeros((cap, dim), np.int8)
+        if d.codes is not None:
+            codes[:r] = np.asarray(d.codes)[keep]
+        else:           # hand-assembled code-less delta: re-encode
+            codes[:r] = quantize.encode_np(qstats, vec[:r])
+        codes = jnp.asarray(codes)
+    return DeltaStore(vectors=jnp.asarray(vec), ids=jnp.asarray(ids),
+                      attrs=jnp.asarray(attrs), valid=jnp.asarray(valid),
+                      count=jnp.asarray(r, jnp.int32), codes=codes)
+
+
+def flush_delta(index: IVFIndex, max_rows: Optional[int] = None,
+                assign: Optional[np.ndarray] = None
+                ) -> Tuple[IVFIndex, MaintenanceStats]:
+    """Incrementally fold live delta rows into the IVF partitions.
+
+    `max_rows` bounds the work quantum (storage/scheduler.py): only the
+    first `max_rows` live rows (slot order) are flushed; the rest stay in
+    the delta, compacted to the front, and remain searchable. A caller
+    that already computed the flushed rows' nearest-centroid assignment
+    (the engine's durable flush step mirrors the moves to SQLite) passes
+    it via `assign` to skip the second identical device computation."""
     cfg = index.config
     k, p_max, d = index.vectors.shape
 
     quantized = index.codes is not None
     dvalid = np.asarray(index.delta.valid)
     live = np.nonzero(dvalid)[0]
+    deferred = np.zeros((0,), np.int64)
+    if max_rows is not None and live.size > max_rows:
+        live, deferred = live[:max_rows], live[max_rows:]
     if live.size == 0:
-        empty = DeltaStore.empty(index.delta.capacity, d, index.n_attr,
-                                 quantized=quantized)
-        new = dataclasses.replace(index, delta=empty)
+        new = dataclasses.replace(
+            index, delta=compact_delta(index.delta, deferred, index.n_attr,
+                                       quantized, index.qstats))
         return new, MaintenanceStats("incremental", 0, 0, 0, p_max, p_max)
 
     dx = np.asarray(index.delta.vectors)[live]
@@ -92,8 +169,11 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
                 if index.delta.codes is not None
                 else quantize.encode_np(index.qstats, dx))
 
-    # nearest-centroid assignment on device
-    assign = assign_nearest_centroid(dx, index.centroids)
+    # nearest-centroid assignment on device (unless the caller already
+    # computed it for the durable mirror of these moves)
+    if assign is None:
+        assign = assign_nearest_centroid(dx, index.centroids)
+    assert len(assign) == live.size
 
     vec = np.array(index.vectors)
     vid = np.array(index.ids)
@@ -135,7 +215,9 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
             newc = np.concatenate([cod[p][keep], dcod[assign == p]])
             cod[p, :m] = newc; cod[p, m:] = 0
         counts[p] = m
-    running_mean_update(cent, csizes, dx, assign, touched)
+    drift = np.asarray(index.drift, np.float32).copy() \
+        if index.drift is not None else np.zeros((k,), np.float32)
+    running_mean_update(cent, csizes, dx, assign, touched, drift=drift)
 
     stats = MaintenanceStats(
         kind="incremental",
@@ -155,13 +237,372 @@ def flush_delta(index: IVFIndex) -> Tuple[IVFIndex, MaintenanceStats]:
         vectors=jnp.asarray(vec), ids=jnp.asarray(vid),
         attrs=jnp.asarray(vat), valid=jnp.asarray(val),
         counts=jnp.asarray(counts),
-        delta=DeltaStore.empty(index.delta.capacity, d, index.n_attr,
-                               quantized=quantized),
+        delta=compact_delta(index.delta, deferred, index.n_attr, quantized,
+                            index.qstats),
         base_mean_size=index.base_mean_size,
         codes=jnp.asarray(cod) if quantized else None,
         qstats=index.qstats,
+        drift=jnp.asarray(drift),
         config=cfg)
     return new_index, stats
+
+
+# ---------------------------------------------------------------------------
+# LIRE-style local repair: split / merge / recluster over a partition
+# neighbourhood. Planning is a pure host computation shared by the resident
+# and paged engines (both feed it the same row bytes, sorted by asset id,
+# so the two modes produce bit-identical repairs); application is
+# mode-specific (apply_plan rewrites the packed layout; the paged engine
+# applies durably + invalidates frames).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RowBlock:
+    """Live rows of one partition, sorted ascending by asset id (the order
+    both the packed resident layout after repack and SQLite's clustered
+    scan agree on). `attrs`/`codes` ride along only where the fetcher has
+    them resident (the paged apply re-reads them from SQLite instead)."""
+
+    ids: np.ndarray                       # [m] int32
+    vecs: np.ndarray                      # [m, d] f32, metric-normalised
+    attrs: Optional[np.ndarray] = None    # [m, n_attr] f32
+    codes: Optional[np.ndarray] = None    # [m, d] int8
+
+# fetch callback: pids -> {pid: RowBlock} (one batched read per repair)
+RowFetch = Callable[[Sequence[int]], Dict[int, "RowBlock"]]
+
+
+@dataclasses.dataclass
+class RepairPlan:
+    """One planned local repair: which partitions are touched, where every
+    affected row lands, and the neighbourhood's new centroid state. The
+    plan is pure data -- the engine persists it durably (codes first, then
+    one generation-swap transaction) and applies it to device state."""
+
+    kind: str                 # "split" | "merge" | "recluster"
+    pids: np.ndarray          # [L] int64 -- touched partitions (split: the
+    #                           new slot is last)
+    new_pid: Optional[int]    # slot a split allocated (reused empty slot,
+    #                           or == k_before when appending)
+    k_after: int              # partition count after the repair
+    row_ids: np.ndarray       # [m] int32 -- every live row in the
+    #                           neighbourhood (block order per pids)
+    row_vecs: np.ndarray      # [m, d] f32 metric-normalised
+    row_attrs: Optional[np.ndarray]   # [m, n_attr] (resident fetch only)
+    row_codes: Optional[np.ndarray]   # [m, d] int8 (resident fetch only)
+    src: np.ndarray           # [m] int64 -- current partition per row
+    assign: np.ndarray        # [m] int64 -- new partition per row
+    centroids: np.ndarray     # [L, d] f32 -- new centroids for `pids`
+    csizes: np.ndarray        # [L] f32 -- restarted running counts
+
+    @property
+    def rows(self) -> int:
+        return int(self.row_ids.size)
+
+    @property
+    def moved(self) -> np.ndarray:
+        return self.assign != self.src
+
+
+def two_means(rows: np.ndarray, iters: int = 8
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic 2-means over [m, d] float32 rows: farthest-point init
+    from the partition mean, fixed Lloyd iterations, ties to side 0. No
+    RNG and no order sensitivity beyond the caller's (sorted-by-id) row
+    order, so the resident and paged planners split identically."""
+    mu = rows.mean(0)
+    c1 = rows[int(((rows - mu) ** 2).sum(-1).argmax())]
+    c2 = rows[int(((rows - c1) ** 2).sum(-1).argmax())]
+    assign = np.zeros((rows.shape[0],), np.int64)
+    for _ in range(iters):
+        d1 = ((rows - c1) ** 2).sum(-1)
+        d2 = ((rows - c2) ** 2).sum(-1)
+        new = (d2 < d1).astype(np.int64)
+        if (new == 0).all() or (new == 1).all():
+            assign = new
+            break
+        c1n, c2n = rows[new == 0].mean(0), rows[new == 1].mean(0)
+        done = np.array_equal(new, assign)
+        assign = new
+        if done:
+            break
+        c1, c2 = c1n, c2n
+    return np.stack([c1, c2]), assign
+
+
+def neighborhood(centroids: np.ndarray, counts: np.ndarray,
+                 seeds: Sequence[int], row_budget: Optional[int],
+                 n_extra: int) -> List[int]:
+    """The touched centroid neighbourhood of a repair: the seed partitions
+    plus up to `n_extra` nearest non-empty partitions whose rows still fit
+    the row budget (the scheduler's work quantum). Deterministic: ordered
+    by centroid distance to the first seed, ties by partition id."""
+    base = [int(p) for p in seeds]
+    used = int(counts[base].sum())
+    if n_extra <= 0:
+        return base
+    ref = centroids[base[0]]
+    dist = ((centroids - ref) ** 2).sum(-1)
+    order = np.lexsort((np.arange(len(centroids)), dist))
+    out = list(base)
+    for q in order:
+        if len(out) - len(base) >= n_extra:
+            break
+        q = int(q)
+        if q in base or counts[q] <= 0:
+            continue
+        if row_budget is not None and used + int(counts[q]) > row_budget:
+            continue
+        out.append(q)
+        used += int(counts[q])
+    return out
+
+
+def _gather_blocks(blocks: Dict[int, RowBlock], pids: Sequence[int]):
+    """Concatenate the neighbourhood's RowBlocks in pid-list order."""
+    ids = [blocks[p].ids for p in pids if p in blocks]
+    if not ids:
+        d = 0
+        return (np.zeros((0,), np.int32), np.zeros((0, d), np.float32),
+                None, None, np.zeros((0,), np.int64))
+    vecs = np.concatenate([blocks[p].vecs for p in pids if p in blocks])
+    src = np.concatenate([np.full((len(blocks[p].ids),), p, np.int64)
+                          for p in pids if p in blocks])
+    have_attrs = all(blocks[p].attrs is not None
+                     for p in pids if p in blocks)
+    have_codes = all(blocks[p].codes is not None
+                     for p in pids if p in blocks)
+    attrs = np.concatenate([blocks[p].attrs for p in pids if p in blocks]) \
+        if have_attrs else None
+    codes = np.concatenate([blocks[p].codes for p in pids if p in blocks]) \
+        if have_codes else None
+    return np.concatenate(ids), vecs, attrs, codes, src
+
+
+def _finalize_plan(kind, local, new_pid, k_after, row_ids, row_vecs,
+                   row_attrs, row_codes, src, local_cents
+                   ) -> Optional[RepairPlan]:
+    """Shared tail of every planner: reassign the neighbourhood's rows to
+    their nearest local centroid, then restate each touched partition's
+    centroid as the mean of its new members (running-mean restart).
+    Partitions left empty keep their (masked-by-count) old centroid."""
+    d2 = ((row_vecs[:, None, :] - local_cents[None, :, :]) ** 2).sum(-1)
+    pick = d2.argmin(axis=1)                      # ties -> lowest index
+    assign = np.asarray(local, np.int64)[pick]
+    cents = local_cents.copy().astype(np.float32)
+    csz = np.zeros((len(local),), np.float32)
+    for j in range(len(local)):
+        sel = pick == j
+        m = int(sel.sum())
+        csz[j] = m
+        if m:
+            cents[j] = row_vecs[sel].mean(0)
+    return RepairPlan(
+        kind=kind, pids=np.asarray(local, np.int64), new_pid=new_pid,
+        k_after=k_after, row_ids=row_ids, row_vecs=row_vecs,
+        row_attrs=row_attrs, row_codes=row_codes, src=src, assign=assign,
+        centroids=cents, csizes=csz)
+
+
+def plan_split(centroids: np.ndarray, csizes: np.ndarray,
+               counts: np.ndarray, pid: int, fetch: RowFetch, *,
+               row_budget: Optional[int] = None, n_local: int = 2
+               ) -> Optional[RepairPlan]:
+    """2-means split of an oversized partition + local reassignment of the
+    touched neighbourhood. The freed half lands in a reused empty slot
+    when one exists (keeping k stable under churn), else in a new slot k.
+    Returns None when the partition is degenerate (all rows identical)."""
+    k = centroids.shape[0]
+    pid = int(pid)
+    nbrs = neighborhood(centroids, counts, [pid], row_budget, n_local)
+    blocks = fetch(nbrs)
+    seed = blocks.get(pid)
+    if seed is None or len(seed.ids) < 2:
+        return None
+    (c1, c2), halves = two_means(seed.vecs)
+    if (halves == 0).all() or (halves == 1).all():
+        return None                      # degenerate: nothing to split
+    if (halves == 1).sum() > (halves == 0).sum():
+        # the larger half stays in place (fewer durable row moves)
+        c1, c2 = c2, c1
+    empty = [int(p) for p in np.nonzero(counts == 0)[0] if p not in nbrs]
+    new_pid = empty[0] if empty else k
+    k_after = max(k, new_pid + 1)
+    local = nbrs + [new_pid]
+    row_ids, row_vecs, row_attrs, row_codes, src = _gather_blocks(
+        blocks, nbrs)
+    local_cents = np.concatenate(
+        [np.stack([c1]), centroids[nbrs[1:]], np.stack([c2])]) \
+        .astype(np.float32)
+    plan = _finalize_plan("split", local, new_pid, k_after, row_ids,
+                          row_vecs, row_attrs, row_codes, src, local_cents)
+    if plan is None or not plan.moved.any():
+        return None
+    return plan
+
+
+def plan_merge(centroids: np.ndarray, csizes: np.ndarray,
+               counts: np.ndarray, into: int, victim: int, fetch: RowFetch
+               ) -> Optional[RepairPlan]:
+    """Merge an underfull partition into a sibling: every row of `victim`
+    moves to `into`, whose centroid restarts at the merged rows' mean.
+    The victim keeps its (masked-by-count) centroid slot -- reusable by a
+    later split, so k never needs global renumbering."""
+    into, victim = int(into), int(victim)
+    local = [into, victim]
+    blocks = fetch(local)
+    row_ids, row_vecs, row_attrs, row_codes, src = _gather_blocks(
+        blocks, local)
+    if row_ids.size == 0:
+        return None
+    assign = np.full((row_ids.size,), into, np.int64)
+    cents = np.stack([row_vecs.mean(0),
+                      centroids[victim]]).astype(np.float32)
+    csz = np.asarray([row_ids.size, 0.0], np.float32)
+    plan = RepairPlan(
+        kind="merge", pids=np.asarray(local, np.int64), new_pid=None,
+        k_after=centroids.shape[0], row_ids=row_ids, row_vecs=row_vecs,
+        row_attrs=row_attrs, row_codes=row_codes, src=src, assign=assign,
+        centroids=cents, csizes=csz)
+    return plan
+
+
+def plan_local_recluster(centroids: np.ndarray, csizes: np.ndarray,
+                         counts: np.ndarray, pid: int, fetch: RowFetch, *,
+                         row_budget: Optional[int] = None, n_local: int = 2
+                         ) -> Optional[RepairPlan]:
+    """Local repair of a drifted (or tombstone-heavy) partition: reassign
+    only the rows in its centroid neighbourhood to their nearest local
+    centroid and restart those centroids at their members' means. Always
+    returns a plan (even a no-move one: the repack drops tombstones and
+    the apply resets the drift signal)."""
+    nbrs = neighborhood(centroids, counts, [int(pid)], row_budget, n_local)
+    blocks = fetch(nbrs)
+    row_ids, row_vecs, row_attrs, row_codes, src = _gather_blocks(
+        blocks, nbrs)
+    if row_ids.size == 0:
+        return None
+    return _finalize_plan("recluster", nbrs, None, centroids.shape[0],
+                          row_ids, row_vecs, row_attrs, row_codes, src,
+                          centroids[nbrs].astype(np.float32))
+
+
+def apply_plan(index: IVFIndex, plan: RepairPlan) -> IVFIndex:
+    """Rewrite the resident packed layout per a RepairPlan: only the
+    touched partitions' slots change (rows packed ascending by asset id,
+    matching what a recover() from the repaired durable state would pack),
+    k/p_max grow as needed, codes move byte-stable with their rows, and
+    the touched partitions' drift resets."""
+    cfg = index.config
+    k, p_max, d = index.vectors.shape
+    quantized = index.codes is not None
+    assert plan.row_attrs is not None, "resident apply needs attrs"
+    assert (not quantized) or plan.row_codes is not None
+
+    vec = np.array(index.vectors)
+    vid = np.array(index.ids)
+    vat = np.array(index.attrs)
+    val = np.array(index.valid)
+    counts = np.array(index.counts)
+    cent = np.array(index.centroids)
+    csz = np.array(index.csizes)
+    cod = np.array(index.codes) if quantized else None
+    drift = np.asarray(index.drift, np.float32).copy() \
+        if index.drift is not None else np.zeros((k,), np.float32)
+
+    if plan.k_after > k:
+        grow = plan.k_after - k
+        vec = np.pad(vec, [(0, grow), (0, 0), (0, 0)])
+        vid = np.pad(vid, [(0, grow), (0, 0)], constant_values=INVALID_ID)
+        vat = np.pad(vat, [(0, grow), (0, 0), (0, 0)])
+        val = np.pad(val, [(0, grow), (0, 0)])
+        counts = np.pad(counts, (0, grow))
+        cent = np.pad(cent, [(0, grow), (0, 0)])
+        csz = np.pad(csz, (0, grow))
+        drift = np.pad(drift, (0, grow))
+        if quantized:
+            cod = np.pad(cod, [(0, grow), (0, 0), (0, 0)])
+
+    sizes = np.asarray([(plan.assign == p).sum() for p in plan.pids])
+    pad = effective_pad_to(cfg)
+    new_p_max = max(p_max, -(-int(max(sizes.max(), 1)) // pad) * pad)
+    if new_p_max > p_max:
+        grow = new_p_max - p_max
+        vec = np.pad(vec, [(0, 0), (0, grow), (0, 0)])
+        vid = np.pad(vid, [(0, 0), (0, grow)], constant_values=INVALID_ID)
+        vat = np.pad(vat, [(0, 0), (0, grow), (0, 0)])
+        val = np.pad(val, [(0, 0), (0, grow)])
+        if quantized:
+            cod = np.pad(cod, [(0, 0), (0, grow), (0, 0)])
+
+    for j, p in enumerate(plan.pids):
+        sel = plan.assign == p
+        order = np.argsort(plan.row_ids[sel], kind="stable")
+        m = int(sel.sum())
+        vec[p] = 0.0
+        vid[p] = INVALID_ID
+        vat[p] = 0.0
+        val[p] = False
+        if quantized:
+            cod[p] = 0
+        if m:
+            vec[p, :m] = plan.row_vecs[sel][order]
+            vid[p, :m] = plan.row_ids[sel][order]
+            vat[p, :m] = plan.row_attrs[sel][order]
+            val[p, :m] = True
+            if quantized:
+                cod[p, :m] = plan.row_codes[sel][order]
+        counts[p] = m
+        cent[p] = plan.centroids[j]
+        csz[p] = plan.csizes[j]
+        drift[p] = 0.0
+
+    return dataclasses.replace(
+        index,
+        centroids=jnp.asarray(cent), csizes=jnp.asarray(csz),
+        vectors=jnp.asarray(vec), ids=jnp.asarray(vid),
+        attrs=jnp.asarray(vat), valid=jnp.asarray(val),
+        counts=jnp.asarray(counts),
+        codes=jnp.asarray(cod) if quantized else None,
+        drift=jnp.asarray(drift))
+
+
+def repack_partition(index: IVFIndex, pid: int) -> IVFIndex:
+    """Device-only tombstone repack of one partition: live rows re-pack
+    ascending by asset id (the order paged frames and recover() use) and
+    dead slots clear. No centroid, drift, or durable change -- the paged
+    engine has no tombstones, so the two modes' durable states stay
+    identical; write I/O is zero (the flash never sees it)."""
+    pid = int(pid)
+    vec = np.array(index.vectors[pid])
+    vid = np.array(index.ids[pid])
+    vat = np.array(index.attrs[pid])
+    val = np.array(index.valid[pid])
+    cod = np.array(index.codes[pid]) if index.codes is not None else None
+    sel = np.nonzero(val)[0]
+    order = np.argsort(vid[sel], kind="stable")
+    m = len(sel)
+    rows = sel[order]
+
+    def repacked(buf, live, fill):
+        out = np.full_like(buf, fill)
+        out[:m] = live
+        return out
+
+    new = dataclasses.replace(
+        index,
+        vectors=index.vectors.at[pid].set(repacked(vec, vec[rows], 0.0)),
+        ids=index.ids.at[pid].set(repacked(vid, vid[rows], INVALID_ID)),
+        attrs=index.attrs.at[pid].set(repacked(vat, vat[rows], 0.0)),
+        valid=index.valid.at[pid].set(
+            np.concatenate([np.ones(m, bool),
+                            np.zeros(len(val) - m, bool)])),
+    )
+    if cod is not None:
+        new = dataclasses.replace(
+            new, codes=index.codes.at[pid].set(repacked(cod, cod[rows], 0)))
+    return new
 
 
 def live_rows(index: IVFIndex):

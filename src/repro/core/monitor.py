@@ -1,17 +1,35 @@
 """Index monitor (paper Fig. 1, §3.6): tracks quality signals on updates
-and decides when to run incremental maintenance vs a full rebuild.
+and decides what maintenance the index needs.
+
+Two APIs, one set of signals:
+
+  * `check(index)` -- the legacy single-verdict API ("none" | "flush" |
+    "rebuild"), kept for callers that still run whole-index maintenance;
+  * `work_queue(index)` -- the incremental API (PR 5): per-partition
+    size/drift signals become a PRIORITIZED queue of `WorkItem(action,
+    pids)` entries drained by storage/scheduler.MaintenanceScheduler in
+    bounded work quanta. This is what retires the full rebuild as the
+    steady-state path: oversized partitions split, underfull siblings
+    merge, drifted or tombstone-heavy neighbourhoods recluster locally.
 
 Signals tracked (after [26]):
   * delta pressure: live delta rows / capacity -- high pressure raises
     query latency (the delta partition is always scanned);
-  * partition growth: mean live partition size vs size at last rebuild --
-    the paper triggers a full rebuild at +50% growth;
+  * per-partition size vs the clustering target -- the split/merge
+    triggers (the global mean-growth signal is what the legacy rebuild
+    verdict uses);
+  * per-partition drift: cumulative centroid displacement since the last
+    local repair (maintenance.running_mean_update accumulates it),
+    normalised by the centroid spacing -- the recall-killer under churn
+    is a running mean that no longer sits among its rows;
   * tombstone ratio: dead rows inflate scan cost without contributing
-    results.
+    results (per-partition in work_queue, so one churned partition
+    triggers a local repack instead of a global rebuild).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import List, Tuple
 
 import numpy as np
 
@@ -23,6 +41,24 @@ class MonitorConfig:
     delta_flush_fraction: float = 0.75   # flush when delta is this full
     growth_rebuild_threshold: float = 0.5  # paper: 50% mean-size growth
     tombstone_rebuild_fraction: float = 0.3
+    # -- incremental (work_queue) triggers ----------------------------------
+    # split a partition past split_threshold * target_partition_size rows;
+    # 2.0 is the B-tree doubling point: a split yields two target-sized
+    # halves, so split write I/O amortizes to <= 0.5 moved rows per insert
+    split_threshold: float = 2.0
+    # merge a partition below merge_threshold * target_partition_size rows
+    # (into its nearest sibling, if the pair stays under the split bar)
+    merge_threshold: float = 0.4
+    # recluster a partition whose accumulated centroid drift exceeds this
+    # fraction of the mean nearest-centroid spacing
+    drift_recluster_threshold: float = 0.5
+    # how many nearest neighbours a drift/tombstone recluster pulls into
+    # its reassignment neighbourhood (maintenance.neighborhood)
+    repair_neighbors: int = 2
+    # how many neighbours a *split* reassigns besides the split partition
+    # itself; 0 keeps split write-I/O at one partition's rows (boundary
+    # repair is the drift recluster's job, triggered only when warranted)
+    split_neighbors: int = 0
 
 
 @dataclasses.dataclass
@@ -33,6 +69,19 @@ class IndexHealth:
     growth: float            # relative growth vs base_mean_size
     tombstone_fraction: float
     action: str              # "none" | "flush" | "rebuild"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkItem:
+    """One unit of incremental maintenance. `pids` is () for a flush, a
+    1-tuple for split/recluster/repack, ("into", "victim") for a merge.
+    `rows` estimates the rows the item touches (the scheduler budgets on
+    it)."""
+
+    action: str        # "flush" | "split" | "merge" | "recluster" | "repack"
+    pids: Tuple[int, ...]
+    rows: int
+    priority: float
 
 
 class IndexMonitor:
@@ -72,3 +121,103 @@ class IndexMonitor:
             action=action)
         self.history.append(health)
         return health
+
+    # -- incremental maintenance (PR 5) -------------------------------------
+    def work_queue(self, index) -> List[WorkItem]:
+        """Per-partition signals -> a prioritized list of maintenance work.
+
+        Works against a resident IVFIndex or a PagedIndex (both expose
+        counts / delta / centroids / drift); per-partition tombstone
+        repacks only apply to the resident packed layout (the durable
+        tier deletes rows eagerly). Priorities order flushes (the delta
+        gates the write path) ahead of splits (recall + p_max pressure)
+        ahead of merges (scan waste) ahead of drift reclustering.
+        """
+        cfg = self.cfg
+        target = max(1, int(index.config.target_partition_size))
+        counts = np.asarray(index.counts)
+        k = counts.shape[0]
+        items: List[WorkItem] = []
+
+        delta_cursor = int(index.delta.count)
+        delta_live = int(np.asarray(index.delta.valid).sum())
+        if delta_cursor >= cfg.delta_flush_fraction * index.delta.capacity:
+            pressure = delta_cursor / max(1, index.delta.capacity)
+            items.append(WorkItem("flush", (), delta_live,
+                                  100.0 + pressure))
+        elif delta_live:
+            # below the pressure bar the flush is still *pending* work --
+            # "idle" means an empty delta -- just the lowest priority
+            items.append(WorkItem("flush", (), delta_live, 0.5))
+
+        split_bar = cfg.split_threshold * target
+        for p in np.nonzero(counts > split_bar)[0]:
+            items.append(WorkItem("split", (int(p),), int(counts[p]),
+                                  10.0 + counts[p] / split_bar))
+
+        merge_bar = cfg.merge_threshold * target
+        if k > 1:
+            cents = np.asarray(index.centroids)
+            small = np.nonzero((counts > 0) & (counts < merge_bar))[0]
+            taken: set = set()
+            for q in small:
+                q = int(q)
+                if q in taken:
+                    continue
+                # nearest non-empty sibling the pair fits under the split
+                # bar with -- deterministic: distance, then partition id
+                dist = ((cents - cents[q]) ** 2).sum(-1)
+                order = np.lexsort((np.arange(k), dist))
+                into = None
+                for cand in order:
+                    cand = int(cand)
+                    if cand == q or counts[cand] <= 0 or cand in taken:
+                        continue
+                    if counts[cand] + counts[q] <= split_bar:
+                        into = cand
+                        break
+                if into is None:
+                    continue
+                taken.update((q, into))
+                items.append(WorkItem(
+                    "merge", (into, q), int(counts[into] + counts[q]),
+                    5.0 + (1.0 - counts[q] / merge_bar)))
+
+        # drift: a running mean that wandered a good fraction of the
+        # centroid spacing no longer represents its rows -> local repair
+        drift = getattr(index, "drift", None)
+        if drift is not None and k > 1:
+            drift = np.asarray(drift)
+            cents = np.asarray(index.centroids)
+            live = counts > 0
+            if live.sum() > 1:
+                d2 = ((cents[:, None, :] - cents[None, :, :]) ** 2).sum(-1)
+                d2[~live, :] = np.inf
+                d2[:, ~live] = np.inf
+                np.fill_diagonal(d2, np.inf)
+                spacing = float(np.sqrt(d2.min(axis=1)[live]).mean())
+                bar = cfg.drift_recluster_threshold * max(spacing, 1e-12)
+                for p in np.nonzero(live & (drift[:k] >= bar))[0]:
+                    items.append(WorkItem(
+                        "recluster", (int(p),), int(counts[p]),
+                        1.0 + float(drift[p]) / bar))
+
+        # per-partition tombstone repack: ONLY the resident packed layout
+        # carries tombstones (the durable tier and the paged frames delete
+        # eagerly), so this is a device-only repack with NO durable
+        # effect -- the resident and paged durable states stay identical
+        ids = getattr(index, "ids", None)
+        if ids is not None:
+            ids = np.asarray(ids)
+            valid = np.asarray(index.valid)
+            dead = ((ids != -1) & ~valid).sum(-1)
+            occ = dead + valid.sum(-1)
+            frac = dead / np.maximum(occ, 1)
+            hit = (frac >= cfg.tombstone_rebuild_fraction) & (dead > 0)
+            for p in np.nonzero(hit)[0]:
+                items.append(WorkItem(
+                    "repack", (int(p),), int(counts[p]),
+                    3.0 + float(frac[p])))
+
+        items.sort(key=lambda it: (-it.priority, it.action, it.pids))
+        return items

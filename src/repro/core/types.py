@@ -142,6 +142,14 @@ class IVFIndex:
     # (core/quantize.QuantStats pytree). None on a float32-only index.
     codes: Optional[jax.Array] = None   # [k, p_max, d] int8
     qstats: Optional[Any] = None        # quantize.QuantStats
+    # Per-partition drift state (paper §3.6 / LIRE-style local repair):
+    # cumulative centroid displacement since the partition was last
+    # (re)clustered, accumulated by maintenance.running_mean_update and
+    # reset by split/merge/local_recluster and rebuilds. The monitor
+    # compares it against the centroid spacing to queue "recluster" work
+    # for partitions whose running mean has wandered from their rows.
+    # None on hand-assembled indexes (treated as zero drift).
+    drift: Optional[jax.Array] = None   # [k] float32
     config: IVFConfig = static_field(default_factory=IVFConfig)
 
     @property
@@ -187,6 +195,9 @@ class PagedIndex:
     cache: Any                 # storage.pager.PartitionCache
     base_mean_size: float
     qstats: Optional[Any] = None    # quantize.QuantStats (int8 mode)
+    # Per-partition drift state (host array, same signal as IVFIndex.drift;
+    # session-local -- recovery starts it at zero).
+    drift: Any = None               # [k] float32 np.ndarray
     config: IVFConfig = dataclasses.field(default_factory=IVFConfig)
 
     @property

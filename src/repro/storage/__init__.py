@@ -1,4 +1,5 @@
 from .store import VectorStore
 from .engine import MicroNN
 from .pager import PartitionCache
-from . import checkpoint, pager
+from .scheduler import MaintenanceScheduler, StepReport
+from . import checkpoint, pager, scheduler

@@ -11,7 +11,8 @@ application links against:
     eng.build()                      # initial clustering
     rs = eng.query(q, Q.knn(k=100).probe(8))
     rs = eng.query(q, Q.knn(k=10).where(Pred(0, "==", 3.0)))
-    eng.maintain()                   # flush delta / rebuild as needed
+    eng.maintain(until_idle=True)    # drain incremental maintenance
+    eng.maintain_step()              # ... or one bounded quantum at a time
 
 `query(vecs, spec)` is the ONE query entry point: the frozen QuerySpec
 (core/query.py) routes resident / paged / hybrid-optimized execution and
@@ -39,13 +40,14 @@ import numpy as np
 from ..core import delta as delta_ops
 from ..core import executor, ivf, kmeans, maintenance, quantize
 from ..core.hybrid import AttributeStats, Node
-from ..core.monitor import IndexMonitor, MonitorConfig
+from ..core.monitor import IndexMonitor, MonitorConfig, WorkItem
 from ..core.optimizer import HybridOptimizer
 from ..core.query import Q, QuerySpec, ResultSet
 from ..core.types import (INVALID_ID, DeltaStore, IVFConfig, IVFIndex,
                           PagedIndex, SearchResult, effective_pad_to,
                           normalize_if_cosine)
 from . import pager
+from .scheduler import MaintenanceScheduler, StepReport
 from .store import VectorStore
 
 
@@ -111,7 +113,8 @@ class MicroNN:
                  monitor: Optional[MonitorConfig] = None,
                  quantize: Optional[str] = None,
                  rerank_factor: Optional[int] = None,
-                 memory_budget_mb: Optional[float] = None):
+                 memory_budget_mb: Optional[float] = None,
+                 max_rows_per_step: int = 4096):
         """`quantize="int8"` turns on the scalar-quantized tier: searches
         scan int8 codes and rerank `rerank_factor * k` candidates at
         float32. Both knobs land in IVFConfig (explicit kwargs override a
@@ -123,7 +126,11 @@ class MicroNN:
         SQLite and is paged on demand into a budget-bounded frame pool
         (storage/pager.PartitionCache), with the rerank gathering f32
         rows straight from disk. Resident memory is then O(budget +
-        centroids + delta) instead of O(collection)."""
+        centroids + delta) instead of O(collection).
+
+        `max_rows_per_step` bounds the incremental maintenance
+        scheduler's work quantum: one `maintain_step()` (or one step of
+        `maintain(until_idle=True)`) touches at most this many rows."""
         self.store = VectorStore(path, dim=dim, n_attr=n_attr)
         cfg = config or IVFConfig(dim=dim)
         if quantize is not None:
@@ -138,6 +145,8 @@ class MicroNN:
         self.index = None   # IVFIndex (resident) or PagedIndex (paged)
         self.optimizer: Optional[HybridOptimizer] = None
         self.maintenance_log = []
+        self.scheduler = MaintenanceScheduler(
+            self, max_rows_per_step=max_rows_per_step)
 
     @property
     def paged(self) -> bool:
@@ -221,6 +230,7 @@ class MicroNN:
             base_mean_size=jnp.asarray(max(counts.mean(), 1.0), jnp.float32),
             codes=None if cod is None else jnp.asarray(cod),
             qstats=qstats,
+            drift=jnp.zeros((len(cents),), jnp.float32),
             config=self.config)
         self.index = idx
         # replay delta rows (partition -1); upsert re-encodes them into
@@ -400,9 +410,27 @@ class MicroNN:
                     jnp.asarray(attrs[s:e]))
 
     # -- maintenance ----------------------------------------------------------
-    def maintain(self, force: Optional[str] = None) -> Optional[str]:
+    def maintain(self, force: Optional[str] = None,
+                 until_idle: bool = False,
+                 max_steps: Optional[int] = None):
+        """Run maintenance.
+
+        `maintain(until_idle=True)` is the steady-state path (PR 5): the
+        budgeted scheduler drains the monitor's work queue -- partial
+        delta flushes, 2-means splits of oversized partitions, merges of
+        underfull siblings, local reclustering of drifted neighbourhoods
+        -- in `max_rows_per_step` quanta, never a full rebuild. Returns
+        the list of StepReports executed.
+
+        `maintain(force="flush"|"rebuild")` and the legacy no-arg form
+        (single monitor verdict) are kept for whole-index maintenance;
+        `full_rebuild` remains the escape hatch, not the steady state.
+        """
         if self.index is None:
-            return None
+            return [] if until_idle else None
+        if until_idle:
+            assert force is None, "until_idle excludes force"
+            return self.scheduler.drain(max_steps=max_steps)
         if self.paged:
             return self._maintain_paged(force)
         health = self.monitor.check(self.index)
@@ -427,6 +455,234 @@ class MicroNN:
             self._refresh_stats()
             return "rebuild"
         return None
+
+    def maintain_step(self) -> Optional[StepReport]:
+        """One bounded maintenance quantum (<= max_rows_per_step rows):
+        pops the highest-priority item off the monitor's work queue and
+        executes it. Queries issued between steps see a consistent mixed
+        old/new partition state. Returns None when the index is idle."""
+        if self.index is None:
+            return None
+        return self.scheduler.step()
+
+    def _execute_work_item(self, item: WorkItem,
+                           max_rows: int) -> Optional[StepReport]:
+        """Scheduler callback: run one work item. Returns None when the
+        item plans to a no-op (the scheduler then skips it)."""
+        if item.action == "flush":
+            return self._flush_step(max_rows)
+        if item.action == "repack":
+            # device-only tombstone repack: zero durable I/O by contract
+            assert not self.paged, "paged frames carry no tombstones"
+            self.index = maintenance.repack_partition(
+                self.index, item.pids[0])
+            return StepReport("repack", item.pids, item.rows, 0)
+        idx = self.index
+        cents = np.asarray(idx.centroids)
+        csz = np.asarray(idx.csizes)
+        counts = np.asarray(idx.counts)
+        fetch = self._fetch_rows_paged if self.paged \
+            else self._fetch_rows_resident
+        n_local = self.monitor.cfg.repair_neighbors
+        if item.action == "split":
+            plan = maintenance.plan_split(
+                cents, csz, counts, item.pids[0], fetch,
+                row_budget=max_rows,
+                n_local=self.monitor.cfg.split_neighbors)
+        elif item.action == "merge":
+            plan = maintenance.plan_merge(
+                cents, csz, counts, item.pids[0], item.pids[1], fetch)
+        else:
+            assert item.action == "recluster", item.action
+            plan = maintenance.plan_local_recluster(
+                cents, csz, counts, item.pids[0], fetch,
+                row_budget=max_rows, n_local=n_local)
+        if plan is None:
+            return None
+        return self._apply_repair(plan)
+
+    def _flush_step(self, max_rows: int) -> StepReport:
+        """A (possibly partial) delta flush as one scheduler quantum.
+
+        Unlike the legacy device-only resident flush, the scheduler's
+        flush also moves the rows *durably* (exactly what the paged flush
+        does): later repairs then never pay "promotion" writes for rows
+        still parked in the pending -1 partition, repair write I/O is
+        pure reassignment cost, and the resident and paged engines leave
+        identical durable states behind every step."""
+        if self.paged:
+            stats = self._paged_flush(max_rows=max_rows)
+            if stats is None:
+                stats = maintenance.MaintenanceStats(
+                    "incremental", 0, 0, 0, self.index.cache.p_max,
+                    self.index.cache.p_max)
+            return StepReport("flush", (), stats.rows_moved,
+                              stats.bytes_written)
+        idx = self.index
+        d = idx.delta
+        live = np.nonzero(np.asarray(d.valid))[0]
+        if max_rows is not None and live.size > max_rows:
+            live = live[:max_rows]
+        dids = np.asarray(d.ids)[live]
+        dx = np.asarray(d.vectors)[live]      # metric-normalised
+        dcod = np.asarray(d.codes)[live] if d.codes is not None else None
+        assign = maintenance.assign_nearest_centroid(dx, idx.centroids) \
+            if live.size else np.zeros((0,), np.int64)
+        self.index, stats = maintenance.flush_delta(
+            self.index, max_rows=max_rows, assign=assign)
+        self.maintenance_log.append(stats)
+        with self.store.transaction():        # one atomic durable flush
+            if live.size and dcod is not None:
+                # codes first (crash contract: byte-stable either way)
+                self.store.set_code_tier(
+                    dids, dcod,
+                    *quantize.stats_to_arrays(self.index.qstats))
+            # row moves + TOUCHED centroid rewrites only -- durable I/O
+            # matches the stats accounting (never O(k) per quantum)
+            touched = np.unique(assign)
+            self.store.apply_repair(
+                dids, assign, touched,
+                np.asarray(self.index.centroids)[touched],
+                np.asarray(self.index.csizes)[touched])
+        return StepReport("flush", (), stats.rows_moved,
+                          stats.bytes_written)
+
+    # -- local repair (split / merge / recluster) -----------------------------
+    def _fetch_rows_resident(self, pids):
+        """RowFetch over the packed device layout (rows sorted by id, the
+        same order SQLite's clustered scan yields -- bit-parity with the
+        paged planner)."""
+        idx = self.index
+        vid = np.asarray(idx.ids)
+        val = np.asarray(idx.valid)
+        vec = np.asarray(idx.vectors)
+        vat = np.asarray(idx.attrs)
+        cod = np.asarray(idx.codes) if idx.codes is not None else None
+        out = {}
+        for p in pids:
+            sel = np.nonzero(val[p])[0]
+            ids = vid[p][sel]
+            order = np.argsort(ids, kind="stable")
+            out[int(p)] = maintenance.RowBlock(
+                ids=ids[order].astype(np.int32),
+                vecs=vec[p][sel][order],
+                attrs=vat[p][sel][order],
+                codes=None if cod is None else cod[p][sel][order])
+        return out
+
+    def _fetch_rows_paged(self, pids):
+        """RowFetch streaming the neighbourhood from SQLite in ONE
+        batched read (VectorStore.scan_partitions); rows arrive sorted by
+        asset id and are metric-normalised exactly like the pager's fault
+        path, so the paged planner sees the same bytes the resident
+        planner reads from the packed layout."""
+        idx = self.index
+        counts = np.asarray(idx.counts)
+        pids = [int(p) for p in pids]
+        p_max = int(max(max(counts[p] for p in pids), 1))
+        blocks = self.store.scan_partitions(pids, p_max, with_vecs=True)
+        vecs = np.asarray(normalize_if_cosine(
+            jnp.asarray(blocks.vecs, jnp.float32), self.config.metric))
+        out = {}
+        for j, p in enumerate(pids):
+            m = int(blocks.valid[j].sum())
+            out[p] = maintenance.RowBlock(
+                ids=blocks.ids[j, :m].astype(np.int32),
+                vecs=vecs[j, :m])
+        return out
+
+    def _apply_repair(self, plan) -> StepReport:
+        """Persist + apply one RepairPlan. Durability ordering (the crash
+        contract pinned by tests/test_maintenance.py): (1) quantized
+        codes for the touched rows land first -- byte-stable re-encode
+        under the *existing* quantizer, so they are valid under either
+        clustering state; (2) the row moves + touched-centroid rewrites
+        commit as ONE transaction (VectorStore.apply_repair); a crash
+        between the two serves the pre-repair clustering bit-identically.
+        Only then does device/paged state update."""
+        idx = self.index
+        quantized = idx.quantized if self.paged else idx.codes is not None
+        qstats = idx.qstats
+        code_bytes = 0
+        if quantized and plan.rows:
+            _, found = self.store.codes_for(plan.row_ids)
+            if not found.all():
+                missing = ~found
+                enc = quantize.encode_np(qstats, plan.row_vecs[missing])
+                self.store.set_code_tier(
+                    plan.row_ids[missing], enc,
+                    *quantize.stats_to_arrays(qstats))
+                code_bytes = int(missing.sum()) * self.store.dim
+        # -- atomic repair transaction: only durably-moved rows get
+        # UPDATEs, only touched partitions get centroid rewrites ---------
+        old_pid = self.store.partitions_for(plan.row_ids)
+        movedm = old_pid != plan.assign
+        k = idx.k
+        cents = np.array(idx.centroids)
+        csz = np.array(idx.csizes, np.float32)
+        if plan.k_after > k:
+            cents = np.pad(cents, [(0, plan.k_after - k), (0, 0)])
+            csz = np.pad(csz, (0, plan.k_after - k))
+        cents[plan.pids] = plan.centroids
+        csz[plan.pids] = plan.csizes
+        self.store.apply_repair(
+            plan.row_ids[movedm], plan.assign[movedm], plan.pids,
+            plan.centroids, plan.csizes)
+        # -- device / paged state ----------------------------------------
+        # write accounting counts the durably-moved rows (can exceed the
+        # plan's device moves: rows promoted out of the pending -1
+        # partition) plus the touched centroids' rewrite -- I/O scales
+        # with the repair neighbourhood, never the collection. A moved
+        # row does NOT rewrite its code (the codes table is keyed by
+        # asset id and codes are byte-stable under the existing
+        # quantizer) -- only backfilled codes count; a full rebuild, by
+        # contrast, retrains and rewrites every code.
+        n_attr = self.store.n_attr
+        row_b = 4 * self.store.dim + 4 + 4 * n_attr + 1
+        bytes_written = int(movedm.sum()) * row_b \
+            + len(plan.pids) * self.store.dim * 4 + code_bytes
+        p_max_before = idx.p_max
+        if self.paged:
+            self._apply_repair_paged(plan, cents, csz)
+        else:
+            self.index = maintenance.apply_plan(self.index, plan)
+        stats = maintenance.MaintenanceStats(
+            kind=plan.kind, rows_moved=int(movedm.sum()),
+            partitions_touched=len(plan.pids),
+            bytes_written=bytes_written,
+            p_max_before=p_max_before, p_max_after=self.index.p_max)
+        self.maintenance_log.append(stats)
+        return StepReport(plan.kind, tuple(int(p) for p in plan.pids),
+                          plan.rows, bytes_written)
+
+    def _apply_repair_paged(self, plan, cents: np.ndarray,
+                            csz: np.ndarray):
+        """Paged-mode apply: the durable tier is the scan tier, so the
+        repair is already applied -- update resident metadata (centroids,
+        counts, drift), invalidate exactly the touched frames, and grow
+        the frame geometry if a merge outgrew p_max."""
+        idx = self.index
+        k = idx.k
+        counts = np.array(idx.counts)
+        drift = np.array(idx.drift, np.float32) if idx.drift is not None \
+            else np.zeros((k,), np.float32)
+        if plan.k_after > k:
+            counts = np.pad(counts, (0, plan.k_after - k))
+            drift = np.pad(drift, (0, plan.k_after - k))
+        sizes = np.asarray([(plan.assign == p).sum() for p in plan.pids])
+        counts[plan.pids] = sizes
+        drift[plan.pids] = 0.0
+        idx.centroids = jnp.asarray(cents)
+        idx.csizes = jnp.asarray(csz, jnp.float32)
+        idx.counts = counts
+        idx.drift = drift
+        cache = idx.cache
+        cache.invalidate([int(p) for p in plan.pids])
+        pad = effective_pad_to(self.config)
+        new_p_max = int(max(sizes.max() if sizes.size else 1, 1))
+        new_p_max = max(cache.p_max, -(-new_p_max // pad) * pad)
+        if new_p_max > cache.p_max:
+            cache.resize(new_p_max)
 
     # -- queries --------------------------------------------------------------
     def query(self, queries: np.ndarray,
@@ -599,7 +855,9 @@ class MicroNN:
                                    quantized=payload == "int8"),
             cache=cache,
             base_mean_size=float(nonempty.mean()) if nonempty.size else 1.0,
-            qstats=qstats, config=cfg)
+            qstats=qstats,
+            drift=np.zeros((len(cents),), np.float32),
+            config=cfg)
         self.optimizer = None
 
     def _recover_paged(self):
@@ -645,31 +903,45 @@ class MicroNN:
             # full re-cluster straight from the durable tier (pending rows
             # included); _attach_paged re-sizes the pool and drops every
             # frame, which IS the rebuild's cache invalidation
+            n_rows = self.store.count()
             self._build_paged()
+            row_b = 4 * self.store.dim + 4 + 4 * self.store.n_attr + 1 \
+                + (self.store.dim if self.config.quantize == "int8" else 0)
             self.maintenance_log.append(maintenance.MaintenanceStats(
-                kind="full", rows_moved=self.store.count(),
+                kind="full", rows_moved=n_rows,
                 partitions_touched=self.index.k,
-                bytes_written=0, p_max_before=idx.cache.p_max,
+                # a paged rebuild rewrites every row's partition id, its
+                # codes, and the centroid generation -- same flash-wear
+                # accounting as the resident full_rebuild
+                bytes_written=n_rows * row_b
+                + self.index.k * self.store.dim * 4,
+                p_max_before=idx.cache.p_max,
                 p_max_after=self.index.cache.p_max))
             return "rebuild"
         return None
 
-    def _paged_flush(self):
+    def _paged_flush(self, max_rows: Optional[int] = None):
         """Incremental paged flush: move live delta rows into their nearest
         partitions *durably* (the clustered SQLite table is the scan tier
         here, so unlike resident flush the partition ids must move on
         disk), write their codes, update centroids by the running-mean
-        rule, and invalidate the touched partitions' frames."""
+        rule, and invalidate the touched partitions' frames. `max_rows`
+        bounds the work quantum: the rest stays searchable in the delta.
+        Returns the MaintenanceStats of the flush (None if no live rows)."""
         idx = self.index
         d = idx.delta
         quantized = idx.quantized
         live = np.nonzero(np.asarray(d.valid))[0]
+        deferred = np.zeros((0,), np.int64)
+        if max_rows is not None and live.size > max_rows:
+            live, deferred = live[:max_rows], live[max_rows:]
         p_before = idx.cache.p_max
+        stats = None
         if live.size:
             dx = np.asarray(d.vectors)[live]          # metric-normalised
             dids = np.asarray(d.ids)[live]
             assign = maintenance.assign_nearest_centroid(dx, idx.centroids)
-            self.store.move_to_partition(dids, assign)
+            touched = np.unique(assign)
             if quantized:
                 # move the insert-time codes verbatim (same contract as
                 # resident flush_delta); re-encode only as a fallback
@@ -677,30 +949,39 @@ class MicroNN:
                         else quantize.encode_np(idx.qstats, dx))
                 self.store.set_code_tier(
                     dids, dcod, *quantize.stats_to_arrays(idx.qstats))
-            touched = np.unique(assign)
             idx.cache.invalidate(touched)
             idx.counts = idx.counts + np.bincount(assign, minlength=idx.k)
             cent = np.array(idx.centroids)
             csz = np.array(idx.csizes)
-            maintenance.running_mean_update(cent, csz, dx, assign, touched)
+            if idx.drift is None:
+                idx.drift = np.zeros((idx.k,), np.float32)
+            maintenance.running_mean_update(cent, csz, dx, assign, touched,
+                                            drift=idx.drift)
             idx.centroids = jnp.asarray(cent)
             idx.csizes = jnp.asarray(csz)
-            self.store.update_centroids(cent, csz)
+            # row moves + TOUCHED centroid rewrites in one transaction --
+            # durable I/O matches the stats accounting (never O(k))
+            self.store.apply_repair(dids, assign, touched,
+                                    cent[touched], csz[touched])
             pad = effective_pad_to(self.config)
             new_p_max = int(idx.counts.max())
             new_p_max = max(idx.cache.p_max, -(-new_p_max // pad) * pad)
             if new_p_max > idx.cache.p_max:   # a partition outgrew a frame
                 idx.cache.resize(new_p_max)
-            self.maintenance_log.append(maintenance.MaintenanceStats(
+            stats = maintenance.MaintenanceStats(
                 kind="incremental", rows_moved=int(live.size),
                 partitions_touched=int(len(touched)),
                 bytes_written=int(live.size
                                   * (4 * idx.dim + 4 + 4 * idx.n_attr + 1
                                      + (idx.dim if quantized else 0))
                                   + len(touched) * idx.dim * 4),
-                p_max_before=p_before, p_max_after=idx.cache.p_max))
-        idx.delta = DeltaStore.empty(d.capacity, self.store.dim, idx.n_attr,
-                                     quantized=quantized)
+                p_max_before=p_before, p_max_after=idx.cache.p_max)
+            self.maintenance_log.append(stats)
+        # partial flush: deferred live rows compact to the front of a
+        # fresh delta (the same compaction the resident path uses)
+        idx.delta = maintenance.compact_delta(d, deferred, idx.n_attr,
+                                              quantized, idx.qstats)
+        return stats
 
     # -- helpers --------------------------------------------------------------
     def _refresh_stats(self):

@@ -41,20 +41,60 @@ makes each partition a sequential range read) and scattered into the
 pool in one batched device write.
 
 Invalidation contract: any write that changes a partition's durable rows
-(delta flush into it, upsert/delete of one of its rows, a rebuild) must
-call invalidate(pids) / invalidate_all(); the next fault re-reads the
-partition from SQLite. Counters (hits / misses / evictions) are
-cumulative and surface through MicroNN.stats().
+(delta flush into it, a split/merge moving rows, upsert/delete of one of
+its rows, a rebuild) must call invalidate(pids) / invalidate_all(); the
+next fault re-reads the partition from SQLite. Invalidating a partition
+whose frame is pinned by an in-flight scan defers the release to the
+last unpin -- the scan keeps its (pre-invalidation snapshot) frame, and
+the mapping is dropped immediately so the next fault refetches. Counters
+(hits / misses / evictions) are cumulative and surface through
+MicroNN.stats().
+
+Thread safety: every public method takes the cache's RLock, so the
+background maintenance scheduler (storage/scheduler.py) and query
+threads may interleave fault/invalidate/unpin safely (closing the PR 3
+"single-writer/single-reader" restriction). Scans themselves run outside
+the lock: pinned frames cannot be evicted, and the pool arrays are
+functionally rebound -- a scan always reads a consistent snapshot.
+
+Fault scatter: when no *other* scan holds pins, the batched fault
+scatters fetched frames into the pool through a jitted donated update
+(`donate_argnums`) -- XLA aliases the output to the input buffer and
+updates the touched frames in place, so a fault never allocates a second
+pool-sized buffer (asserted by tests/test_pager.py via the compiled
+memory analysis). With foreign pins outstanding the fault falls back to
+a copying scatter: donation would invalidate the buffer a concurrent
+scan may still be reading.
 """
 from __future__ import annotations
 
+import threading
+from functools import partial
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import quantize
 from ..core.types import INVALID_ID, normalize_if_cosine
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _scatter_frames(payload_pool, ids_pool, valid_pool, fidx, payload,
+                    ids, valid):
+    """Donated in-place scatter of freshly fetched frames into the pool:
+    the three pool buffers are aliased input->output, so the update costs
+    O(fetched frames) writes, not a pool-sized copy."""
+    return (payload_pool.at[fidx].set(payload),
+            ids_pool.at[fidx].set(ids),
+            valid_pool.at[fidx].set(valid))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_one(pool, fidx, block):
+    """Donated single-pool scatter (the optional attrs pool)."""
+    return pool.at[fidx].set(block)
 
 
 class PartitionCache:
@@ -75,6 +115,9 @@ class PartitionCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # guards every public method: the maintenance scheduler and query
+        # threads may interleave fault/evict/invalidate (PR 5)
+        self._lock = threading.RLock()
         self._alloc(p_max)
 
     # -- pool allocation ----------------------------------------------------
@@ -117,6 +160,8 @@ class PartitionCache:
         self._pid_frame: dict = {}
         self._ref = np.zeros(self.capacity, bool)
         self._pins = np.zeros(self.capacity, np.int64)
+        # invalidated-while-pinned frames: freed at the last unpin
+        self._stale = np.zeros(self.capacity, bool)
         self._hand = 0
         # scan-resistant admission: ring of frames owned by non-admitted
         # (one-off stream) faults; scan_frames bounds how much of the
@@ -128,10 +173,24 @@ class PartitionCache:
 
     def resize(self, p_max: int):
         """Reallocate the pool for a larger partition size (after a flush
-        grows some partition past p_max). Drops every frame -- the caller
-        already invalidated the moved partitions -- but keeps the
-        cumulative counters and the byte budget."""
-        self._alloc(p_max)
+        or merge grows some partition past p_max). Drops every frame --
+        the caller already invalidated the moved partitions -- but keeps
+        the cumulative counters and the byte budget. Waits for in-flight
+        scans to unpin first: _alloc rebuilds the pin table (and may
+        shrink the frame count), so reallocating under a live pin would
+        corrupt a concurrent scan's unpin bookkeeping."""
+        import time
+        deadline = time.monotonic() + 30.0
+        while True:
+            with self._lock:
+                if not self._pins.any():
+                    self._alloc(p_max)
+                    return
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    "resize timed out waiting for pinned frames -- a scan "
+                    "leaked a pin (missing unpin())")
+            time.sleep(0.001)
 
     # -- budget accounting ---------------------------------------------------
     @property
@@ -142,13 +201,14 @@ class PartitionCache:
         return int(sum(p.nbytes for p in pools))
 
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions,
-                "resident_bytes": self.resident_bytes,
-                "budget_bytes": self.budget_bytes,
-                "capacity_frames": self.capacity,
-                "frame_bytes": self.frame_bytes,
-                "resident_partitions": len(self._pid_frame)}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "resident_bytes": self.resident_bytes,
+                    "budget_bytes": self.budget_bytes,
+                    "capacity_frames": self.capacity,
+                    "frame_bytes": self.frame_bytes,
+                    "resident_partitions": len(self._pid_frame)}
 
     # -- clock eviction ------------------------------------------------------
     def _release_ring(self, f: int):
@@ -215,6 +275,13 @@ class PartitionCache:
         land in the reusable scan ring instead of the admitted set, and
         hits do not touch reference bits -- so the stream cannot evict or
         artificially refresh the hot working set."""
+        with self._lock:
+            return self._fault_locked(pids, admit)
+
+    def _fault_locked(self, pids: Sequence[int], admit: bool) -> np.ndarray:
+        # pins held by OTHER in-flight scans at entry decide whether the
+        # scatter may donate the pool buffers (see module docstring)
+        foreign_pins = int(self._pins.sum())
         want = [int(p) for p in pids]
         if len(want) > self.capacity:
             raise ValueError(
@@ -277,14 +344,27 @@ class PartitionCache:
                 payload = normalize_if_cosine(
                     jnp.asarray(blocks.vecs, jnp.float32), self.metric)
             fidx = jnp.asarray(np.asarray(new_frames, np.int32))
-            self.payload_pool = self.payload_pool.at[fidx].set(payload)
-            self.ids_pool = self.ids_pool.at[fidx].set(
-                jnp.asarray(blocks.ids))
-            self.valid_pool = self.valid_pool.at[fidx].set(
-                jnp.asarray(blocks.valid))
-            if self.attrs_pool is not None:
-                self.attrs_pool = self.attrs_pool.at[fidx].set(
-                    jnp.asarray(blocks.attrs))
+            bids = jnp.asarray(blocks.ids)
+            bval = jnp.asarray(blocks.valid)
+            if foreign_pins == 0:
+                # no concurrent scan can be reading the old pool objects:
+                # donate them -- the scatter updates the buffers in place
+                # instead of writing a second pool-sized copy
+                self.payload_pool, self.ids_pool, self.valid_pool = \
+                    _scatter_frames(self.payload_pool, self.ids_pool,
+                                    self.valid_pool, fidx, payload,
+                                    bids, bval)
+                if self.attrs_pool is not None:
+                    self.attrs_pool = _scatter_one(
+                        self.attrs_pool, fidx, jnp.asarray(blocks.attrs))
+            else:
+                # a scan may still hold the old arrays: copy-on-write
+                self.payload_pool = self.payload_pool.at[fidx].set(payload)
+                self.ids_pool = self.ids_pool.at[fidx].set(bids)
+                self.valid_pool = self.valid_pool.at[fidx].set(bval)
+                if self.attrs_pool is not None:
+                    self.attrs_pool = self.attrs_pool.at[fidx].set(
+                        jnp.asarray(blocks.attrs))
         except BaseException:
             # roll back the provisional registrations: the frames never
             # received data, so a later fault must not count them as hits
@@ -300,22 +380,36 @@ class PartitionCache:
             raise
         return frames
 
+    def _free_frame(self, f: int):
+        self._frame_pid[f] = -1
+        self._ref[f] = False
+        self._stale[f] = False
+
     def unpin(self, frames: np.ndarray):
-        for f in np.asarray(frames, np.int64):
-            assert self._pins[f] > 0, f"frame {f} not pinned"
-            self._pins[f] -= 1
+        with self._lock:
+            for f in np.asarray(frames, np.int64):
+                assert self._pins[f] > 0, f"frame {f} not pinned"
+                self._pins[f] -= 1
+                if self._pins[f] == 0 and self._stale[f]:
+                    # invalidated while this scan was reading it: the
+                    # deferred release happens at the last unpin
+                    self._free_frame(f)
 
     def invalidate(self, pids: Sequence[int]):
         """Drop the listed partitions' frames (durable rows changed); the
-        next fault re-reads them from SQLite."""
-        for p in pids:
-            f = self._pid_frame.pop(int(p), None)
-            if f is None:
-                continue
-            assert self._pins[f] == 0, \
-                f"invalidating pinned frame {f} (partition {p})"
-            self._frame_pid[f] = -1
-            self._ref[f] = False
+        next fault re-reads them from SQLite. A frame pinned by an
+        in-flight scan is released lazily at its last unpin -- the scan
+        keeps its pre-invalidation snapshot, the mapping is gone at once."""
+        with self._lock:
+            for p in pids:
+                f = self._pid_frame.pop(int(p), None)
+                if f is None:
+                    continue
+                if self._pins[f] > 0:
+                    self._stale[f] = True
+                    continue
+                self._free_frame(f)
 
     def invalidate_all(self):
-        self.invalidate(list(self._pid_frame))
+        with self._lock:
+            self.invalidate(list(self._pid_frame))

@@ -1,0 +1,104 @@
+"""Budgeted background maintenance scheduler (the paper's §3.6 made
+incremental): drains the monitor's prioritized work queue in bounded work
+quanta so no query or upsert ever pays for a rebuild.
+
+Contract:
+
+  * `step()` executes AT MOST ONE work item and touches at most
+    `max_rows_per_step` rows -- the on-device interruptibility story: a
+    foreground app can interleave queries between steps, and a step's
+    wall time is bounded by its row quantum, not the collection size.
+    Flush items are divisible (a partial flush moves the first
+    `max_rows_per_step` live delta rows and leaves the rest searchable
+    in the delta); split/merge/recluster items bound themselves at plan
+    time (maintenance.neighborhood admits neighbour partitions only
+    while the quantum has room). Items whose seed partition alone
+    exceeds the quantum are deferred -- raise `max_rows_per_step` above
+    the largest partition (>= split_threshold * target size; the default
+    leaves generous headroom) to guarantee progress.
+  * The queue is re-polled from the monitor before every step, so each
+    step sees the post-previous-step state -- items never go stale.
+  * Items that plan to a no-op (degenerate split, emptied partitions)
+    are remembered and skipped until the index state changes them.
+
+Durability ordering per step (both engine modes): quantized codes for
+the touched rows persist first (byte-stable re-encode under the existing
+quantizer), then the row moves + touched-centroid rewrites commit as ONE
+SQLite transaction (VectorStore.apply_repair) -- a crash between the two
+leaves the pre-repair clustering fully servable (codes are keyed by
+asset id and identical under either state), which
+tests/test_maintenance.py pins. Repair write I/O therefore scales with
+the touched neighbourhood; the full generation swap remains the rebuild
+path's mechanism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StepReport:
+    """What one scheduler step did (surfaced by MicroNN.maintain_step)."""
+
+    action: str               # "flush" | "split" | "merge" | "recluster"
+    pids: Tuple[int, ...]     # partitions the step touched
+    rows: int                 # rows the step processed (<= quantum)
+    bytes_written: int        # durable write I/O of the step
+
+
+class MaintenanceScheduler:
+    """Drains `IndexMonitor.work_queue` against a MicroNN engine, one
+    bounded quantum at a time. Owned by the engine (`engine.scheduler`);
+    `MicroNN.maintain_step()` / `maintain(until_idle=True)` are the
+    public entry points."""
+
+    def __init__(self, engine, max_rows_per_step: int = 4096):
+        assert max_rows_per_step >= 1, max_rows_per_step
+        self.engine = engine
+        self.max_rows_per_step = int(max_rows_per_step)
+        # (action, pids, rows) triples that planned to a no-op within the
+        # current run of fruitless polls; cleared whenever any step makes
+        # progress, so changed row contents (or a remapped clustering
+        # after rebuild/recover) can never be masked by a stale key
+        self._skip: set = set()
+
+    def pending(self) -> List:
+        """The monitor's current prioritized queue (fresh every call)."""
+        if self.engine.index is None:
+            return []
+        return self.engine.monitor.work_queue(self.engine.index)
+
+    def step(self) -> Optional[StepReport]:
+        """Execute the highest-priority actionable work item; None when
+        the queue is idle (or nothing actionable fits the quantum)."""
+        budget = self.max_rows_per_step
+        for item in self.pending():
+            key = (item.action, item.pids, item.rows)
+            if key in self._skip:
+                continue
+            if item.action != "flush" and item.rows > budget:
+                # indivisible neighbourhood larger than the quantum:
+                # defer (see module contract)
+                self._skip.add(key)
+                continue
+            report = self.engine._execute_work_item(item, budget)
+            if report is None:
+                self._skip.add(key)
+                continue
+            self._skip.clear()      # progress: stale no-op keys expire
+            return report
+        return None
+
+    def drain(self, max_steps: Optional[int] = None) -> List[StepReport]:
+        """Run steps until the queue is idle (maintain(until_idle=True)).
+        `max_steps` is a runaway guard; the default scales with k."""
+        out: List[StepReport] = []
+        k = getattr(self.engine.index, "k", 1) if self.engine.index else 1
+        limit = max_steps if max_steps is not None else 64 + 8 * k
+        for _ in range(limit):
+            r = self.step()
+            if r is None:
+                break
+            out.append(r)
+        return out

@@ -59,8 +59,13 @@ class VectorStore:
         # transaction() below, which NESTS -- a write session wraps many
         # store calls in one outer BEGIN...COMMIT (paper §3.6's batched
         # single-writer commit), while standalone calls still get their
-        # own transaction.
-        self.db = sqlite3.connect(path, isolation_level=None)
+        # own transaction. check_same_thread=False lets the background
+        # maintenance scheduler and the pager's locked fault path use the
+        # connection from worker threads; callers must serialise access
+        # (PartitionCache holds an RLock around every store call, and the
+        # engine's write path is single-writer by contract).
+        self.db = sqlite3.connect(path, isolation_level=None,
+                                  check_same_thread=False)
         self.db.execute("PRAGMA journal_mode=WAL")
         self.db.execute("PRAGMA synchronous=NORMAL")
         self._txn_depth = 0
@@ -301,19 +306,42 @@ class VectorStore:
 
     def move_to_partition(self, asset_ids: Sequence[int],
                           partition_ids: Sequence[int]):
-        """Incremental maintenance: move delta rows into IVF partitions."""
+        """Incremental maintenance: move rows between partitions (delta
+        flush, split/merge row reassignment). A keyed UPDATE against the
+        clustered (partition_id, asset_id) primary key re-inserts each row
+        at its new key -- one executemany instead of a SELECT/DELETE/
+        INSERT round-trip per row; absent asset ids are no-ops."""
         with self.transaction():
-            rows = [(int(p), int(a)) for a, p in zip(asset_ids, partition_ids)]
-            for p, a in rows:
-                vec = self.db.execute(
-                    "SELECT vec FROM vectors WHERE asset_id=?", (a,)
-                ).fetchone()
-                if vec is None:
-                    continue
-                self.db.execute("DELETE FROM vectors WHERE asset_id=?", (a,))
-                self.db.execute(
-                    "INSERT INTO vectors(partition_id, asset_id, vec)"
-                    " VALUES (?, ?, ?)", (p, a, vec[0]))
+            self.db.executemany(
+                "UPDATE vectors SET partition_id=? WHERE asset_id=?",
+                [(int(p), int(a))
+                 for a, p in zip(asset_ids, partition_ids)])
+
+    def apply_repair(self, moved_ids: Sequence[int],
+                     moved_pids: Sequence[int],
+                     touched_pids: Sequence[int],
+                     centroids: np.ndarray, csizes: np.ndarray):
+        """Persist one local repair (split/merge/recluster) atomically:
+        the moved rows' keyed partition UPDATEs and the *touched*
+        partitions' centroid rows commit in ONE transaction at the
+        current generation -- a crash serves the pre-repair clustering
+        bit-identically, and write I/O scales with the touched
+        neighbourhood, never the collection (the full generation swap
+        stays the rebuild path's mechanism). `centroids`/`csizes` are
+        the touched partitions' new states, aligned to `touched_pids`
+        (a split's appended slot is simply a new partition_id row)."""
+        gen = self.generation
+        with self.transaction():
+            self.db.executemany(
+                "UPDATE vectors SET partition_id=? WHERE asset_id=?",
+                [(int(p), int(a))
+                 for a, p in zip(moved_ids, moved_pids)])
+            self.db.executemany(
+                "INSERT OR REPLACE INTO centroids"
+                " (generation, partition_id, vec, csize) VALUES (?, ?, ?, ?)",
+                [(gen, int(p),
+                  np.ascontiguousarray(c, np.float32).tobytes(), float(s))
+                 for p, c, s in zip(touched_pids, centroids, csizes)])
 
     def update_centroids(self, centroids: np.ndarray, csizes: np.ndarray):
         gen = self.generation

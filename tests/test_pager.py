@@ -467,6 +467,103 @@ def test_paged_exact_stream_keeps_hot_frames(tmp_path):
                                   np.asarray(r_res.ids))
 
 
+# -- thread safety + deferred invalidation (PR 5 satellites) -----------------
+
+
+def test_invalidate_pinned_frame_defers_release(tmp_path):
+    """Invalidating a partition whose frame a scan still pins must not
+    blow up (the scheduler and queries may interleave): the mapping drops
+    immediately, the frame is freed at the last unpin."""
+    st, _, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 4)
+    f = cache.fault([2])                  # pinned by an in-flight scan
+    cache.invalidate([2])                 # scheduler moves partition 2
+    assert 2 not in cache._pid_frame      # next fault refetches
+    assert cache._stale[int(f[0])]
+    f2 = cache.fault([2])                 # concurrent refetch: new frame
+    assert int(f2[0]) != int(f[0])
+    cache.unpin(f)                        # scan ends -> deferred release
+    assert not cache._stale[int(f[0])]
+    assert cache._frame_pid[int(f[0])] == -1
+    cache.unpin(f2)
+
+
+def test_partition_cache_thread_safe_interleaving(tmp_path):
+    """Satellite: RLock around fault/evict/invalidate -- hammer the cache
+    from several threads (as the background scheduler + query threads
+    would) and assert counters/pins/mappings stay consistent."""
+    import threading
+    st, _, assign = _mk_store(tmp_path, n=400, k=20, seed=3)
+    # pool must seat every thread's worst-case pinned set at once
+    # (3 threads x 3 pins); capacity bounds pins, not thread safety
+    cache = _mk_cache(st, assign, 12)
+    errors = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for i in range(40):
+                pids = rng.choice(20, size=int(rng.integers(1, 4)),
+                                  replace=False)
+                f = cache.fault(list(pids))
+                np.asarray(cache.payload_pool)   # a "scan"
+                cache.unpin(f)
+                if i % 7 == 0:
+                    cache.invalidate([int(rng.integers(0, 20))])
+        except Exception as e:               # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert (cache._pins == 0).all()
+    assert cache.resident_bytes <= cache.budget_bytes
+    # frame table and pid map are exact inverses
+    for p, f in cache._pid_frame.items():
+        assert cache._frame_pid[f] == p
+    assert (cache.hits + cache.misses) >= 3 * 40
+
+
+def test_fault_scatter_donates_pool_no_extra_allocation(tmp_path):
+    """Satellite: the batched fault scatters through a donated jit -- the
+    old pool buffers are consumed (updated in place), and the compiled
+    scatter aliases its outputs to its inputs instead of allocating a
+    second pool-sized buffer."""
+    import jax
+    from repro.storage import pager as pager_mod
+    st, _, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 4)
+    old_payload, old_ids = cache.payload_pool, cache.ids_pool
+    cache.unpin(cache.fault([0, 1]))
+    # donation consumed the old buffers (no copy of the pool exists)
+    assert old_payload.is_deleted() and old_ids.is_deleted()
+    # compiled memory analysis: outputs alias the donated pools; temp
+    # scratch stays far below one pool payload
+    m = len([2])
+    args = (cache.payload_pool, cache.ids_pool, cache.valid_pool,
+            jnp.zeros((m,), jnp.int32),
+            jnp.zeros((m, cache.p_max, st.dim), cache.payload_pool.dtype),
+            jnp.zeros((m, cache.p_max), jnp.int32),
+            jnp.zeros((m, cache.p_max), bool))
+    mem = pager_mod._scatter_frames.lower(*args).compile() \
+        .memory_analysis()
+    pool_bytes = int(cache.payload_pool.nbytes + cache.ids_pool.nbytes
+                     + cache.valid_pool.nbytes)
+    assert mem.alias_size_in_bytes >= pool_bytes
+    assert mem.temp_size_in_bytes < cache.payload_pool.nbytes
+    # with foreign pins outstanding the fault must NOT donate (a
+    # concurrent scan may still read the old arrays)
+    pinned = cache.fault([3])
+    held = cache.payload_pool
+    cache.unpin(cache.fault([4, 5]))       # other partitions, pins held
+    assert not held.is_deleted()
+    np.asarray(held)                       # old snapshot still readable
+    cache.unpin(pinned)
+
+
 # -- dtype-aware tile padding (satellite) ------------------------------------
 
 
