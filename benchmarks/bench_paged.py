@@ -34,10 +34,11 @@ from repro.core.query import Q
 from repro.core.types import IVFConfig
 from repro.storage import MicroNN
 
-from .common import _recall, emit, timeit
+from .common import _recall, emit, timeit, write_json
 
 
 def main(smoke: bool = False):
+    metrics, gates = {}, {}
     rng = np.random.default_rng(0)
     if smoke:
         n, d, n_centers = 4000, 32, 16
@@ -101,6 +102,8 @@ def main(smoke: bool = False):
                  f"frames={s['capacity_frames']};"
                  f"recall_at_{k}={recalls[mb]:.3f};"
                  f"vs_resident={us_res / us:.2f}x")
+            metrics[f"budget{mb}mb_us_per_call"] = us
+            metrics[f"budget{mb}mb_recall_at_{k}"] = recalls[mb]
 
             # Zipfian probe workload: skewed cluster popularity -- the
             # regime where a small pool captures most of the traffic
@@ -137,8 +140,68 @@ def main(smoke: bool = False):
                 f"exact scan flushed the hot set at {mb} MB: " \
                 f"Zipf hit rate {rate1:.3f} -> {rate2:.3f}"
 
+        # -- double-buffered faulting (PR 6): prefetch chunk N+1's SQLite
+        # fetch + frame copy while chunk N scans. The exact scan with the
+        # smallest budget is the faulting-heavy extreme (scan ring <<
+        # partitions, admit=False -> every call re-faults everything), so
+        # it isolates the fault/compute overlap. Results must be
+        # bit-identical with prefetch on/off by construction.
+        pag = MicroNN(dim=d, path=path, config=cfg,
+                      memory_budget_mb=budgets_mb[0])
+        pag.recover()
+        exact_spec = Q.exact(k)
+        qe = q[:4]
+        prefetch_before = executor.PAGED_PREFETCH
+        try:
+            executor.PAGED_PREFETCH = False
+            r_off = pag.query(qe, exact_spec)
+            us_off = timeit(lambda: pag.query(qe, exact_spec),
+                            iters=iters)
+            executor.PAGED_PREFETCH = True
+            r_on = pag.query(qe, exact_spec)
+            us_on = timeit(lambda: pag.query(qe, exact_spec),
+                           iters=iters)
+        finally:
+            executor.PAGED_PREFETCH = prefetch_before
+        bitwise = (np.array_equal(np.asarray(r_on.ids),
+                                  np.asarray(r_off.ids))
+                   and np.array_equal(np.asarray(r_on.scores),
+                                      np.asarray(r_off.scores)))
+        emit("paged_prefetch_off_exact", us_off, "double_buffering=off")
+        emit("paged_prefetch_on_exact", us_on,
+             f"double_buffering=on;speedup={us_off / us_on:.2f}x;"
+             f"bitwise_identical={bitwise}")
+        metrics["prefetch_off_us"] = us_off
+        metrics["prefetch_on_us"] = us_on
+        metrics["prefetch_speedup"] = us_off / us_on
+        gates["prefetch_bitwise_identical"] = (
+            bitwise, "prefetch on/off results bit-identical")
+        # overlap can only buy wall-clock when a second core (or real
+        # disk-I/O wait) runs the fetch while the scan computes; on a
+        # single-core, page-cached container the two serialize and the
+        # honest bound is break-even within scheduler noise. The gate
+        # therefore pins "bit-identical + bounded overhead"; the
+        # faulting-path latency win this PR ships on every machine is
+        # the vectorized scan_partitions packing (see ROADMAP numbers).
+        speed_tol = 1.20 if smoke else (
+            1.0 if (os.cpu_count() or 1) > 1 else 1.10)
+        gates["prefetch_not_slower"] = (
+            us_on <= us_off * speed_tol,
+            f"on={us_on:.0f}us <= {speed_tol:.2f} * off={us_off:.0f}us"
+            f" (cpus={os.cpu_count()})")
+        assert bitwise, "double-buffered faulting changed results"
+
         # regression gate (scripts/ci.sh --smoke): the paged path must keep
         # the paper's recall at every budget
+        gates["recall_at_budgets"] = (
+            all(r >= 0.95 for r in recalls.values()),
+            ";".join(f"{mb}MB={r:.3f}" for mb, r in recalls.items()))
+        write_json("paged", metrics,
+                   config={"n": n, "d": d, "n_q": n_q, "k": k,
+                           "n_probe": n_probe,
+                           "budgets_mb": list(budgets_mb), "smoke": smoke,
+                           "cpu_count": os.cpu_count()},
+                   gates=gates)
         for mb, r in recalls.items():
             assert r >= 0.95, \
                 f"paged recall@{k}={r:.3f} < 0.95 at budget {mb} MB"

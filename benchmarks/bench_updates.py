@@ -29,7 +29,7 @@ from repro.core.types import IVFConfig
 from repro.data import synthetic
 from repro.storage import MicroNN
 
-from .common import emit, _recall
+from .common import emit, _recall, write_json
 
 
 def fig10():
@@ -205,6 +205,30 @@ def churn(smoke: bool = False):
          f"total_legacy_MB={(rebuild+flush_l)/1e6:.2f};"
          f"repair_vs_rebuild={repair/max(rebuild,1):.3f};"
          f"maintain_s_sched={t_sched:.2f};maintain_s_legacy={t_legacy:.2f}")
+
+    # trajectory artifact: measurements + gate outcomes, validated by
+    # scripts/check_bench_json.py in CI (written before the asserts so a
+    # regression leaves a machine-readable record of what regressed)
+    write_json(
+        "updates",
+        {"recall_sched": rec_sched, "recall_legacy": rec_legacy,
+         "recall_oracle": rec_oracle, "repair_bytes": repair,
+         "rebuild_bytes": rebuild, "flush_bytes_sched": flush_s,
+         "flush_bytes_legacy": flush_l, "rows_written": rows_written,
+         "maintain_s_sched": t_sched, "maintain_s_legacy": t_legacy},
+        config={"n0": n0, "d": d, "epochs": epochs, "k": k,
+                "n_probe": n_probe, "smoke": smoke},
+        gates={
+            "recall_vs_oracle": (
+                rec_sched >= 0.95 * rec_oracle,
+                f"{rec_sched:.3f} >= 0.95 * {rec_oracle:.3f}"),
+            "repair_io_vs_rebuild": (
+                repair <= 0.25 * rebuild,
+                f"{repair}B <= 0.25 * {rebuild}B"),
+            "total_io_vs_legacy": (
+                repair + flush_s <= rebuild + flush_l,
+                f"{repair + flush_s}B <= {rebuild + flush_l}B"),
+        })
 
     # acceptance pins (scripts/ci.sh --smoke regression gate)
     assert rec_sched >= 0.95 * rec_oracle, \

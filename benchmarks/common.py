@@ -1,11 +1,25 @@
-"""Benchmark helpers: timing, recall targets, CSV emission.
+"""Benchmark helpers: timing, recall targets, CSV + JSON emission.
 
 Output convention (one line per measurement):
     name,us_per_call,derived
 `derived` carries the figure-specific quantity (recall, MB, ratio, ...).
+
+Besides the CSV rows, every bench can persist a machine-readable
+trajectory artifact via `write_json(name, metrics, config, gates)`:
+a `BENCH_<name>.json` file holding the measured metrics, the bench
+configuration, the git revision, and the pass/fail state of each
+acceptance gate. scripts/ci.sh points BENCH_JSON_DIR at a scratch
+directory, runs the smoke benches, and then validates the artifacts
+(scripts/check_bench_json.py) -- a bench that silently stopped
+measuring, or a gate that regressed past its pinned threshold, fails
+CI on the artifact, not just on a stray assert.
 """
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import subprocess
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -14,11 +28,78 @@ import numpy as np
 
 ROWS: List[str] = []
 
+SCHEMA_VERSION = 1
+
+# artifact names written by this process (run.py uses it to avoid
+# clobbering a bench's own richer artifact with the generic row dump)
+WRITTEN: set = set()
+
+_JSON_DIR: Optional[str] = None
+
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def set_json_dir(path: Optional[str]):
+    """Programmatic override of the artifact directory (run.py
+    --json-dir); the BENCH_JSON_DIR env var is the ambient default."""
+    global _JSON_DIR
+    _JSON_DIR = path
+
+
+def json_dir() -> Optional[str]:
+    return _JSON_DIR or os.environ.get("BENCH_JSON_DIR") or None
+
+
+def _git_rev() -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        return out.stdout.strip() or None
+    except OSError:
+        return None
+
+
+def write_json(name: str, metrics: Dict, config: Optional[Dict] = None,
+               gates: Optional[Dict] = None) -> Optional[str]:
+    """Persist one bench's trajectory artifact as BENCH_<name>.json.
+
+    `gates` maps gate name -> (passed, detail) or a plain bool; the CI
+    validator fails the build if any gate did not pass. No-op (returns
+    None) unless a JSON dir is configured -- standalone bench runs
+    without BENCH_JSON_DIR just print CSV as before."""
+    d = json_dir()
+    if d is None:
+        return None
+    norm = {}
+    for g, v in (gates or {}).items():
+        if isinstance(v, tuple):
+            passed, detail = v
+        else:
+            passed, detail = v, ""
+        norm[g] = {"passed": bool(passed), "detail": str(detail)}
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "name": name,
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+        "git_rev": _git_rev(),
+        "config": config or {},
+        "metrics": metrics,
+        "gates": norm,
+    }
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    WRITTEN.add(name)
+    print(f"wrote {path}", flush=True)
+    return path
 
 
 def timeit(fn: Callable, warmup: int = 2, iters: int = 5) -> float:

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Validate the benchmark trajectory artifacts (BENCH_<name>.json).
+
+scripts/ci.sh points BENCH_JSON_DIR at a scratch directory, runs the
+smoke benches (each persists its measurements + acceptance-gate outcomes
+via benchmarks.common.write_json), then runs this validator:
+
+    python scripts/check_bench_json.py <dir> <name> [<name> ...]
+
+For every requested name the artifact must exist, parse, carry the
+expected schema (schema_version == 1, matching name, timestamp, git_rev,
+config, non-empty numeric metrics, gates), and every recorded gate must
+have passed. A bench that silently stopped measuring, dropped its
+artifact, or regressed past a pinned threshold fails CI here -- on the
+machine-readable record, not just on a stray assert inside the bench.
+
+Exit status: 0 iff every artifact validates and every gate passed.
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import os
+import sys
+
+SCHEMA_VERSION = 1
+REQUIRED_KEYS = ("schema_version", "name", "timestamp", "git_rev",
+                 "config", "metrics", "gates")
+
+
+def check_artifact(path: str, name: str) -> list:
+    """Return a list of human-readable problems (empty == valid)."""
+    probs = []
+    if not os.path.isfile(path):
+        return [f"missing artifact {path}"]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    for key in REQUIRED_KEYS:
+        if key not in doc:
+            probs.append(f"{path}: missing key '{key}'")
+    if probs:
+        return probs
+    if doc["schema_version"] != SCHEMA_VERSION:
+        probs.append(f"{path}: schema_version {doc['schema_version']!r}"
+                     f" != {SCHEMA_VERSION}")
+    if doc["name"] != name:
+        probs.append(f"{path}: name {doc['name']!r} != {name!r}")
+    if not (isinstance(doc["timestamp"], str) and doc["timestamp"]):
+        probs.append(f"{path}: empty/invalid timestamp")
+    if not isinstance(doc["config"], dict):
+        probs.append(f"{path}: config is not an object")
+    metrics = doc["metrics"]
+    if not (isinstance(metrics, dict) and metrics):
+        probs.append(f"{path}: metrics must be a non-empty object")
+    else:
+        for m, v in metrics.items():
+            ok = isinstance(v, numbers.Number) or (
+                isinstance(v, list)
+                and all(isinstance(x, (numbers.Number, dict)) for x in v))
+            if not ok:
+                probs.append(f"{path}: metric {m!r} is not numeric")
+    gates = doc["gates"]
+    if not isinstance(gates, dict):
+        probs.append(f"{path}: gates is not an object")
+    else:
+        for g, st in gates.items():
+            if not (isinstance(st, dict) and isinstance(
+                    st.get("passed"), bool)):
+                probs.append(f"{path}: gate {g!r} has no boolean 'passed'")
+            elif not st["passed"]:
+                probs.append(
+                    f"{path}: gate {g!r} FAILED"
+                    f" ({st.get('detail', '') or 'no detail'})")
+    return probs
+
+
+def main(argv) -> int:
+    if len(argv) < 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    d, names = argv[1], argv[2:]
+    failures = []
+    for name in names:
+        path = os.path.join(d, f"BENCH_{name}.json")
+        probs = check_artifact(path, name)
+        if probs:
+            failures.extend(probs)
+        else:
+            with open(path) as f:
+                doc = json.load(f)
+            print(f"ok: {path} ({len(doc['metrics'])} metrics, "
+                  f"{len(doc['gates'])} gates passed)")
+    for p in failures:
+        print(f"FAIL: {p}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

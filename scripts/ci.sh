@@ -5,12 +5,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -c "import repro; print('import ok:', repro.__name__)"
+# every smoke bench persists a machine-readable trajectory artifact
+# (BENCH_<name>.json: metrics + config + git rev + gate outcomes) into
+# this directory; check_bench_json.py validates them after the runs
+export BENCH_JSON_DIR="${BENCH_JSON_DIR:-$(mktemp -d)}"
 # fast regression gate for the int8 scalar-quantization tier (recall +
-# resident-bytes rows; fails loud if the quantized path rots)
+# resident-bytes rows + the integer-domain scan's speed/recall pins vs
+# the dequantize-then-f32 scan; fails loud if the quantized path rots)
 python -m benchmarks.bench_quantized --smoke
 # regression gate for the disk-resident pager: paged-vs-resident parity,
-# recall pin at every budget, resident bytes <= budget, and the scan-
-# resistant admission hit-rate pin
+# recall pin at every budget, resident bytes <= budget, the scan-
+# resistant admission hit-rate pin, and prefetch on/off bit-identity
 python -m benchmarks.bench_paged --smoke
 # regression gate for the incremental maintenance subsystem (Fig. 10d):
 # sustained churn maintained by the split/merge scheduler alone must keep
@@ -18,6 +23,9 @@ python -m benchmarks.bench_paged --smoke
 # <= 0.25x the bytes of the legacy rebuild-at-50%-growth policy, with
 # every step bounded by max_rows_per_step
 python -m benchmarks.bench_updates --smoke
+# validate the artifacts: each bench must have written a well-formed
+# BENCH_*.json and no recorded acceptance gate may have failed
+python scripts/check_bench_json.py "$BENCH_JSON_DIR" quantized paged updates
 # public-API smoke: the quickstart exercises QuerySpec/ResultSet, write
 # sessions, hybrid queries and recovery end-to-end -- API breakage fails
 # the gate before the unit tests even start

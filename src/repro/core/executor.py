@@ -154,8 +154,10 @@ class QueryPlan:
     part_ids: Optional[jax.Array]         # [n] int32 (None for prefilter)
     qsel: Optional[jax.Array]             # [Q, n] bool (None: all queries)
     rows: Optional[jax.Array]             # [cap] int32 (prefilter only)
+    parts_pq: Optional[jax.Array] = None  # [Q, n] int32 (ann_gather only)
     k: int = static_field(default=10)
-    kind: str = static_field(default="ann")   # ann | exact | prefilter
+    kind: str = static_field(default="ann")  # ann | exact | prefilter
+    #                                          | ann_gather
     attr_filter: Optional[AttrFilter] = static_field(default=None)
 
 
@@ -178,6 +180,35 @@ def plan_ann(index: IVFIndex, queries: jax.Array, k: int, n_probe: int,
                                q, n_probe, u_max=u_max, qmask=qmask)
     return QueryPlan(queries=q, part_ids=upart, qsel=qsel,
                      rows=None, k=k, kind="ann", attr_filter=attr_filter)
+
+
+# Largest (bucketed) query count routed to the per-query gather variant.
+# Small batches pay more for the shared union's vote/top-k plumbing and
+# its n_union = Q * n_probe scan width than a direct [Q, n_probe] gather
+# costs (the PR 1 regression on CPU); past ~8 queries probe overlap makes
+# the shared union the winner again. The selection is static per
+# (spec, Q-bucket), i.e. it lives inside the existing jit cache key.
+SMALL_Q_GATHER_MAX = 8
+
+
+def plan_ann_gather(index: IVFIndex, queries: jax.Array, k: int,
+                    n_probe: int,
+                    attr_filter: Optional[AttrFilter] = None) -> QueryPlan:
+    """Small-Q ANN plan: per-query probe lists, NO shared union.
+
+    Execution gathers each query's own [n_probe, p_max] probe block and
+    scores it directly -- the seed's formulation, which beats the shared
+    union below SMALL_Q_GATHER_MAX queries on CPU (no vote/top-k union
+    plumbing, no scan over other queries' partitions). Same candidate
+    set as plan_ann at equal n_probe, so recall is identical; parity is
+    pinned by tests (ids equal, scores allclose -- a differently-shaped
+    matmul is not bitwise-identical to the union scan)."""
+    cfg = index.config
+    q = normalize_if_cosine(queries.astype(jnp.float32), cfg.metric)
+    parts = find_nearest_centroids(index, q, n_probe)      # [Q, n]
+    return QueryPlan(queries=q, part_ids=None, qsel=None, rows=None,
+                     parts_pq=parts.astype(jnp.int32), k=k,
+                     kind="ann_gather", attr_filter=attr_filter)
 
 
 def plan_exact(index: IVFIndex, queries: jax.Array, k: int,
@@ -293,13 +324,18 @@ def fused_sq_scan(
     qsel: Optional[jax.Array] = None,
     attrs: Optional[jax.Array] = None,
     attr_filter: Optional[AttrFilter] = None,
+    norms: Optional[jax.Array] = None,   # [kp, p_max] precomputed norms
     backend: Optional[str] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Candidate stage of the quantized two-stage search: the fused scan
-    over the int8 code tier (dequantization fused into the distance
-    accumulation). Same plan shape as fused_scan; scores are approximate
-    (quantized reconstruction) and only used to *select* the k_out
-    candidates that _rerank_float32 rescores exactly."""
+    over the int8 code tier, with the distance accumulation in the
+    INTEGER domain (quantize.fold_queries + int8 x int8 -> int32 matmul
+    + rank-1 affine epilogue; see kernels/sq_scan.py). Same plan shape
+    as fused_scan; scores are approximate (quantized reconstruction plus
+    the query-side fold) and only used to *select* the k_out candidates
+    that _rerank_float32 rescores exactly. `norms` is the precomputed
+    IVFIndex.code_norms tier; when None (paged frame scans) both
+    backends fall back to decode-and-reduce in-scan."""
     if backend is None:
         backend = default_backend()
     if backend == "pallas":
@@ -307,18 +343,80 @@ def fused_sq_scan(
         return sq_scan.sq_scan_topk(
             queries, codes, qstats.lo, qstats.scale, valid, ids, part_ids,
             k_out, metric=metric, qsel=qsel, attrs=attrs,
-            attr_filter=attr_filter, interpret=None)
+            attr_filter=attr_filter, norms=norms, interpret=None)
     assert backend == "xla", backend
     return _xla_sq_scan(queries, codes, qstats, valid, ids, part_ids, k_out,
                         metric=metric, qsel=qsel, attrs=attrs,
-                        attr_filter=attr_filter)
+                        attr_filter=attr_filter, norms=norms)
+
+
+def _int_domain_dots(q_i8, alpha, beta, flat_c):
+    """Two-term affine epilogue over [2Q, d] x [m, d] int8 operands:
+    (alpha * (q_i8 . c))[:Q] + (alpha * (q_i8 . c))[Q:] + beta, with
+    q_i8/alpha in quantize.fold_queries' stacked [q1; q2] form.
+
+    For d <= 1024 the accumulation runs as an f32 gemm over the *cast*
+    integer operands: every product (|q_i8| <= 127, |c| <= 128) and every
+    partial sum (< 127 * 128 * 1024 < 2^24) is exactly representable in
+    f32, so this is bitwise-identical to int32 accumulation -- and much
+    faster than XLA's int8 gemm on CPU backends, where int32 matmul units
+    don't exist. Wider vectors keep the exact int32 path. The Pallas
+    kernel always accumulates in int32 (preferred_element_type) -- the
+    actual MXU int8 path -- and holds accumulator values identical to
+    this reference; its f32 epilogue agrees to ~1 ulp (the compiler may
+    fma-fuse the affine correction differently per program), so candidate
+    selection is identical and post-rerank results are bitwise."""
+    d = q_i8.shape[-1]
+    if d <= 1024:
+        acc = jax.lax.dot_general(
+            q_i8.astype(jnp.float32), flat_c.astype(jnp.float32),
+            (((1,), (1,)), ((), ())), precision=jax.lax.Precision.HIGHEST)
+    else:
+        acc = jax.lax.dot_general(
+            q_i8, flat_c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+    terms = alpha[:, None] * acc                     # [2Q, m]
+    q_n = beta.shape[0]
+    return terms[:q_n] + terms[q_n:] + beta[:, None]
 
 
 def _xla_sq_scan(queries, codes, qstats, valid, ids, part_ids, k_out, *,
-                 metric, qsel=None, attrs=None, attr_filter=None):
-    """Shape-identical XLA reference for the SQ scan: gather the probe
-    union's int8 codes, dequantize, then the same shared scan core as
-    the float32 reference."""
+                 metric, qsel=None, attrs=None, attr_filter=None,
+                 norms=None):
+    """Shape-identical XLA reference for the int8-domain SQ scan: gather
+    the probe union's codes, integer-domain matmul + affine epilogue
+    (same fold, same op order as the Pallas kernel -- bitwise parity),
+    then the same masking + top-k tail as the float32 reference."""
+    q_i8, alpha, beta = quantize.fold_queries(qstats, queries)
+    pc = codes[part_ids]                             # [n, p_max, d] int8
+    n, p_max, d = pc.shape
+    pok = valid[part_ids]
+    if attr_filter is not None:
+        pok = pok & attr_filter(attrs[part_ids])
+    dots = _int_domain_dots(q_i8, alpha, beta, pc.reshape(n * p_max, d))
+    if metric in ("ip", "cosine"):
+        scores = -dots
+    else:
+        if norms is not None:
+            v2 = norms[part_ids].reshape(n * p_max)
+        else:   # paged/hand-built fallback: decode-and-reduce in-scan
+            v2 = quantize.row_norms(qstats, pc).reshape(n * p_max)
+        scores = v2[None, :] - 2.0 * dots
+    ok = jnp.broadcast_to(pok.reshape(1, n * p_max), scores.shape)
+    if qsel is not None:
+        ok = ok & jnp.repeat(qsel, p_max, axis=1)
+    scores = mask_scores(scores, ok)
+    pid = ids[part_ids]
+    return topk_smallest(
+        scores, jnp.broadcast_to(pid.reshape(1, -1), scores.shape), k_out)
+
+
+def _xla_sq_scan_dequant(queries, codes, qstats, valid, ids, part_ids,
+                         k_out, *, metric, qsel=None, attrs=None,
+                         attr_filter=None):
+    """The pre-int8-domain reference (gather, dequantize to f32, f32
+    matmul) -- kept as the recall/latency baseline the int8-domain scan
+    is pinned against (tests + benchmarks/bench_quantized.py)."""
     return _xla_scan_gathered(
         queries, quantize.decode(qstats, codes[part_ids]),
         valid[part_ids], ids[part_ids], k_out,
@@ -431,7 +529,7 @@ def execute_plan(index: IVFIndex, plan: QueryPlan,
         quantized = index.codes is not None
     elif quantized:
         assert index.codes is not None, "quantized=True needs index codes"
-    use_sq = quantized and plan.kind == "ann"
+    use_sq = quantized and plan.kind in ("ann", "ann_gather")
 
     if plan.kind == "prefilter":
         # Repack the qualifying rows into virtual partitions so the same
@@ -454,6 +552,66 @@ def execute_plan(index: IVFIndex, plan: QueryPlan,
             sub_i.reshape(vparts, p_max),
             jnp.arange(vparts, dtype=jnp.int32), k_scan,
             metric=cfg.metric, backend=backend)
+    elif plan.kind == "ann_gather":
+        # Small-Q specialization: per-query [n_probe, p_max] gather, no
+        # shared union (see plan_ann_gather). Quantized indexes still run
+        # the two-stage contract: int8-domain gathered scan -> f32 rerank.
+        parts = plan.parts_pq                         # [Q, n]
+        npb = parts.shape[1]
+        pok = index.valid[parts]                      # [Q, n, p_max]
+        if f is not None:
+            pok = pok & f(index.attrs[parts])
+        if use_sq:
+            k_cand = min(max(plan.k, plan.k * cfg.rerank_factor),
+                         npb * p_max)
+            q_i8, alpha, beta = quantize.fold_queries(index.qstats, q)
+            # stacked two-term fold ([q1; q2], see fold_queries): expose
+            # the term axis so ONE contraction pass over the gathered
+            # codes computes both integer products per query
+            q_n = q.shape[0]
+            qt = q_i8.reshape(2, q_n, d)
+            at = alpha.reshape(2, q_n)
+            pc = index.codes[parts]                   # [Q, n, p_max, d]
+            if d <= 1024:
+                acc = jnp.einsum("tqd,qnpd->tqnp", qt.astype(jnp.float32),
+                                 pc.astype(jnp.float32),
+                                 precision=jax.lax.Precision.HIGHEST)
+            else:
+                acc = jnp.einsum("tqd,qnpd->tqnp", qt, pc,
+                                 preferred_element_type=jnp.int32
+                                 ).astype(jnp.float32)
+            terms = at[:, :, None, None] * acc        # [2, Q, n, p_max]
+            dots = terms[0] + terms[1] + beta[:, None, None]
+            if cfg.metric in ("ip", "cosine"):
+                scores = -dots
+            else:
+                v2 = index.code_norms[parts] if index.code_norms is not None \
+                    else quantize.row_norms(index.qstats, pc)
+                scores = v2 - 2.0 * dots
+            scores = mask_scores(scores.reshape(q.shape[0], npb * p_max),
+                                 pok.reshape(q.shape[0], npb * p_max))
+            # flat row ids (partition * p_max + slot) feed the f32 rerank
+            rid = (parts[:, :, None] * p_max
+                   + jnp.arange(p_max, dtype=jnp.int32)[None, None, :])
+            cand_s, cand_rows = topk_smallest(
+                scores, rid.reshape(q.shape[0], npb * p_max), k_cand)
+            cand_rows = jnp.where(cand_s >= MASKED_SCORE, INVALID_ID,
+                                  cand_rows)
+            k_scan = min(plan.k, k_cand)
+            s, i = _rerank_float32(index, q, cand_rows, k_scan)
+        else:
+            pv = index.vectors[parts]                 # [Q, n, p_max, d]
+            dots = jnp.einsum("qd,qnpd->qnp", q, pv)
+            if cfg.metric in ("ip", "cosine"):
+                scores = -dots
+            else:
+                scores = jnp.sum(pv * pv, axis=-1) - 2.0 * dots
+            scores = mask_scores(scores.reshape(q.shape[0], npb * p_max),
+                                 pok.reshape(q.shape[0], npb * p_max))
+            k_scan = min(plan.k, npb * p_max)
+            s, i = topk_smallest(
+                scores, index.ids[parts].reshape(q.shape[0], npb * p_max),
+                k_scan)
     elif use_sq:
         # Two-stage quantized search: (1) fused SQ scan over int8 codes
         # selects k' = rerank_factor * k candidate rows; (2) exact f32
@@ -465,7 +623,7 @@ def execute_plan(index: IVFIndex, plan: QueryPlan,
             q, index.codes, index.qstats, index.valid, row_ids,
             plan.part_ids, k_cand, metric=cfg.metric, qsel=plan.qsel,
             attrs=index.attrs if f is not None else None,
-            attr_filter=f, backend=backend)
+            attr_filter=f, norms=index.code_norms, backend=backend)
         # fewer than k' qualifying rows: the Pallas running-merge re-emits
         # an already-extracted row id (argmin over an all-MASKED buffer)
         # for the exhausted rounds. The f32 path neutralises those via
@@ -522,6 +680,13 @@ def _run_spec(index, queries, qmask, spec: QuerySpec):
             "spec.prefilter(cap) or let MicroNN.query size it from the " \
             "selectivity estimate"
         plan = plan_prefilter(index, queries, spec.k, f, spec.cap)
+    elif (queries.shape[0] <= SMALL_Q_GATHER_MAX and spec.u_max is None
+          and (spec.on_backend or default_backend()) != "pallas"):
+        # small (bucketed) batches skip the shared union: the per-query
+        # gather variant wins on CPU below ~8 queries (the PR 1
+        # regression). Static per (spec, Q-bucket) -- no new cache key
+        # dimension, no retrace beyond the existing bucket one.
+        plan = plan_ann_gather(index, queries, spec.k, spec.n_probe, f)
     else:
         plan = plan_ann(index, queries, spec.k, spec.n_probe, f,
                         u_max=spec.u_max, qmask=qmask)
@@ -698,6 +863,29 @@ def _paged_epilogue(q, s_m, i_m, delta, qmask, *, k, k_scan, metric,
                            attr_filter, qmask=qmask)
 
 
+# Double-buffered fault pipeline (PR 6): while the fused scan chews on
+# chunk N, a single worker thread STAGES chunk N+1 -- the SQLite fetch +
+# host-side block packing (PartitionCache.stage) -- so the disk latency
+# overlaps the scan and the next fault() only pays the frame scatter.
+# Staging takes no frames, no pins, and never rebinds a pool, so the
+# chunking is identical to the serial loop and results are bit-identical
+# by construction (same probe order, same per-chunk top-k merge). Set
+# False to force the serial fetch->scan loop (the before/after axis of
+# bench_paged.py).
+PAGED_PREFETCH = True
+
+_PREFETCHER = None
+
+
+def _prefetcher():
+    global _PREFETCHER
+    if _PREFETCHER is None:
+        from concurrent.futures import ThreadPoolExecutor
+        _PREFETCHER = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="micronn-prefetch")
+    return _PREFETCHER
+
+
 @partial(jax.jit, static_argnames=("k_out", "metric", "backend",
                                    "attr_filter"))
 def _scan_frames(q, payload, valid, ids, frame_ids, qsel, attrs, *,
@@ -788,34 +976,66 @@ def paged_search(
     # with admit=False -- they cycle through a small reusable scan ring
     # inside the pool (budget unchanged) -- and chunk to the ring size.
     admit = kind != "exact"
-    chunk = cache.capacity if admit else cache.scan_frames
-    for s in range(0, n, chunk):
-        cpids = upart[s:s + chunk]
-        frames = cache.fault(cpids, admit=admit)
-        try:
-            # read the pools AFTER fault(): the batched scatter rebinds
-            # them (functional .at[].set), so a reference captured before
-            # the fault would scan stale frame contents
-            attrs_pool = cache.attrs_pool if attr_filter is not None \
-                else None
-            fidx = jnp.asarray(frames.astype(np.int32))
-            cq = qsel[:, s:s + chunk]
-            k_chunk = min(k_run, len(cpids) * p_max)
-            if use_sq:
-                cs, ci = _scan_frames_sq(
-                    q, cache.payload_pool, pindex.qstats, cache.valid_pool,
-                    cache.ids_pool, fidx, cq, attrs_pool,
-                    k_out=k_chunk, metric=cfg.metric, backend=backend,
-                    attr_filter=attr_filter)
-            else:
-                cs, ci = _scan_frames(
-                    q, cache.payload_pool, cache.valid_pool, cache.ids_pool,
-                    fidx, cq, attrs_pool,
-                    k_out=k_chunk, metric=cfg.metric, backend=backend,
-                    attr_filter=attr_filter)
-        finally:
-            cache.unpin(frames)
-        run_s, run_i = merge_topk(run_s, run_i, cs, ci, k_run)
+    ring = cache.capacity if admit else cache.scan_frames
+    chunk = ring
+    # Double-buffering: while the fused scan chews on chunk N, the worker
+    # thread STAGES chunk N+1 -- the SQLite fetch + host block packing
+    # land in the pager's staging dict (PartitionCache.stage), so the
+    # next fault() only pays the frame scatter. Staging takes no frames
+    # and no pins, so chunking is unchanged (results trivially
+    # bit-identical with prefetch off) and the fault keeps its donated
+    # in-place scatter (no foreign pins outstanding). Single-chunk probe
+    # lists keep the serial path -- nothing to overlap.
+    prefetch = PAGED_PREFETCH and n > chunk
+    starts = list(range(0, n, chunk))
+    pending = None          # in-flight stage future for the next chunk
+    try:
+        for ci_, s in enumerate(starts):
+            cpids = upart[s:s + chunk]
+            if pending is not None:
+                try:
+                    pending.result()    # staged blocks ready to consume
+                except Exception:
+                    pass                # advisory: fault() re-reads SQLite
+                pending = None
+            frames = cache.fault(cpids, admit=admit)
+            if prefetch and ci_ + 1 < len(starts):
+                s2 = starts[ci_ + 1]
+                pending = _prefetcher().submit(
+                    cache.stage, upart[s2:s2 + chunk])
+            try:
+                # read the pools AFTER fault(): the batched scatter rebinds
+                # them (functional .at[].set), so a reference captured
+                # before the fault would scan stale frame contents. A
+                # concurrent prefetch fault may rebind them again, but the
+                # current chunk's frames are pinned, so every binding holds
+                # identical contents for them (copy-on-write scatter).
+                attrs_pool = cache.attrs_pool if attr_filter is not None \
+                    else None
+                fidx = jnp.asarray(frames.astype(np.int32))
+                cq = qsel[:, s:s + chunk]
+                k_chunk = min(k_run, len(cpids) * p_max)
+                if use_sq:
+                    cs, ci = _scan_frames_sq(
+                        q, cache.payload_pool, pindex.qstats,
+                        cache.valid_pool, cache.ids_pool, fidx, cq,
+                        attrs_pool, k_out=k_chunk, metric=cfg.metric,
+                        backend=backend, attr_filter=attr_filter)
+                else:
+                    cs, ci = _scan_frames(
+                        q, cache.payload_pool, cache.valid_pool,
+                        cache.ids_pool, fidx, cq, attrs_pool,
+                        k_out=k_chunk, metric=cfg.metric, backend=backend,
+                        attr_filter=attr_filter)
+            finally:
+                cache.unpin(frames)
+            run_s, run_i = merge_topk(run_s, run_i, cs, ci, k_run)
+    finally:
+        if pending is not None:     # scan raised: let the stage land (it
+            try:                    # holds no pins; entries age out)
+                pending.result()
+            except Exception:
+                pass
 
     if use_sq:
         # the frame scan emits asset ids; invalidate re-emitted rows from

@@ -117,6 +117,8 @@ def build_index(
         base_mean_size=jnp.asarray(counts.mean() if n else 0.0, jnp.float32),
         codes=None if cod is None else jnp.asarray(cod),
         qstats=qstats,
+        code_norms=None if cod is None else quantize.row_norms(
+            qstats, jnp.asarray(cod)),
         drift=jnp.zeros((k,), jnp.float32),
         config=cfg,
     )
@@ -140,4 +142,8 @@ def grow_layout(index: IVFIndex, new_p_max: int) -> IVFIndex:
         attrs=pad2(index.attrs, 0.0),
         valid=pad2(index.valid, False),
         codes=None if index.codes is None else pad2(index.codes, 0),
+        # recompute (not pad) so the padded slots carry decode-of-zero
+        # norms, preserving code_norms == row_norms(qstats, codes)
+        code_norms=None if index.codes is None else quantize.row_norms(
+            index.qstats, pad2(index.codes, 0)),
     )

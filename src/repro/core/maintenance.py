@@ -242,6 +242,8 @@ def flush_delta(index: IVFIndex, max_rows: Optional[int] = None,
         base_mean_size=index.base_mean_size,
         codes=jnp.asarray(cod) if quantized else None,
         qstats=index.qstats,
+        code_norms=quantize.row_norms(index.qstats, jnp.asarray(cod))
+        if quantized else None,
         drift=jnp.asarray(drift),
         config=cfg)
     return new_index, stats
@@ -442,6 +444,37 @@ def plan_split(centroids: np.ndarray, csizes: np.ndarray,
     return plan
 
 
+def choose_merge_partner(centroids: np.ndarray, counts: np.ndarray,
+                         victim: int, split_bar: float,
+                         exclude: Sequence[int] = ()) -> Optional[int]:
+    """Bin-packing partner selection for a merge: among the non-empty
+    partitions whose post-merge size still fits under the split bar, pick
+    the one that *minimizes the post-merge slack* (best-fit decreasing --
+    the classic bin-packing heuristic), NOT merely the nearest centroid.
+    Nearest-centroid partnering tends to pour small partitions into other
+    small partitions, leaving many half-empty bins that each trigger a
+    later merge; best-fit packs the victim into the fullest partition it
+    still fits, retiring a bin per merge. Ties on slack break by centroid
+    distance to the victim (locality still matters for recall), then by
+    partition id (determinism). Returns None when nothing fits."""
+    victim = int(victim)
+    counts = np.asarray(counts)
+    k = centroids.shape[0]
+    merged = counts + counts[victim]
+    dist = ((centroids - centroids[victim]) ** 2).sum(-1)
+    ok = (counts > 0) & (merged <= split_bar)
+    ok[victim] = False
+    for p in exclude:
+        if 0 <= int(p) < k:
+            ok[int(p)] = False
+    if not ok.any():
+        return None
+    slack = np.where(ok, split_bar - merged, np.inf)
+    # lexsort: last key is primary -> (slack, distance, pid)
+    order = np.lexsort((np.arange(k), dist, slack))
+    return int(order[0])
+
+
 def plan_merge(centroids: np.ndarray, csizes: np.ndarray,
                counts: np.ndarray, into: int, victim: int, fetch: RowFetch
                ) -> Optional[RepairPlan]:
@@ -565,6 +598,8 @@ def apply_plan(index: IVFIndex, plan: RepairPlan) -> IVFIndex:
         attrs=jnp.asarray(vat), valid=jnp.asarray(val),
         counts=jnp.asarray(counts),
         codes=jnp.asarray(cod) if quantized else None,
+        code_norms=quantize.row_norms(index.qstats, jnp.asarray(cod))
+        if quantized else None,
         drift=jnp.asarray(drift))
 
 
@@ -600,8 +635,13 @@ def repack_partition(index: IVFIndex, pid: int) -> IVFIndex:
                             np.zeros(len(val) - m, bool)])),
     )
     if cod is not None:
+        new_codes = index.codes.at[pid].set(repacked(cod, cod[rows], 0))
+        norms = index.code_norms if index.code_norms is not None \
+            else quantize.row_norms(index.qstats, index.codes)
         new = dataclasses.replace(
-            new, codes=index.codes.at[pid].set(repacked(cod, cod[rows], 0)))
+            new, codes=new_codes,
+            code_norms=norms.at[pid].set(
+                quantize.row_norms(index.qstats, new_codes[pid])))
     return new
 
 

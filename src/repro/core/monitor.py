@@ -33,6 +33,7 @@ from typing import List, Tuple
 
 import numpy as np
 
+from . import maintenance
 from .types import IVFIndex
 
 
@@ -164,18 +165,11 @@ class IndexMonitor:
                 q = int(q)
                 if q in taken:
                     continue
-                # nearest non-empty sibling the pair fits under the split
-                # bar with -- deterministic: distance, then partition id
-                dist = ((cents - cents[q]) ** 2).sum(-1)
-                order = np.lexsort((np.arange(k), dist))
-                into = None
-                for cand in order:
-                    cand = int(cand)
-                    if cand == q or counts[cand] <= 0 or cand in taken:
-                        continue
-                    if counts[cand] + counts[q] <= split_bar:
-                        into = cand
-                        break
+                # bin-packing partner choice (best-fit): the partner that
+                # minimizes post-merge slack under the split bar, ties by
+                # centroid distance then pid (maintenance.choose_merge_partner)
+                into = maintenance.choose_merge_partner(
+                    cents, counts, q, split_bar, exclude=taken)
                 if into is None:
                     continue
                 taken.update((q, into))

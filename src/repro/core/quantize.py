@@ -105,6 +105,67 @@ def encode_np(stats: QuantStats, x: np.ndarray) -> np.ndarray:
     return np.asarray(encode(stats, jnp.asarray(x, jnp.float32)))
 
 
+def fold_queries(stats: QuantStats, q: jax.Array):
+    """Fold f32 queries into the int8 distance domain (the MXU scan's
+    query-side preparation, done ONCE per scan).
+
+    The dequantized dot against a code row c expands as
+
+        q . v = q . ((c + 128) * scale + lo)
+              = (q * scale) . c + 128 * sum(q * scale) + q . lo
+
+    so with w = q * scale the whole affine correction collapses to a
+    rank-1 epilogue around the integer product w~ . c. The query weights
+    are encoded in TWO int8 terms (primary + residual):
+
+        q1 = round(w * 127 / A1),  A1 = max|w|
+        q2 = round(r * 127 / A2),  r = w - (A1/127) q1, A2 = max|r|
+        w~ = alpha1 q1 + alpha2 q2,  alpha_i = A_i / 127
+
+    The residual term costs one extra row per query in the (bandwidth-
+    bound) int8 matmul but drops the query-side rounding error from
+    ~2^-8 to ~2^-15 relative -- small enough that candidate selection
+    matches the dequantize-then-f32 scan on real data (the recall pin at
+    rerank_factor=1), while the arithmetic stays pure int8 x int8 on the
+    MXU. The epilogue is then
+
+        q . v ~= alpha1 (q1 . c) + alpha2 (q2 . c) + beta,
+        beta  = 128 (alpha1 sum(q1) + alpha2 sum(q2)) + q . lo.
+
+    Returns the STACKED form consumed by the scan backends:
+    (q_i8 [2Q, d] int8 = [q1; q2], alpha [2Q] f32 = [alpha1; alpha2],
+    beta [Q] f32). Consumers compute acc = q_i8 . c as one [2Q, m]
+    integer matmul and reduce dots = (alpha * acc)[:Q] + (alpha *
+    acc)[Q:] + beta. Both scan backends call this one helper, so they
+    fold identical values by construction.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    w = q * stats.scale[None, :]                       # [Q, d]
+    a1 = jnp.maximum(jnp.max(jnp.abs(w), axis=-1), MIN_SCALE)  # [Q]
+    q1 = jnp.round(w * (127.0 / a1[:, None])).astype(jnp.int8)
+    alpha1 = a1 / 127.0
+    r = w - alpha1[:, None] * q1.astype(jnp.float32)   # rounding residual
+    a2 = jnp.maximum(jnp.max(jnp.abs(r), axis=-1), MIN_SCALE)
+    q2 = jnp.round(r * (127.0 / a2[:, None])).astype(jnp.int8)
+    alpha2 = a2 / 127.0
+    q_i8 = jnp.concatenate([q1, q2], axis=0)           # [2Q, d]
+    alpha = jnp.concatenate([alpha1, alpha2], axis=0)  # [2Q]
+    beta = 128.0 * (alpha1 * jnp.sum(q1.astype(jnp.float32), axis=-1)
+                    + alpha2 * jnp.sum(q2.astype(jnp.float32), axis=-1)) \
+        + q @ stats.lo
+    return q_i8, alpha, beta
+
+
+def row_norms(stats: QuantStats, codes: jax.Array) -> jax.Array:
+    """[..., p, d] int8 codes -> [..., p] f32 squared reconstruction norms
+    ||decode(c)||^2 -- the l2 scan's per-row constant, precomputed once at
+    (re)pack time so the int8-domain scan never re-decodes the code tier
+    (IVFIndex.code_norms). The in-scan fallback (paged frames) computes
+    the same decode-then-reduce expression, so the two agree bitwise."""
+    v = decode(stats, codes)
+    return jnp.sum(v * v, axis=-1)
+
+
 def stats_to_arrays(stats: QuantStats):
     return np.asarray(stats.lo, np.float32), np.asarray(stats.scale, np.float32)
 

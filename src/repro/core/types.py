@@ -142,6 +142,12 @@ class IVFIndex:
     # (core/quantize.QuantStats pytree). None on a float32-only index.
     codes: Optional[jax.Array] = None   # [k, p_max, d] int8
     qstats: Optional[Any] = None        # quantize.QuantStats
+    # Precomputed ||decode(codes)||^2 per row (quantize.row_norms) -- the
+    # l2 epilogue constant of the int8-domain scan. Invariant: whenever
+    # `codes` is present and mutated, code_norms is recomputed alongside
+    # it, so code_norms == quantize.row_norms(qstats, codes) always holds
+    # (kernels read it instead of re-decoding the code tier per query).
+    code_norms: Optional[jax.Array] = None  # [k, p_max] f32
     # Per-partition drift state (paper §3.6 / LIRE-style local repair):
     # cumulative centroid displacement since the partition was last
     # (re)clustered, accumulated by maintenance.running_mean_update and

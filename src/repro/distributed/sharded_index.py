@@ -82,6 +82,7 @@ def index_shardings(index: IVFIndex, mesh: Mesh, model_axis: str = "model"):
         base_mean_size=ns(),
         codes=ns(m, None, None) if quantized else None,
         qstats=qstats_ns,
+        code_norms=ns(m, None) if quantized else None,
         config=index.config if not isinstance(index, IVFIndex) else
         index.config,
     )

@@ -3,29 +3,46 @@
 Same contract and grid structure as kernels/ivf_scan.py (one grid step per
 probed partition, scalar-prefetched partition ids, VMEM running top-k),
 but the partition payload streamed from HBM is the *int8 code tier* -- 4x
-fewer bytes on the scan's bandwidth-bound axis -- and the per-dimension
-dequantization
+fewer bytes on the scan's bandwidth-bound axis -- and the distance
+accumulation itself runs in the INTEGER domain on the MXU:
 
-    v = (code + 128) * scale + lo
+    queries are folded ONCE per scan (core/quantize.fold_queries) into a
+    stacked two-term int8 encoding (primary + rounding residual)
+        q_i8  = [q1; q2]                            [2Q, d] int8
+        alpha = [alpha1; alpha2]                    [2Q] f32
+        beta  = rank-1 epilogue constants           [Q] f32
+    the kernel accumulates  acc = q_i8 . c_i8  with
+        preferred_element_type=jnp.int32   (the int8 MXU path)
+    and applies the affine (lo, scale) correction as the epilogue
+        dots ~= (alpha * acc)[:Q] + (alpha * acc)[Q:] + beta.
+    The residual term costs one extra query row in the bandwidth-bound
+    matmul and buys ~2^-15 relative query precision, so candidate
+    selection matches the dequantize-then-f32 scan.
 
-is fused into the distance accumulation: codes are widened to float32 in
-VREGs, the affine decode runs on the VPU, and the [Q, d] x [d, p_max]
-distance matmul hits the MXU, so the reconstruction never round-trips to
-HBM. The quantizer stats (core/quantize.QuantStats) ride along as two
-[1, d] VMEM blocks.
+The int8 codes are never dequantized on the matmul path -- the 4x
+bandwidth win of the code tier becomes a FLOP win too. For l2 the
+per-row constant ||decode(c)||^2 comes from the precomputed
+IVFIndex.code_norms tier (an extra [1, p_max] f32 block per partition);
+when the caller has no norms resident (paged frame scans) the kernel
+falls back to the decode-and-reduce expression in-register, which is
+bitwise-identical to how code_norms was precomputed.
 
 This is the *candidate* stage of the paper's low-memory design: callers
 over-fetch k' = rerank_factor * k rows here and rerank them at float32
 (core/executor.py), so the `ids` input is typically the flat row index
 (partition * p_max + slot) rather than the asset id -- whatever the
 caller needs to gather rerank rows. MQO selection masks and fused
-attribute predicates behave exactly as in ivf_scan.
+attribute predicates behave exactly as in ivf_scan. The query-side
+quantization error only moves *candidate selection*, never reported
+scores (the f32 rerank contract).
 
 On a real TPU the int8 tile minimum is (32, 128); p_max must be a
 multiple of 32 when running compiled (core/types.effective_pad_to bumps
 the build-time padding automatically; sq_scan_topk asserts it so a
-mis-padded layout fails loud instead of mis-compiling). Interpret mode
-(anything that is not a TPU backend) has no such constraint.
+mis-padded layout fails loud instead of mis-compiling). The folded query
+block is int8 too, so compiled runs pad Q up to the 32-sublane minimum
+internally and slice the outputs back. Interpret mode (anything that is
+not a TPU backend) has no such constraint.
 
 Frame-indirect entry (storage/pager.py): `codes` may be the pager's
 frame *pool* [F, p_max, d] rather than the full code tier, with
@@ -43,6 +60,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core import quantize
 from .ivf_scan import MASKED, _merge_topk, default_interpret
 
 # Minimum second-to-last tile dimension for int8 operands on real TPU
@@ -52,13 +70,15 @@ INT8_SUBLANE_MIN = 32
 
 def _sq_scan_kernel(part_ids_ref,              # scalar prefetch [n]
                     *refs,
-                    k_out: int, metric: str, mqo: bool, attr_filter):
-    if attr_filter is not None:
-        (q_ref, lo_ref, scale_ref, c_ref, valid_ref, ids_ref, qsel_ref,
-         attrs_ref, out_s_ref, out_i_ref, run_s, run_i) = refs
-    else:
-        (q_ref, lo_ref, scale_ref, c_ref, valid_ref, ids_ref, qsel_ref,
-         out_s_ref, out_i_ref, run_s, run_i) = refs
+                    k_out: int, metric: str, mqo: bool, attr_filter,
+                    has_norms: bool):
+    refs = list(refs)
+    q_ref, alpha_ref, beta_ref, lo_ref, scale_ref, c_ref, valid_ref, \
+        ids_ref, qsel_ref = refs[:9]
+    rest = refs[9:]
+    norms_ref = rest.pop(0) if has_norms else None
+    attrs_ref = rest.pop(0) if attr_filter is not None else None
+    out_s_ref, out_i_ref, run_s, run_i = rest
     i = pl.program_id(0)
     n = pl.num_programs(0)
 
@@ -67,14 +87,24 @@ def _sq_scan_kernel(part_ids_ref,              # scalar prefetch [n]
         run_s[...] = jnp.full_like(run_s, MASKED)
         run_i[...] = jnp.full_like(run_i, -1)
 
-    q = q_ref[...].astype(jnp.float32)               # [Q, d]
-    # fused dequantization: int8 codes -> f32 reconstruction in-register
-    c = c_ref[0].astype(jnp.float32)                 # [p_max, d]
-    v = (c + 128.0) * scale_ref[0][None, :] + lo_ref[0][None, :]
-    dots = jax.lax.dot_general(q, v, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)
+    # integer-domain accumulation: int8 x int8 -> int32 on the MXU over
+    # the stacked [q1; q2] two-term query block
+    acc = jax.lax.dot_general(q_ref[...], c_ref[0],
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    # rank-1 affine epilogue: dots ~= alpha1*(q1.c) + alpha2*(q2.c) + beta
+    terms = alpha_ref[...] * acc.astype(jnp.float32)   # [2*q_pad, p_max]
+    qp = terms.shape[0] // 2
+    dots = terms[:qp] + terms[qp:] + beta_ref[...]
     if metric == "l2":
-        v2 = jnp.sum(v * v, axis=-1)
+        if has_norms:
+            v2 = norms_ref[0]                        # precomputed tier
+        else:
+            # paged fallback: decode-and-reduce, the exact expression
+            # code_norms was precomputed with (bitwise-identical values)
+            c = c_ref[0].astype(jnp.float32)
+            v = (c + 128.0) * scale_ref[0][None, :] + lo_ref[0][None, :]
+            v2 = jnp.sum(v * v, axis=-1)
         scores = v2[None, :] - 2.0 * dots
     else:
         scores = -dots
@@ -111,6 +141,7 @@ def sq_scan_topk(
     qsel: Optional[jax.Array] = None,   # [Q, n] bool (MQO mask)
     attrs: Optional[jax.Array] = None,  # [k, p_max, n_attr] f32
     attr_filter=None,                   # compiled predicate (hybrid.py)
+    norms: Optional[jax.Array] = None,  # [k, p_max] f32 ||decode(c)||^2
     interpret: Optional[bool] = None,   # None: auto by backend
 ) -> Tuple[jax.Array, jax.Array]:
     if interpret is None:
@@ -125,19 +156,48 @@ def sq_scan_topk(
     if qsel is None:
         qsel = jnp.ones((q_n, n), jnp.int8)
 
+    # fold the query block into the int8 domain ONCE per scan; the fold
+    # is the stacked two-term form ([q1; q2], [alpha1; alpha2], beta)
+    stats = quantize.QuantStats(lo=jnp.asarray(lo, jnp.float32),
+                                scale=jnp.asarray(scale, jnp.float32))
+    q_i8, alpha, beta = quantize.fold_queries(stats, queries)
+
+    # compiled int8 operands tile at 32 sublanes: pad Q up, slice back.
+    # Each term's half pads independently so the kernel's [:qp]/[qp:]
+    # split still lands on the term boundary.
+    q_pad = q_n
+    if not interpret and q_n % INT8_SUBLANE_MIN:
+        q_pad = -(-q_n // INT8_SUBLANE_MIN) * INT8_SUBLANE_MIN
+        padw = [(0, q_pad - q_n), (0, 0)]
+        q_i8 = jnp.concatenate([jnp.pad(q_i8[:q_n], padw),
+                                jnp.pad(q_i8[q_n:], padw)])
+        alpha = jnp.concatenate([jnp.pad(alpha[:q_n], padw[:1]),
+                                 jnp.pad(alpha[q_n:], padw[:1])])
+        beta = jnp.pad(beta, padw[:1])
+        qsel = jnp.pad(qsel, padw)
+
+    has_norms = norms is not None and metric == "l2"
     in_specs = [
-        pl.BlockSpec((q_n, d), lambda i, pids: (0, 0)),
+        pl.BlockSpec((2 * q_pad, d), lambda i, pids: (0, 0)),
+        pl.BlockSpec((2 * q_pad, 1), lambda i, pids: (0, 0)),
+        pl.BlockSpec((q_pad, 1), lambda i, pids: (0, 0)),
         pl.BlockSpec((1, d), lambda i, pids: (0, 0)),
         pl.BlockSpec((1, d), lambda i, pids: (0, 0)),
         pl.BlockSpec((1, p_max, d), lambda i, pids: (pids[i], 0, 0)),
         pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)),
         pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)),
-        pl.BlockSpec((q_n, n), lambda i, pids: (0, 0)),
+        pl.BlockSpec((q_pad, n), lambda i, pids: (0, 0)),
     ]
-    inputs = [queries, lo.reshape(1, d).astype(jnp.float32),
+    inputs = [q_i8.astype(jnp.int8),
+              alpha.reshape(2 * q_pad, 1).astype(jnp.float32),
+              beta.reshape(q_pad, 1).astype(jnp.float32),
+              lo.reshape(1, d).astype(jnp.float32),
               scale.reshape(1, d).astype(jnp.float32),
               codes.astype(jnp.int8), valid.astype(jnp.int8),
               ids.astype(jnp.int32), qsel.astype(jnp.int8)]
+    if has_norms:
+        in_specs.append(pl.BlockSpec((1, p_max), lambda i, pids: (pids[i], 0)))
+        inputs.append(norms.astype(jnp.float32))
     if attr_filter is not None:
         assert attrs is not None, "attr_filter needs the attrs tensor"
         n_attr = attrs.shape[-1]
@@ -150,22 +210,26 @@ def sq_scan_topk(
         grid=(n,),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((q_n, k_out), lambda i, pids: (0, 0)),
-            pl.BlockSpec((q_n, k_out), lambda i, pids: (0, 0)),
+            pl.BlockSpec((q_pad, k_out), lambda i, pids: (0, 0)),
+            pl.BlockSpec((q_pad, k_out), lambda i, pids: (0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((q_n, k_out), jnp.float32),
-            pltpu.VMEM((q_n, k_out), jnp.int32),
+            pltpu.VMEM((q_pad, k_out), jnp.float32),
+            pltpu.VMEM((q_pad, k_out), jnp.int32),
         ],
     )
     kernel = pl.pallas_call(
         functools.partial(_sq_scan_kernel, k_out=k_out, metric=metric,
-                          mqo=mqo, attr_filter=attr_filter),
+                          mqo=mqo, attr_filter=attr_filter,
+                          has_norms=has_norms),
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((q_n, k_out), jnp.float32),
-            jax.ShapeDtypeStruct((q_n, k_out), jnp.int32),
+            jax.ShapeDtypeStruct((q_pad, k_out), jnp.float32),
+            jax.ShapeDtypeStruct((q_pad, k_out), jnp.int32),
         ],
         interpret=interpret,
     )
-    return tuple(kernel(part_ids.astype(jnp.int32), *inputs))
+    out_s, out_i = kernel(part_ids.astype(jnp.int32), *inputs)
+    if q_pad != q_n:
+        out_s, out_i = out_s[:q_n], out_i[:q_n]
+    return out_s, out_i

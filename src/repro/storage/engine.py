@@ -173,6 +173,7 @@ class MicroNN:
         # persist the clustering back to the clustered table
         assign = self._current_assignment()
         self.store.set_partitions(ids, assign[ids], *self._centroid_state())
+        self._persist_maintenance_state()
         self._refresh_stats()
 
     def recover(self):
@@ -230,8 +231,20 @@ class MicroNN:
             base_mean_size=jnp.asarray(max(counts.mean(), 1.0), jnp.float32),
             codes=None if cod is None else jnp.asarray(cod),
             qstats=qstats,
+            code_norms=None if cod is None else quantize.row_norms(
+                qstats, jnp.asarray(cod)),
             drift=jnp.zeros((len(cents),), jnp.float32),
             config=self.config)
+        # restore the monitor's maintenance signals (drift accumulators +
+        # rebuild baseline) persisted alongside the clustering -- a
+        # recovered index resumes maintenance where the crash left off
+        mstate = self.store.maintenance_state()
+        if mstate is not None:
+            base, drift = mstate
+            if drift.shape[0] == len(cents):
+                idx = dataclasses.replace(
+                    idx, drift=jnp.asarray(drift, jnp.float32),
+                    base_mean_size=jnp.asarray(base, jnp.float32))
         self.index = idx
         # replay delta rows (partition -1); upsert re-encodes them into
         # the delta's code block from the same stats, deterministically.
@@ -440,6 +453,7 @@ class MicroNN:
             self.maintenance_log.append(stats)
             self.store.update_centroids(np.asarray(self.index.centroids),
                                         np.asarray(self.index.csizes))
+            self._persist_maintenance_state()
             return "flush"
         if action == "rebuild":
             self.index, stats = maintenance.full_rebuild(self.index)
@@ -452,6 +466,7 @@ class MicroNN:
             assign = self._current_assignment()
             self.store.set_partitions(
                 ids, assign[ids], *self._centroid_state())
+            self._persist_maintenance_state()
             self._refresh_stats()
             return "rebuild"
         return None
@@ -544,6 +559,7 @@ class MicroNN:
                 dids, assign, touched,
                 np.asarray(self.index.centroids)[touched],
                 np.asarray(self.index.csizes)[touched])
+            self._persist_maintenance_state()
         return StepReport("flush", (), stats.rows_moved,
                           stats.bytes_written)
 
@@ -652,6 +668,7 @@ class MicroNN:
             bytes_written=bytes_written,
             p_max_before=p_max_before, p_max_after=self.index.p_max)
         self.maintenance_log.append(stats)
+        self._persist_maintenance_state()
         return StepReport(plan.kind, tuple(int(p) for p in plan.pids),
                           plan.rows, bytes_written)
 
@@ -814,6 +831,9 @@ class MicroNN:
         assign = km.assign(store.iter_batches(batch))
         store.reassign_partitions(ids, assign, km.centroids, km.counts)
         self._attach_paged()
+        # a fresh clustering resets the maintenance signals -- write them
+        # so a later recover() does not restore a stale pre-build state
+        self._persist_maintenance_state()
 
     def _attach_paged(self):
         """Build the PagedIndex view from durable metadata only: centroids,
@@ -866,6 +886,12 @@ class MicroNN:
         self._attach_paged()
         if self.index is None:
             return
+        mstate = self.store.maintenance_state()
+        if mstate is not None:
+            base, drift = mstate
+            if drift.shape[0] == self.index.k:
+                self.index.drift = np.asarray(drift, np.float32)
+                self.index.base_mean_size = float(base)
         pids, pvecs = self.store.scan_partition(-1)
         if not len(pids):
             return
@@ -963,6 +989,7 @@ class MicroNN:
             # durable I/O matches the stats accounting (never O(k))
             self.store.apply_repair(dids, assign, touched,
                                     cent[touched], csz[touched])
+            self._persist_maintenance_state()
             pad = effective_pad_to(self.config)
             new_p_max = int(idx.counts.max())
             new_p_max = max(idx.cache.p_max, -(-new_p_max // pad) * pad)
@@ -990,6 +1017,19 @@ class MicroNN:
             idx.k * idx.p_max, idx.n_attr)
         live = np.asarray(idx.valid).reshape(-1)
         self.optimizer = HybridOptimizer(AttributeStats(flat_attrs[live]))
+
+    def _persist_maintenance_state(self):
+        """Mirror the monitor's maintenance signals (per-partition drift
+        accumulators + the rebuild baseline mean size) into the store's
+        meta table, so recover() resumes maintenance timing instead of
+        resetting drift to zero. Called at every point that durably
+        changes the clustering or the signals themselves."""
+        idx = self.index
+        if idx is None:
+            return
+        drift = np.asarray(idx.drift, np.float32) if idx.drift is not None \
+            else np.zeros((idx.k,), np.float32)
+        self.store.set_maintenance_state(float(idx.base_mean_size), drift)
 
     def _persist_codes(self):
         """Mirror the resident code tier (+ quantizer stats) durably --

@@ -65,6 +65,20 @@ pool-sized buffer (asserted by tests/test_pager.py via the compiled
 memory analysis). With foreign pins outstanding the fault falls back to
 a copying scatter: donation would invalidate the buffer a concurrent
 scan may still be reading.
+
+Read-ahead staging (PR 6 double-buffering): `stage(pids)` runs the SQL
+round-trip + host-side block packing for a future chunk WITHOUT taking
+frames, pins, or rebinding any pool -- the processed per-partition
+blocks land in a host-side staging dict that the next fault() consumes
+under the lock, paying only the frame scatter. The executor's paged
+loop submits stage(chunk N+1) to a worker thread while the fused scan
+chews on chunk N, overlapping the disk latency with compute at
+UNCHANGED chunking (so results are trivially bit-identical with
+staging off). Staging is purely advisory: entries are dropped by
+invalidate()/resize() (a generation counter discards in-flight stages
+that raced a writer), fault() falls back to SQLite for anything not
+staged, and the buffer holds at most one scan chunk of host blocks --
+the classic double-buffer cost, bounded by scan_frames * frame_bytes.
 """
 from __future__ import annotations
 
@@ -170,6 +184,11 @@ class PartitionCache:
         self._transient = np.zeros(self.capacity, bool)
         self._ring: list = []
         self._ring_hand = 0
+        # read-ahead staging (PR 6): pid -> (payload, ids, valid, attrs)
+        # host blocks prefetched by stage(); the generation counter lets
+        # invalidate()/resize() discard stages still in flight
+        self._staged: dict = {}
+        self._stage_gen = getattr(self, "_stage_gen", 0) + 1
 
     def resize(self, p_max: int):
         """Reallocate the pool for a larger partition size (after a flush
@@ -264,6 +283,68 @@ class PartitionCache:
             "scan ring exhausted -- chunk a non-admitted scan to at most "
             f"scan_frames={self.scan_frames} missing partitions")
 
+    # -- fetch / staging -----------------------------------------------------
+    def _fetch_blocks(self, pids: Sequence[int]):
+        """One batched SQL round-trip for the listed partitions, packed to
+        pool layout on the host: (payload, ids, valid, attrs) numpy blocks
+        of shape [len(pids), p_max, ...] (attrs is None without an attrs
+        pool). int8 pools skip the f32 blobs entirely -- the fetch moves
+        4x fewer bytes off disk (the point of the code tier) -- and
+        backfill the rare code-less row from the f32 tier with the same
+        deterministic encode the build used. Pure read: no pool, frame
+        table, or counter is touched, so stage() may run it off-lock."""
+        sq = self.payload == "int8"
+        blocks = self.store.scan_partitions(
+            list(pids), self.p_max,
+            with_codes=sq, with_attrs=self.with_attrs, with_vecs=not sq)
+        if sq:
+            codes = blocks.codes
+            stale = blocks.valid & ~blocks.code_ok
+            if stale.any():
+                # rare: rows without a durable code (written by a
+                # pre-quantized engine) -- backfill just those rows
+                # from the f32 tier and re-encode deterministically
+                rows, _ = self.store.vectors_for(blocks.ids[stale])
+                rows = np.asarray(normalize_if_cosine(
+                    jnp.asarray(rows, jnp.float32), self.metric))
+                codes[stale] = quantize.encode_np(self.qstats, rows)
+            payload = codes
+        else:
+            payload = np.asarray(normalize_if_cosine(
+                jnp.asarray(blocks.vecs, jnp.float32), self.metric))
+        attrs = blocks.attrs if self.with_attrs else None
+        return payload, blocks.ids, blocks.valid, attrs
+
+    def stage(self, pids: Sequence[int]):
+        """Read ahead: fetch + pack the listed partitions' blocks into the
+        host-side staging dict so the next fault() skips its SQL round
+        trip. Takes no frames and no pins, and never rebinds a pool --
+        safe to run on a prefetch thread concurrently with a scan of the
+        current chunk. Advisory only: a concurrent invalidate() bumps the
+        generation and the whole in-flight stage is discarded (the next
+        fault re-reads from SQLite)."""
+        with self._lock:
+            gen = self._stage_gen
+            want = [int(p) for p in pids
+                    if int(p) not in self._pid_frame
+                    and int(p) not in self._staged]
+        if not want:
+            return
+        payload, ids, valid, attrs = self._fetch_blocks(want)
+        with self._lock:
+            if gen != self._stage_gen:
+                return          # a writer invalidated mid-fetch: drop all
+            # bound leftover entries (a scan that raised mid-stream never
+            # consumes its staged chunk) -- the dict may never outgrow a
+            # few chunks of host blocks
+            if len(self._staged) > 2 * self.capacity:
+                self._staged.clear()
+            for i, p in enumerate(want):
+                if p in self._pid_frame:    # faulted while we fetched
+                    continue
+                self._staged[p] = (payload[i], ids[i], valid[i],
+                                   None if attrs is None else attrs[i])
+
     # -- fault / pin / invalidate -------------------------------------------
     def fault(self, pids: Sequence[int], admit: bool = True) -> np.ndarray:
         """Ensure every listed partition is resident; returns the frame
@@ -322,30 +403,23 @@ class PartitionCache:
             frames[j] = f
             new_frames.append(f)
         try:
-            sq = self.payload == "int8"
-            # int8 pools skip the f32 blobs entirely: the fault moves 4x
-            # fewer bytes off disk (the point of the code tier)
-            blocks = self.store.scan_partitions(
-                [p for _, p in missing], self.p_max,
-                with_codes=sq, with_attrs=self.with_attrs, with_vecs=not sq)
-            if sq:
-                codes = blocks.codes
-                stale = blocks.valid & ~blocks.code_ok
-                if stale.any():
-                    # rare: rows without a durable code (written by a
-                    # pre-quantized engine) -- backfill just those rows
-                    # from the f32 tier and re-encode deterministically
-                    rows, _ = self.store.vectors_for(blocks.ids[stale])
-                    rows = np.asarray(normalize_if_cosine(
-                        jnp.asarray(rows, jnp.float32), self.metric))
-                    codes[stale] = quantize.encode_np(self.qstats, rows)
-                payload = jnp.asarray(codes)
-            else:
-                payload = normalize_if_cosine(
-                    jnp.asarray(blocks.vecs, jnp.float32), self.metric)
+            # consume staged read-ahead blocks first; anything not staged
+            # is fetched in one batched SQL round-trip as before
+            staged = {p: self._staged.pop(p)
+                      for _, p in missing if p in self._staged}
+            fetch = [p for _, p in missing if p not in staged]
+            if fetch:
+                f_pay, f_ids, f_val, f_att = self._fetch_blocks(fetch)
+                for i, p in enumerate(fetch):
+                    staged[p] = (f_pay[i], f_ids[i], f_val[i],
+                                 None if f_att is None else f_att[i])
+            order = [staged[p] for _, p in missing]
+            payload = jnp.asarray(np.stack([e[0] for e in order]))
+            bids = jnp.asarray(np.stack([e[1] for e in order]))
+            bval = jnp.asarray(np.stack([e[2] for e in order]))
+            battrs = None if self.attrs_pool is None else \
+                jnp.asarray(np.stack([e[3] for e in order]))
             fidx = jnp.asarray(np.asarray(new_frames, np.int32))
-            bids = jnp.asarray(blocks.ids)
-            bval = jnp.asarray(blocks.valid)
             if foreign_pins == 0:
                 # no concurrent scan can be reading the old pool objects:
                 # donate them -- the scatter updates the buffers in place
@@ -356,15 +430,14 @@ class PartitionCache:
                                     bids, bval)
                 if self.attrs_pool is not None:
                     self.attrs_pool = _scatter_one(
-                        self.attrs_pool, fidx, jnp.asarray(blocks.attrs))
+                        self.attrs_pool, fidx, battrs)
             else:
                 # a scan may still hold the old arrays: copy-on-write
                 self.payload_pool = self.payload_pool.at[fidx].set(payload)
                 self.ids_pool = self.ids_pool.at[fidx].set(bids)
                 self.valid_pool = self.valid_pool.at[fidx].set(bval)
                 if self.attrs_pool is not None:
-                    self.attrs_pool = self.attrs_pool.at[fidx].set(
-                        jnp.asarray(blocks.attrs))
+                    self.attrs_pool = self.attrs_pool.at[fidx].set(battrs)
         except BaseException:
             # roll back the provisional registrations: the frames never
             # received data, so a later fault must not count them as hits
@@ -401,7 +474,12 @@ class PartitionCache:
         in-flight scan is released lazily at its last unpin -- the scan
         keeps its pre-invalidation snapshot, the mapping is gone at once."""
         with self._lock:
+            # discard staged read-ahead for the changed partitions, and
+            # bump the generation so an in-flight stage() that read them
+            # mid-write drops its whole batch instead of inserting
+            self._stage_gen += 1
             for p in pids:
+                self._staged.pop(int(p), None)
                 f = self._pid_frame.pop(int(p), None)
                 if f is None:
                     continue

@@ -246,6 +246,27 @@ class VectorStore:
         return (np.asarray(d["lo"], np.float32),
                 np.asarray(d["scale"], np.float32))
 
+    # -- maintenance state ---------------------------------------------------
+    def set_maintenance_state(self, base_mean_size: float,
+                              drift: np.ndarray):
+        """Persist the monitor's maintenance signals (per-partition
+        accumulated centroid drift + the rebuild baseline mean size) so a
+        recovered index resumes maintenance where the crashed process left
+        off, instead of resetting drift to zero and mis-timing the next
+        local repair."""
+        with self.transaction():
+            self._set_meta("maintenance", json.dumps(
+                {"base_mean_size": float(base_mean_size),
+                 "drift": [float(x) for x in np.asarray(drift)]}))
+
+    def maintenance_state(self) -> Optional[Tuple[float, np.ndarray]]:
+        raw = self._meta("maintenance")
+        if raw is None:
+            return None
+        d = json.loads(raw)
+        return (float(d["base_mean_size"]),
+                np.asarray(d["drift"], np.float32))
+
     def set_partitions(self, asset_ids: np.ndarray, partition_ids: np.ndarray,
                        centroids: np.ndarray, csizes: np.ndarray):
         """Atomically install a new clustering generation (paper: the
@@ -383,11 +404,17 @@ class VectorStore:
         `with_vecs=False` skips reading the float32 blobs entirely -- an
         int8 frame fault then moves 4x fewer bytes off disk, which is the
         point of the code tier (the rare code-less row is backfilled by
-        the caller via vectors_for)."""
+        the caller via vectors_for).
+
+        Packing is vectorized (one blob join + bulk scatter per column
+        rather than per-row numpy calls): the Python-side cost of a fault
+        is a few list comprehensions, so nearly all of the fetch is
+        C-level SQLite + numpy work that releases the GIL -- which is
+        what lets the pager's read-ahead stage() actually overlap a
+        concurrent scan instead of fighting it for the interpreter."""
         m = len(pids)
         want = [int(p) for p in pids]
-        slot = {p: j for j, p in enumerate(want)}
-        assert len(slot) == m, "duplicate partition ids in one fetch"
+        assert len(set(want)) == m, "duplicate partition ids in one fetch"
         vecs = np.zeros((m, p_max, self.dim), np.float32) if with_vecs \
             else None
         ids = np.full((m, p_max), -1, np.int32)
@@ -407,33 +434,58 @@ class VectorStore:
         if with_attrs and self.n_attr:
             cols += ", " + ", ".join(f"a.a{i}" for i in range(self.n_attr))
             joins += " LEFT JOIN attributes a ON a.asset_id = v.asset_id"
-        fill = np.zeros(m, np.int64)
         for s in range(0, m, _PARAM_CHUNK):
             chunk = want[s:s + _PARAM_CHUNK]
             ph = ", ".join("?" * len(chunk))
-            for row in self.db.execute(
-                    f"SELECT {cols} FROM vectors v{joins}"
-                    f" WHERE v.partition_id IN ({ph})"
-                    f" ORDER BY v.partition_id, v.asset_id", chunk):
-                j = slot[row[0]]
-                i = fill[j]
-                if i >= p_max:
-                    raise ValueError(
-                        f"partition {row[0]} overflows frame p_max={p_max}")
-                ids[j, i] = row[1]
-                valid[j, i] = True
-                c = 2
-                if with_vecs:
-                    vecs[j, i] = np.frombuffer(row[c], np.float32)
-                    c += 1
-                if with_codes:
-                    if row[c] is not None:
-                        codes[j, i] = np.frombuffer(row[c], np.int8)
-                        code_ok[j, i] = True
-                    c += 1
-                if with_attrs and self.n_attr and row[c] is not None:
-                    attrs[j, i] = row[c:c + self.n_attr]
-                fill[j] = i + 1
+            rows = self.db.execute(
+                f"SELECT {cols} FROM vectors v{joins}"
+                f" WHERE v.partition_id IN ({ph})"
+                f" ORDER BY v.partition_id, v.asset_id", chunk).fetchall()
+            if not rows:
+                continue
+            nr = len(rows)
+            pid_col = np.fromiter((r[0] for r in rows), np.int64, nr)
+            # pid -> block row: slot of chunk[t] is s + t, recovered by a
+            # searchsorted over the sorted chunk (no per-row dict lookups)
+            sidx = np.argsort(np.asarray(chunk, np.int64), kind="stable")
+            j_col = (s + sidx)[np.searchsorted(
+                np.asarray(chunk, np.int64)[sidx], pid_col)]
+            # slot within the partition: rows arrive grouped by pid (the
+            # ORDER BY), so it is the offset from each group's start
+            starts = np.flatnonzero(
+                np.r_[True, pid_col[1:] != pid_col[:-1]])
+            counts = np.diff(np.r_[starts, nr])
+            if counts.max() > p_max:
+                big = pid_col[starts[np.argmax(counts)]]
+                raise ValueError(
+                    f"partition {big} overflows frame p_max={p_max}")
+            i_col = np.arange(nr) - np.repeat(starts, counts)
+            ids[j_col, i_col] = np.fromiter(
+                (r[1] for r in rows), np.int64, nr)
+            valid[j_col, i_col] = True
+            c = 2
+            if with_vecs:
+                vecs[j_col, i_col] = np.frombuffer(
+                    b"".join(r[c] for r in rows),
+                    np.float32).reshape(nr, self.dim)
+                c += 1
+            if with_codes:
+                blobs = [r[c] for r in rows]
+                ok = np.fromiter((b is not None for b in blobs), bool, nr)
+                sel = np.flatnonzero(ok)
+                if len(sel):
+                    codes[j_col[sel], i_col[sel]] = np.frombuffer(
+                        b"".join(blobs[t] for t in sel),
+                        np.int8).reshape(len(sel), self.dim)
+                    code_ok[j_col[sel], i_col[sel]] = True
+                c += 1
+            if with_attrs and self.n_attr:
+                arows = [r[c:c + self.n_attr] for r in rows]
+                sel = np.flatnonzero(np.fromiter(
+                    (a[0] is not None for a in arows), bool, nr))
+                if len(sel):
+                    attrs[j_col[sel], i_col[sel]] = np.asarray(
+                        [arows[t] for t in sel], np.float32)
         return PartitionBlocks(vecs=vecs, ids=ids, valid=valid, codes=codes,
                                code_ok=code_ok, attrs=attrs)
 

@@ -452,3 +452,73 @@ def test_split_reuses_empty_slot_before_appending(tmp_path):
     # the first split does not grow k
     assert splits[0].pids[-1] == victim
     assert int(np.asarray(eng.index.counts)[victim]) > 0
+
+
+# -- bin-packing merge partners + durable maintenance signals (PR 6) ---------
+
+
+def test_choose_merge_partner_best_fit_deterministic():
+    """Best-fit bin packing: the partner minimizing post-merge slack wins
+    even when a much closer centroid exists; ties break by distance then
+    pid, so the plan is a pure function of (centroids, counts)."""
+    cents = np.zeros((4, 2), np.float32)
+    cents[0] = (0, 0)                     # victim, count 10
+    cents[1] = (100, 0)                   # far but fullest: slack 10
+    cents[2] = (1, 0)                     # nearest but small: slack 75
+    cents[3] = (50, 0)                    # empty -- never a partner
+    counts = np.array([10, 80, 15, 0])
+    bar = 100.0
+    assert maintenance.choose_merge_partner(cents, counts, 0, bar) == 1
+    # exclusion (partner already claimed this cycle) falls back to the
+    # next-best fit, not to None
+    assert maintenance.choose_merge_partner(
+        cents, counts, 0, bar, exclude=(1,)) == 2
+    # equal slack -> centroid distance decides
+    counts_tie = np.array([10, 15, 15, 0])
+    assert maintenance.choose_merge_partner(
+        cents, counts_tie, 0, bar) == 2
+    # equal slack AND distance -> lowest pid (full determinism)
+    cents_sym = cents.copy()
+    cents_sym[1] = (1, 0)
+    cents_sym[2] = (-1, 0)
+    assert maintenance.choose_merge_partner(
+        cents_sym, counts_tie, 0, bar) == 1
+    # nothing fits under the split bar -> no merge at all
+    assert maintenance.choose_merge_partner(
+        cents, np.array([10, 95, 95, 0]), 0, bar) is None
+
+
+def test_recover_restores_maintenance_signals(tmp_path):
+    """PR 5 leftover: drift / base_mean_size now live in the SQLite meta
+    table, so a restart resumes maintenance with the signals it had --
+    the restored engine's work queue is identical, not amnesiac."""
+    eng, X = _engine(tmp_path, name="persist.db", delta_cap=64)
+    c0 = np.asarray(eng.index.centroids)[0]
+    nv = (c0 + np.random.default_rng(1).normal(size=(50, 16)) * 0.5
+          ).astype(np.float32)
+    eng.upsert(np.arange(9100, 9150), nv)
+    # flush through the scheduler quantum (the durable flush -- the
+    # legacy force="flush" path is device-only and defers durability)
+    r = eng.maintain_step()
+    assert r is not None and r.action == "flush"
+    assert int(np.asarray(eng.index.delta.valid).sum()) == 0
+    drift0 = np.asarray(eng.index.drift).copy()
+    base0 = float(np.asarray(eng.index.base_mean_size))
+    assert drift0.max() > 0               # the flush accumulated drift
+    eng.store.db.commit()
+
+    eng2 = MicroNN(dim=16, path=str(tmp_path / "persist.db"),
+                   config=eng.config)
+    eng2.recover()
+    np.testing.assert_allclose(np.asarray(eng2.index.drift), drift0,
+                               rtol=1e-6)
+    assert float(np.asarray(eng2.index.base_mean_size)) == \
+        pytest.approx(base0)
+    # restored signals drive the same maintenance decisions
+    q1 = [(it.action, it.pids) for it in eng.monitor.work_queue(eng.index)]
+    q2 = [(it.action, it.pids)
+          for it in eng2.monitor.work_queue(eng2.index)]
+    assert q1 == q2
+    # and maintenance actually runs on the recovered engine
+    eng2.maintain(until_idle=True)
+    assert eng2.scheduler.pending() == []

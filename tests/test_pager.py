@@ -564,6 +564,111 @@ def test_fault_scatter_donates_pool_no_extra_allocation(tmp_path):
     cache.unpin(pinned)
 
 
+# -- read-ahead staging (PR 6 double-buffered faults) ------------------------
+
+
+def test_stage_then_fault_consumes_staged_blocks(tmp_path, monkeypatch):
+    """stage() pre-packs host blocks; the following fault must consume
+    them WITHOUT another SQL round-trip and land the exact same bytes a
+    cold fault would have."""
+    st, _, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 4)
+    cache.stage([2, 5])
+    assert set(cache._staged) == {2, 5}
+    # the staged fault must never touch SQLite again
+    def boom(*a, **k):                       # pragma: no cover
+        raise AssertionError("staged fault re-fetched from the store")
+    monkeypatch.setattr(st, "scan_partitions", boom)
+    f = cache.fault([2, 5])
+    assert not cache._staged                 # consumed, not copied
+    assert (cache.hits, cache.misses) == (0, 2)   # still counted as misses
+    monkeypatch.undo()
+    for j, pid in zip(f, (2, 5)):
+        ids, vecs = st.scan_partition(pid)
+        m = len(ids)
+        np.testing.assert_array_equal(
+            np.asarray(cache.ids_pool)[int(j), :m], ids)
+        np.testing.assert_array_equal(
+            np.asarray(cache.payload_pool)[int(j), :m], vecs)
+    cache.unpin(f)
+
+
+def test_stage_skips_resident_partitions(tmp_path):
+    st, _, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 4)
+    cache.unpin(cache.fault([1]))
+    cache.stage([1, 4])                      # 1 is already resident
+    assert set(cache._staged) == {4}
+    # staging is advisory: faulting a staged pid is still a miss, a
+    # resident one is still a hit
+    cache.unpin(cache.fault([1, 4]))
+    assert (cache.hits, cache.misses) == (1, 2)
+
+
+def test_invalidate_drops_staged_blocks(tmp_path):
+    """A durable write between stage() and fault() must not let the next
+    fault consume the stale pre-write bytes."""
+    st, X, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 4)
+    cache.stage([1])
+    victim = int(np.nonzero(assign == 1)[0][0])
+    newv = np.full((1, 8), 42.0, np.float32)
+    st.upsert([victim], newv, partition_id=1)
+    cache.invalidate([1])                    # write path always invalidates
+    assert 1 not in cache._staged
+    f = cache.fault([1])
+    j = int(f[0])
+    row = np.nonzero(np.asarray(cache.ids_pool)[j] == victim)[0][0]
+    np.testing.assert_array_equal(np.asarray(cache.payload_pool)[j, row],
+                                  newv[0])
+    cache.unpin(f)
+
+
+def test_invalidate_mid_fetch_discards_whole_stage_batch(tmp_path):
+    """The generation counter: an invalidate that lands while a stage()
+    is off-lock inside its SQLite fetch must poison the ENTIRE in-flight
+    batch -- the stage read a mix of pre- and post-write rows and cannot
+    tell which, so nothing it fetched may be inserted."""
+    st, _, assign = _mk_store(tmp_path)
+    cache = _mk_cache(st, assign, 4)
+    real = st.scan_partitions
+
+    def racing(*a, **k):
+        blocks = real(*a, **k)
+        cache.invalidate([9])        # a writer commits mid-fetch
+        return blocks
+
+    st.scan_partitions = racing
+    try:
+        cache.stage([3, 4])
+    finally:
+        st.scan_partitions = real
+    assert not cache._staged         # whole batch dropped, not just pid 9
+    cache.unpin(cache.fault([3, 4]))     # next fault re-reads fresh bytes
+    assert cache.misses == 2
+
+
+def test_paged_exact_prefetch_on_off_bitwise(paged_pair):
+    """Engine-level pin: the read-ahead pipeline must never change what
+    an exact paged scan computes -- ids AND scores bit-identical with
+    prefetch forced off."""
+    from repro.core import executor
+    _, pag, X = paged_pair
+    q = X[:4]
+    before = executor.PAGED_PREFETCH
+    try:
+        executor.PAGED_PREFETCH = False
+        r_off = pag.search(q, k=10, exact=True)
+        executor.PAGED_PREFETCH = True
+        r_on = pag.search(q, k=10, exact=True)
+    finally:
+        executor.PAGED_PREFETCH = before
+    np.testing.assert_array_equal(np.asarray(r_off.ids),
+                                  np.asarray(r_on.ids))
+    np.testing.assert_array_equal(np.asarray(r_off.scores),
+                                  np.asarray(r_on.scores))
+
+
 # -- dtype-aware tile padding (satellite) ------------------------------------
 
 
