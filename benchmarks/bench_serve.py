@@ -1,0 +1,265 @@
+"""Serving front door under mixed load (PR 7): sustained QPS vs recall
+with cross-request micro-batching, concurrent session writes, and the
+daemonized maintenance scheduler.
+
+Two arms over byte-identical copies of one built database, driving the
+SAME fixed workload (T closed-loop reader threads x R single-vector
+queries each, plus a writer thread applying W deterministic re-upsert
+sessions, so both arms end in the same durable state):
+
+  * `solo`    -- FrontDoor(window_s=0, max_batch_rows=1), daemon off:
+                 the one-request-at-a-time baseline.
+  * `coalesce`-- FrontDoor(window_s=2ms), maintenance daemon on: the
+                 PR's serving configuration.
+
+The writer re-upserts EXISTING rows with their original vectors -- real
+write-path work (sessions, delta, flush quanta) whose net semantic
+effect is nil, so exact ground truth computed once up front stays valid
+and recall under churn is measurable.
+
+Gates (scripts/ci.sh --smoke regression surface, persisted to
+BENCH_serve.json):
+
+  * parity_batched_vs_solo -- a forced fused call returns every caller
+    bit-identical ids+scores vs direct engine.query().
+  * daemon_off_equivalence -- both arms' engines end with identical row
+    sets and order-insensitive-identical exact search results: the
+    daemon changes WHEN maintenance runs, never what is stored.
+  * qps_floor / p99_bound  -- the coalescing arm sustains a minimum
+    throughput with bounded tail latency.
+  * coalescing_uplift      -- coalescing beats the one-at-a-time
+    baseline's sustained QPS.
+  * recall_under_load      -- answers served mid-churn keep recall@k
+    against the exact oracle.
+"""
+import glob
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.query import Q
+from repro.core.types import IVFConfig
+from repro.serving import FrontDoor
+from repro.storage import MicroNN
+
+from .common import emit, _recall, write_json
+
+DIM = 32
+K = 10
+N_PROBE = 8
+
+
+def _clustered(n, seed, scale=5.0, n_clusters=24):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, DIM)).astype(np.float32) * scale
+    asg = rng.integers(0, n_clusters, n)
+    return (centers[asg]
+            + rng.normal(size=(n, DIM)).astype(np.float32))
+
+
+def _copy_db(src, dst):
+    for f in glob.glob(src + "*"):
+        shutil.copy(f, dst + f[len(src):])
+
+
+def _run_arm(eng, probes, gt, *, window_s, max_batch_rows, maintenance,
+             threads, write_batches, write_rows, X):
+    """Drive the fixed mixed workload through one front-door config;
+    returns (qps, recall, frontdoor stats)."""
+    per = len(probes) // threads
+    hits = np.zeros((len(probes), K), np.int64)
+    errors = []
+
+    with FrontDoor(eng, window_s=window_s, max_batch_rows=max_batch_rows,
+                   maintenance=maintenance) as fd:
+        # warm both compile paths (solo bucket + fused bucket) so the
+        # measured phase times serving, not tracing
+        fd.query(probes[0], Q.knn(k=K, n_probe=N_PROBE), timeout=120)
+        warm = [fd.submit(probes[i % len(probes)],
+                          Q.knn(k=K, n_probe=N_PROBE))
+                for i in range(max(2, min(threads, max_batch_rows)))]
+        [f.result(120) for f in warm]
+
+        def reader(t):
+            spec = Q.knn(k=K, n_probe=N_PROBE)
+            try:
+                for i in range(t * per, (t + 1) * per):
+                    rs = fd.query(probes[i], spec, timeout=120)
+                    hits[i] = np.asarray(rs.ids)[0]
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        def writer():
+            try:
+                rng = np.random.default_rng(7)
+                for _ in range(write_batches):
+                    ids = rng.choice(len(X), size=write_rows, replace=False)
+                    with eng.session() as s:
+                        s.upsert(ids.astype(np.int64), X[ids])
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        ts = [threading.Thread(target=reader, args=(t,))
+              for t in range(threads)] + [threading.Thread(target=writer)]
+        t0 = time.perf_counter()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        wall = time.perf_counter() - t0
+        assert not errors, errors
+        fd.drain(120)
+        stats = fd.stats()
+
+    eng.maintain(until_idle=True)
+    n_served = threads * per
+    qps = n_served / wall
+    rec = _recall(hits[:n_served], gt[:n_served], K)
+    return qps, rec, stats
+
+
+def serve(smoke: bool = False):
+    n = 1500 if smoke else 6000
+    threads = 6
+    per = 30 if smoke else 120           # requests per reader thread
+    write_batches = 4 if smoke else 12
+    write_rows = 64
+    n_q = threads * per
+
+    cfg = IVFConfig(dim=DIM, target_partition_size=64, kmeans_iters=12,
+                    delta_capacity=256)
+    X = _clustered(n, seed=5)
+    probes = _clustered(n_q, seed=6, scale=5.0)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ref = os.path.join(tmp, "ref.db")
+        builder = MicroNN(dim=DIM, path=ref, config=cfg)
+        builder.upsert(np.arange(n), X)
+        builder.build()
+        gt = np.asarray(builder.query(probes, Q.exact(k=K)).ids)
+        builder.store.close()
+
+        # byte-identical starting state for both arms
+        solo_db = os.path.join(tmp, "solo.db")
+        coal_db = os.path.join(tmp, "coal.db")
+        _copy_db(ref, solo_db)
+        _copy_db(ref, coal_db)
+        eng_solo = MicroNN(dim=DIM, path=solo_db, config=cfg)
+        eng_solo.recover()
+        eng_coal = MicroNN(dim=DIM, path=coal_db, config=cfg)
+        eng_coal.recover()
+
+        common = dict(threads=threads, write_batches=write_batches,
+                      write_rows=write_rows, X=X)
+        qps_solo, rec_solo, st_solo = _run_arm(
+            eng_solo, probes, gt, window_s=0.0, max_batch_rows=1,
+            maintenance=False, **common)
+        qps_coal, rec_coal, st_coal = _run_arm(
+            eng_coal, probes, gt, window_s=0.002, max_batch_rows=64,
+            maintenance=True, **common)
+
+        emit("serve_solo_qps", 1e6 / qps_solo,
+             f"qps={qps_solo:.1f};recall={rec_solo:.3f};"
+             f"p99_ms={st_solo['total_p99_ms']:.1f}")
+        emit("serve_coalesce_qps", 1e6 / qps_coal,
+             f"qps={qps_coal:.1f};recall={rec_coal:.3f};"
+             f"p99_ms={st_coal['total_p99_ms']:.1f};"
+             f"occupancy={st_coal['batch_occupancy']:.2f};"
+             f"coalesced={st_coal['coalesced']}")
+
+        # -- gate: forced fused call == solo query(), bitwise ------------
+        spec = Q.knn(k=K, n_probe=N_PROBE)
+        refs = [eng_coal.query(probes[i], spec) for i in range(7)]
+        with FrontDoor(eng_coal, window_s=0.3, max_batch_rows=64) as fd:
+            futs = [fd.submit(probes[i], spec) for i in range(7)]
+            outs = [f.result(120) for f in futs]
+            fused = fd.stats()["coalesced"]
+        parity = fused >= 2 and all(
+            np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+            and np.array_equal(np.asarray(a.scores), np.asarray(b.scores))
+            for a, b in zip(outs, refs))
+
+        # -- gate: daemon on/off leaves identical durable state ----------
+        ids_a, _, vecs_a = eng_solo.store.all_rows()
+        ids_b, _, vecs_b = eng_coal.store.all_rows()
+        oa, ob = np.argsort(ids_a), np.argsort(ids_b)
+        rows_equal = (np.array_equal(ids_a[oa], ids_b[ob])
+                      and np.array_equal(vecs_a[oa], vecs_b[ob]))
+        ex_a = eng_solo.query(probes[:8], Q.exact(k=K))
+        ex_b = eng_coal.query(probes[:8], Q.exact(k=K))
+        exact_equal = (np.array_equal(np.sort(np.asarray(ex_a.ids), 1),
+                                      np.sort(np.asarray(ex_b.ids), 1))
+                       and np.array_equal(
+                           np.sort(np.asarray(ex_a.scores), 1),
+                           np.sort(np.asarray(ex_b.scores), 1)))
+        daemon_equiv = rows_equal and exact_equal
+
+        eng_solo.store.close()
+        eng_coal.store.close()
+
+    qps_floor = 5.0
+    p99_bound_ms = 4000.0 if smoke else 2000.0
+    uplift_min = 1.02
+    recall_floor = 0.80
+
+    write_json(
+        "serve",
+        metrics={"qps_solo": qps_solo, "qps_coalesce": qps_coal,
+                 "recall_solo": rec_solo, "recall_coalesce": rec_coal,
+                 "p99_solo_ms": st_solo["total_p99_ms"],
+                 "p99_coalesce_ms": st_coal["total_p99_ms"],
+                 "queue_wait_p50_ms": st_coal["queue_wait_p50_ms"],
+                 "batch_occupancy": st_coal["batch_occupancy"],
+                 "coalesced": st_coal["coalesced"],
+                 "batches": st_coal["batches"]},
+        config={"n": n, "dim": DIM, "k": K, "n_probe": N_PROBE,
+                "threads": threads, "per_thread": per,
+                "write_batches": write_batches, "write_rows": write_rows,
+                "smoke": smoke},
+        gates={
+            "parity_batched_vs_solo": (
+                parity, f"{fused} fused callers bit-identical to solo"),
+            "daemon_off_equivalence": (
+                daemon_equiv,
+                f"rows_equal={rows_equal} exact_equal={exact_equal}"),
+            "qps_floor": (qps_coal >= qps_floor,
+                          f"{qps_coal:.1f} >= {qps_floor}"),
+            "p99_bound": (st_coal["total_p99_ms"] <= p99_bound_ms,
+                          f"{st_coal['total_p99_ms']:.1f}ms"
+                          f" <= {p99_bound_ms}ms"),
+            "coalescing_uplift": (
+                qps_coal >= uplift_min * qps_solo,
+                f"{qps_coal:.1f} >= {uplift_min} * {qps_solo:.1f}"),
+            "recall_under_load": (
+                min(rec_solo, rec_coal) >= recall_floor,
+                f"min({rec_solo:.3f}, {rec_coal:.3f})"
+                f" >= {recall_floor}"),
+        })
+
+    # acceptance pins (scripts/ci.sh --smoke regression gate)
+    assert parity, "fused micro-batch diverged from solo query()"
+    assert daemon_equiv, "daemon on/off reached different durable states"
+    assert qps_coal >= qps_floor, f"QPS {qps_coal:.1f} < {qps_floor}"
+    assert st_coal["total_p99_ms"] <= p99_bound_ms, \
+        f"p99 {st_coal['total_p99_ms']:.1f}ms > {p99_bound_ms}ms"
+    assert qps_coal >= uplift_min * qps_solo, \
+        f"coalescing uplift {qps_coal / max(qps_solo, 1e-9):.2f}x" \
+        f" < {uplift_min}x"
+    assert min(rec_solo, rec_coal) >= recall_floor, \
+        f"recall under load below {recall_floor}"
+
+
+def main(smoke: bool = False):
+    serve(smoke=smoke)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + acceptance asserts (CI gate)")
+    main(**vars(ap.parse_args()))

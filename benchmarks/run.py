@@ -26,7 +26,7 @@ def main() -> None:
 
     from . import (bench_build, bench_e2e, bench_executor, bench_hybrid,
                    bench_minibatch, bench_mqo, bench_paged, bench_quantized,
-                   bench_roofline, bench_updates)
+                   bench_roofline, bench_serve, bench_updates)
     sections = {
         "fig4_5_e2e": bench_e2e.main,
         "fig6_build": bench_build.main,
@@ -38,6 +38,7 @@ def main() -> None:
         "executor": bench_executor.main,
         "quantized": bench_quantized.main,
         "paged": bench_paged.main,
+        "serve": bench_serve.main,
     }
     print("name,us_per_call,derived")
     failed = 0

@@ -23,9 +23,14 @@ python -m benchmarks.bench_paged --smoke
 # <= 0.25x the bytes of the legacy rebuild-at-50%-growth policy, with
 # every step bounded by max_rows_per_step
 python -m benchmarks.bench_updates --smoke
+# regression gate for the serving front door (PR 7): coalesced
+# micro-batches bit-identical to solo query(), daemon-on/off durable
+# equivalence, sustained-QPS floor + uplift over the one-at-a-time
+# baseline, and a p99 tail-latency bound under mixed read/write load
+python -m benchmarks.bench_serve --smoke
 # validate the artifacts: each bench must have written a well-formed
 # BENCH_*.json and no recorded acceptance gate may have failed
-python scripts/check_bench_json.py "$BENCH_JSON_DIR" quantized paged updates
+python scripts/check_bench_json.py "$BENCH_JSON_DIR" quantized paged updates serve
 # public-API smoke: the quickstart exercises QuerySpec/ResultSet, write
 # sessions, hybrid queries and recovery end-to-end -- API breakage fails
 # the gate before the unit tests even start

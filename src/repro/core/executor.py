@@ -751,6 +751,27 @@ def run(index, queries: jax.Array, spec: QuerySpec, *,
     return ResultSet.of(res, spec)
 
 
+def run_coalesced(index, chunks, spec: QuerySpec):
+    """Batch-split entry point for cross-request micro-batching (the
+    serving front door): concatenate per-caller query chunks that share
+    one spec, execute a SINGLE bucketed `run()` -- one fused scan, one
+    jit cache entry per (Q_bucket, spec) -- and split the ResultSet back
+    into per-caller slices.
+
+    Bit-parity contract: per-query scores are elementwise (each query
+    masks onto its OWN probe set inside the shared union), so a caller's
+    slice of the coalesced result carries exactly the ids + scores its
+    solo `run()` would have returned -- pinned by tests/test_frontdoor
+    and the gather-vs-union parity tests."""
+    assert len(chunks) >= 1, "run_coalesced needs at least one chunk"
+    qs = [jnp.atleast_2d(jnp.asarray(c, jnp.float32)) for c in chunks]
+    sizes = [int(q.shape[0]) for q in qs]
+    if len(qs) == 1:
+        return [run(index, qs[0], spec)]
+    rs = run(index, jnp.concatenate(qs, axis=0), spec)
+    return rs.split(sizes)
+
+
 def search(
     index: IVFIndex,
     queries: jax.Array,

@@ -29,7 +29,7 @@ never see plans.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterator, Optional, Tuple, Union
+from typing import Any, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -252,6 +252,30 @@ class ResultSet:
         if self._np is None:
             self._np = (np.asarray(self.ids), np.asarray(self.scores))
         return self._np
+
+    def split(self, sizes: Sequence[int]) -> List["ResultSet"]:
+        """Partition the batch dimension back into per-caller ResultSets
+        -- the inverse of the serving front door's request coalescing
+        (executor.run_coalesced concatenates per-caller chunks into one
+        fused scan; this slices the [Q, k] result rows back out). Purely
+        mechanical: each slice carries the same spec, its own row range
+        of ids/scores, and its rows of any gathered attrs, so a
+        coalesced execution followed by split() is indistinguishable
+        from per-caller solo runs. `sizes` must sum to num_queries."""
+        sizes = [int(s) for s in sizes]
+        assert all(s >= 1 for s in sizes), sizes
+        assert sum(sizes) == self.num_queries, \
+            f"split sizes {sizes} != batch {self.num_queries}"
+        out: List[ResultSet] = []
+        off = 0
+        for s in sizes:
+            out.append(ResultSet(
+                ids=self.ids[off:off + s], scores=self.scores[off:off + s],
+                spec=self.spec,
+                attrs=None if self.attrs is None
+                else self.attrs[off:off + s]))
+            off += s
+        return out
 
     def merge(self, other: "ResultSet", k: Optional[int] = None
               ) -> "ResultSet":

@@ -1,0 +1,353 @@
+"""Concurrent serving front door for MicroNN: admission queue,
+cross-request micro-batching, and daemonized maintenance (PR 7).
+
+The paper's production story is an *embedded engine under live traffic*
+-- queries, upserts, and index maintenance interleaving continuously --
+but a bare `MicroNN` serves everything synchronously on the caller's
+thread. `FrontDoor` is the serving subsystem in front of it:
+
+    eng = MicroNN(dim=64, path="db.sqlite")
+    ...build...
+    with FrontDoor(eng, maintenance=True) as fd:
+        rs = fd.query(vec, Q.knn(k=10))        # any thread, blocking
+        fut = fd.submit(vec, Q.knn(k=10))      # ... or async via Future
+
+Three mechanisms:
+
+  * **Admission queue.** Caller threads `submit()` `(vecs, spec)` pairs
+    and block on a `concurrent.futures.Future`; a single dispatcher
+    thread owns execution, so query-side work is naturally serialized
+    without locking the engine.
+
+  * **Cross-request micro-batching.** Within a bounded window
+    (`window_s`, default 2 ms) the dispatcher drains the queue and
+    coalesces SAME-spec requests into one fused call through
+    `MicroNN.query_batched` -> `executor.run_coalesced`: the chunks
+    concatenate, the existing Q-bucketed executor pads to the bucket
+    and runs ONE fused scan, and `ResultSet.split` hands each caller
+    its own row range back. Because the frozen `QuerySpec` IS the jit
+    cache key (PR 4), equal specs from N different callers provably
+    compile once per Q-bucket -- and per-query scores are elementwise
+    (each query masks onto its own probe set inside the shared union),
+    so every caller's slice is bit-identical (ids + scores) to the solo
+    `query()` it replaced. Distinct specs in one drain each get their
+    own fused call; `max_batch_rows` caps a fused call's row count so
+    bucket padding stays bounded.
+
+  * **Daemonized maintenance.** `maintenance=True` promotes the
+    engine's `MaintenanceScheduler` to a background daemon thread that
+    drains bounded quanta whenever this queue is idle, each quantum
+    under the engine-level write mutex (`MicroNN.lock`) -- so
+    sessions/upserts/repairs serialize while reads proceed against
+    consistent snapshots (immutable resident index pytrees; the RLock'd
+    pager with deferred pinned-frame invalidation; the store's WAL
+    snapshot read connection).
+
+Consistency note: when the engine's store has no snapshot read
+connection (`:memory:` databases are private to one connection), the
+dispatcher executes paged and attr-gathering queries under the engine
+write mutex instead -- a read on the shared connection could otherwise
+observe another thread's open transaction mid-flight. File-backed
+stores keep reads fully unserialized.
+
+Observability: per-request latency accounting -- queue wait vs execute,
+p50/p99, batch occupancy, coalesced/batched counters -- surfaces
+through `FrontDoor.stats()` and uniformly through `MicroNN.stats()`
+(zeroed `empty_stats()` when no front door is attached).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.query import QuerySpec, ResultSet
+
+# latency reservoir size: p50/p99 are computed over the most recent
+# samples, enough for a stable p99 without unbounded growth
+_RESERVOIR = 4096
+
+_STAT_KEYS = ("queued", "inflight", "submitted", "completed", "failed",
+              "coalesced", "batches", "solo", "batch_occupancy",
+              "queue_wait_p50_ms", "queue_wait_p99_ms",
+              "execute_p50_ms", "execute_p99_ms",
+              "total_p50_ms", "total_p99_ms")
+
+
+def empty_stats() -> Dict:
+    """The zeroed counter dict MicroNN.stats() reports when no front
+    door is attached -- same keys as FrontDoor.stats(), so dashboards
+    and tests read one uniform shape in every mode."""
+    return {k: 0 if k not in
+            ("batch_occupancy",) else 0.0 for k in _STAT_KEYS}
+
+
+def _percentile(samples: Sequence[float], q: float) -> float:
+    if not samples:
+        return 0.0
+    s = sorted(samples)
+    i = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+    return s[i]
+
+
+@dataclasses.dataclass
+class _Request:
+    """One admitted query: the caller blocks on `future`."""
+
+    vecs: np.ndarray          # [q, d] float32 (q >= 1 rows)
+    spec: QuerySpec
+    future: Future
+    t_submit: float           # monotonic seconds at admission
+    n: int                    # rows (q)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontDoorConfig:
+    """Serving knobs (all times in seconds).
+
+    window_s         micro-batching window: after the first request is
+                     seen the dispatcher waits up to this long for more
+                     same-spec arrivals before executing (0 disables
+                     coalescing -- every request executes alone, the
+                     one-request-at-a-time baseline arm of bench_serve)
+    max_batch_rows   cap on one fused call's total query rows; a drain
+                     larger than this executes in several fused calls
+                     (bounds bucket padding and per-call latency)
+    maintenance      start the engine's maintenance scheduler as a
+                     daemon thread, draining quanta while this queue is
+                     idle
+    daemon_interval_s  the daemon's poll cadence
+    """
+
+    window_s: float = 0.002
+    max_batch_rows: int = 64
+    maintenance: bool = False
+    daemon_interval_s: float = 0.002
+
+
+class FrontDoor:
+    """Admission queue + micro-batching dispatcher over one MicroNN."""
+
+    def __init__(self, engine, config: Optional[FrontDoorConfig] = None,
+                 **overrides):
+        """`FrontDoor(eng)` with defaults, or pass a FrontDoorConfig /
+        kwarg overrides (`FrontDoor(eng, window_s=0.005,
+        maintenance=True)`)."""
+        cfg = config or FrontDoorConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.engine = engine
+        self.config = cfg
+        self._queue: deque = deque()
+        self._cv = threading.Condition()
+        self._stop = False
+        self._closed = False
+        self._inflight = 0          # requests handed to the executor
+        # -- counters (guarded by _mu; hot-path increments only) -----------
+        self._mu = threading.Lock()
+        self._submitted = 0
+        self._completed = 0
+        self._failed = 0
+        self._coalesced = 0         # requests that shared a fused call
+        self._batches = 0           # fused calls with >= 2 requests
+        self._solo = 0              # single-request executions
+        self._occupancy = 0         # sum of requests over fused calls
+        self._wait_s: deque = deque(maxlen=_RESERVOIR)
+        self._exec_s: deque = deque(maxlen=_RESERVOIR)
+        self._total_s: deque = deque(maxlen=_RESERVOIR)
+        # -- threads -------------------------------------------------------
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="micronn-frontdoor",
+            daemon=True)
+        self._dispatcher.start()
+        self._owns_daemon = False
+        if cfg.maintenance:
+            engine.scheduler.start_daemon(
+                idle=self.queue_idle, interval_s=cfg.daemon_interval_s)
+            self._owns_daemon = True
+        engine._frontdoor = self
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, vecs: np.ndarray,
+               spec: Optional[QuerySpec] = None) -> Future:
+        """Admit one query (a [q, d] batch or a single [d] vector) and
+        return a Future resolving to its ResultSet. Thread-safe."""
+        spec = QuerySpec() if spec is None else spec
+        v = np.atleast_2d(np.asarray(vecs, np.float32))
+        req = _Request(vecs=v, spec=spec, future=Future(),
+                       t_submit=time.monotonic(), n=int(v.shape[0]))
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("FrontDoor is closed")
+            self._queue.append(req)
+            self._submitted += 1
+            self._cv.notify_all()
+        return req.future
+
+    def query(self, vecs: np.ndarray, spec: Optional[QuerySpec] = None,
+              timeout: Optional[float] = None) -> ResultSet:
+        """Blocking submit: the drop-in replacement for
+        `engine.query(vecs, spec)` from any caller thread."""
+        return self.submit(vecs, spec).result(timeout)
+
+    def queue_idle(self) -> bool:
+        """True when no request is queued or executing -- the daemon
+        scheduler's back-pressure probe."""
+        return not self._queue and self._inflight == 0
+
+    def drain(self, timeout: float = 10.0):
+        """Block until every admitted request has completed (test/bench
+        quiesce point)."""
+        deadline = time.monotonic() + timeout
+        while not self.queue_idle():
+            if time.monotonic() > deadline:
+                raise TimeoutError("front door did not drain in time")
+            time.sleep(0.0005)
+
+    def close(self, timeout: float = 10.0):
+        """Stop the dispatcher (after finishing queued requests) and the
+        maintenance daemon this front door started. Idempotent."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._stop = True
+            self._cv.notify_all()
+        self._dispatcher.join(timeout)
+        if self._owns_daemon:
+            self.engine.scheduler.stop_daemon()
+        if getattr(self.engine, "_frontdoor", None) is self:
+            self.engine._frontdoor = None
+
+    def __enter__(self) -> "FrontDoor":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+    # -- dispatcher ----------------------------------------------------------
+    def _dispatch_loop(self):
+        cfg = self.config
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait()
+                if self._stop and not self._queue:
+                    return
+                # micro-batching window: wait (woken per arrival) until
+                # the window closes or enough rows queued for a full call
+                if cfg.window_s > 0:
+                    deadline = time.monotonic() + cfg.window_s
+                    while not self._stop:
+                        if sum(r.n for r in self._queue) \
+                                >= cfg.max_batch_rows:
+                            break
+                        left = deadline - time.monotonic()
+                        if left <= 0:
+                            break
+                        self._cv.wait(left)
+                batch = list(self._queue)
+                self._queue.clear()
+                self._inflight += len(batch)
+            # group by spec, preserving arrival order within each group;
+            # the spec is frozen + hashable (it IS the jit cache key), so
+            # the grouping key and the compile key coincide by design
+            groups: Dict[QuerySpec, List[_Request]] = {}
+            for r in batch:
+                groups.setdefault(r.spec, []).append(r)
+            for spec, reqs in groups.items():
+                # cap fused-call size: chunk the group at max_batch_rows
+                start, rows = 0, 0
+                for i, r in enumerate(reqs):
+                    if rows and rows + r.n > cfg.max_batch_rows:
+                        self._execute(spec, reqs[start:i])
+                        start, rows = i, 0
+                    rows += r.n
+                self._execute(spec, reqs[start:])
+
+    def _exec_guard(self, spec: QuerySpec):
+        """Serialize execution against writers ONLY when reads cannot be
+        snapshot-isolated: an in-memory store shares one connection, so
+        paged faults / attr gathers there must not observe an open write
+        transaction. File-backed stores read through the WAL snapshot
+        connection and need no lock."""
+        eng = self.engine
+        if not eng.store.snapshot_reads and (eng.paged or spec.gather_attrs):
+            return eng.lock
+        return contextlib.nullcontext()
+
+    def _execute(self, spec: QuerySpec, reqs: List[_Request]):
+        if not reqs:
+            return
+        t0 = time.monotonic()
+        try:
+            with self._exec_guard(spec):
+                if len(reqs) == 1:
+                    results = [self.engine.query(reqs[0].vecs, spec)]
+                else:
+                    results = self.engine.query_batched(
+                        [r.vecs for r in reqs], spec)
+        except BaseException as e:  # noqa: BLE001 -- fail the callers
+            t1 = time.monotonic()
+            with self._mu:
+                self._failed += len(reqs)
+            for r in reqs:
+                r.future.set_exception(e)
+            with self._cv:
+                self._inflight -= len(reqs)
+            return
+        t1 = time.monotonic()
+        with self._mu:
+            if len(reqs) > 1:
+                self._batches += 1
+                self._coalesced += len(reqs)
+                self._occupancy += len(reqs)
+            else:
+                self._solo += 1
+            for r in reqs:
+                self._completed += 1
+                self._wait_s.append(t0 - r.t_submit)
+                self._exec_s.append(t1 - t0)
+                self._total_s.append(t1 - r.t_submit)
+        for r, rs in zip(reqs, results):
+            r.future.set_result(rs)
+        with self._cv:
+            self._inflight -= len(reqs)
+        # queue just (possibly) went idle: let the maintenance daemon
+        # use the gap rather than waiting out its poll interval
+        if self._owns_daemon and self.queue_idle():
+            self.engine.scheduler.kick()
+
+    # -- observability --------------------------------------------------------
+    def stats(self) -> Dict:
+        """Serving counters + latency percentiles (ms). Keys match
+        empty_stats(); MicroNN.stats() embeds this dict under
+        "frontdoor", so resident and paged engines report uniformly."""
+        with self._mu:
+            wait = list(self._wait_s)
+            ex = list(self._exec_s)
+            tot = list(self._total_s)
+            out = {
+                "queued": len(self._queue),
+                "inflight": self._inflight,
+                "submitted": self._submitted,
+                "completed": self._completed,
+                "failed": self._failed,
+                "coalesced": self._coalesced,
+                "batches": self._batches,
+                "solo": self._solo,
+                "batch_occupancy": (self._occupancy / self._batches)
+                if self._batches else 0.0,
+            }
+        for name, samples in (("queue_wait", wait), ("execute", ex),
+                              ("total", tot)):
+            out[f"{name}_p50_ms"] = _percentile(samples, 0.50) * 1e3
+            out[f"{name}_p99_ms"] = _percentile(samples, 0.99) * 1e3
+        return out

@@ -30,6 +30,7 @@ delta-encode batch, and one deferred pager-invalidation pass at commit.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
 from typing import List, Optional, Tuple
 
@@ -49,6 +50,22 @@ from ..core.types import (INVALID_ID, DeltaStore, IVFConfig, IVFIndex,
 from . import pager
 from .scheduler import MaintenanceScheduler, StepReport
 from .store import VectorStore
+
+
+def _locked(fn):
+    """Run the method under the engine's write mutex (`self.lock`).
+
+    Applied to every durable-state writer so a session commit, a direct
+    upsert/delete, and a maintenance quantum (foreground or daemon) can
+    never interleave partial transactions; re-entrant, so locked paths
+    may nest (upsert -> maintain(force="flush"))."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self.lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
 
 
 class WriteSession:
@@ -131,6 +148,17 @@ class MicroNN:
         `max_rows_per_step` bounds the incremental maintenance
         scheduler's work quantum: one `maintain_step()` (or one step of
         `maintain(until_idle=True)`) touches at most this many rows."""
+        # Engine-level write mutex (PR 7): EVERY durable-state writer --
+        # upsert/delete, session commits, build/recover, and each
+        # maintenance quantum (hand-cranked or the scheduler daemon's) --
+        # holds this RLock, so concurrent writers can no longer
+        # interleave partial transactions on the shared
+        # check_same_thread=False connection. Reads never take it:
+        # resident queries execute against an immutable index-pytree
+        # snapshot, paged queries go through the RLock'd PartitionCache
+        # and the store's WAL snapshot read connection. Re-entrant
+        # because write paths nest (upsert -> maintain(force="flush")).
+        self.lock = threading.RLock()
         self.store = VectorStore(path, dim=dim, n_attr=n_attr)
         cfg = config or IVFConfig(dim=dim)
         if quantize is not None:
@@ -147,12 +175,16 @@ class MicroNN:
         self.maintenance_log = []
         self.scheduler = MaintenanceScheduler(
             self, max_rows_per_step=max_rows_per_step)
+        # serving front door attached to this engine (if any) -- set by
+        # serving.frontdoor.FrontDoor so stats() can surface its counters
+        self._frontdoor = None
 
     @property
     def paged(self) -> bool:
         return self.memory_budget_mb is not None
 
     # -- lifecycle -----------------------------------------------------------
+    @_locked
     def build(self):
         """Initial clustering from the durable tier (mini-batch k-means
         streams from SQLite -- never the full dataset in memory). With
@@ -176,6 +208,7 @@ class MicroNN:
         self._persist_maintenance_state()
         self._refresh_stats()
 
+    @_locked
     def recover(self):
         """Rebuild device state from SQLite after a crash/restart."""
         if self.paged:
@@ -266,6 +299,7 @@ class MicroNN:
         self._refresh_stats()
 
     # -- writes ---------------------------------------------------------------
+    @_locked
     def upsert(self, ids: np.ndarray, vecs: np.ndarray,
                attrs: Optional[np.ndarray] = None):
         n_attr = self.store.n_attr
@@ -305,6 +339,7 @@ class MicroNN:
         # them deterministically; their durable codes are first written by
         # the next build()/rebuild's _persist_codes.
 
+    @_locked
     def delete(self, ids: np.ndarray):
         old_main = None
         if self.paged and self.index is not None:
@@ -331,6 +366,7 @@ class MicroNN:
         pager-invalidation pass when the `with` block exits cleanly."""
         return WriteSession(self)
 
+    @_locked
     def _commit_session(self, ops: List[tuple]):
         """Apply a session's coalesced net effect atomically (single
         writer, paper §3.6). Per-id last-write-wins: an upsert overridden
@@ -423,6 +459,7 @@ class MicroNN:
                     jnp.asarray(attrs[s:e]))
 
     # -- maintenance ----------------------------------------------------------
+    @_locked
     def maintain(self, force: Optional[str] = None,
                  until_idle: bool = False,
                  max_steps: Optional[int] = None):
@@ -471,6 +508,7 @@ class MicroNN:
             return "rebuild"
         return None
 
+    @_locked
     def maintain_step(self) -> Optional[StepReport]:
         """One bounded maintenance quantum (<= max_rows_per_step rows):
         pops the highest-priority item off the monitor's work queue and
@@ -712,23 +750,55 @@ class MicroNN:
         both arms still spec-routed) -- and, being frozen + hashable, it
         is also the executor's jit cache key: issuing an equal spec twice
         never retraces. Returns a ResultSet (ids + exact-f32 scores,
-        optional gathered attrs when `spec.with_attrs()`)."""
-        assert self.index is not None, "build() or recover() first"
+        optional gathered attrs when `spec.with_attrs()`).
+
+        Thread-safety: queries never take the engine write mutex. The
+        index reference is read ONCE -- resident repairs rebind
+        `self.index` to a new immutable pytree, so an in-flight query
+        keeps scanning its consistent snapshot; paged execution is
+        protected by the PartitionCache RLock (deferred pinned-frame
+        invalidation) and the store's WAL snapshot read connection."""
+        idx, optimizer = self.index, self.optimizer
+        assert idx is not None, "build() or recover() first"
         spec = QuerySpec() if spec is None else spec
         q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+        spec = self._resolve_spec(idx, optimizer, spec)
+        res = executor.run(idx, q, spec)
+        if spec.gather_attrs and self.store.n_attr:
+            res.attrs = self._gather_attrs(np.asarray(res.ids))
+        return res
+
+    def query_batched(self, chunks: List[np.ndarray],
+                      spec: Optional[QuerySpec] = None) -> List[ResultSet]:
+        """Cross-request micro-batch entry point (the serving front
+        door's fused call): per-caller query chunks sharing ONE spec are
+        concatenated, executed as a single bucketed run -- one fused
+        scan, one jit cache entry -- and split back into per-caller
+        ResultSets. Results are bit-identical to issuing each chunk
+        through `query()` alone: the spec resolves once (the optimizer
+        rewrite depends only on spec + stats, not on the query vectors)
+        and `executor.run_coalesced` slices the batch mechanically."""
+        idx, optimizer = self.index, self.optimizer
+        assert idx is not None, "build() or recover() first"
+        spec = QuerySpec() if spec is None else spec
+        spec = self._resolve_spec(idx, optimizer, spec)
+        results = executor.run_coalesced(idx, chunks, spec)
+        if spec.gather_attrs and self.store.n_attr:
+            for rs in results:
+                rs.attrs = self._gather_attrs(np.asarray(rs.ids))
+        return results
+
+    def _resolve_spec(self, idx, optimizer, spec: QuerySpec) -> QuerySpec:
+        """Resolve the hybrid pre/post choice (and/or size the prefilter
+        cap) from the selectivity estimate (paper Eqs. 1-3). Opaque
+        hand-written filter callables skip the optimizer (nothing to
+        estimate) and run as fused post-filters."""
         if not self.paged and spec.predicate_tree is not None \
                 and spec.kind == "ann" \
                 and (spec.hybrid == "auto"
                      or (spec.hybrid == "pre" and spec.cap is None)):
-            # resolve the pre/post choice (and/or size the prefilter cap)
-            # from the selectivity estimate (paper Eqs. 1-3). Opaque
-            # hand-written filter callables skip the optimizer (nothing
-            # to estimate) and run as fused post-filters.
-            spec, _ = self.optimizer.plan_spec(self.index, spec)
-        res = executor.run(self.index, q, spec)
-        if spec.gather_attrs and self.store.n_attr:
-            res.attrs = self._gather_attrs(np.asarray(res.ids))
-        return res
+            spec, _ = optimizer.plan_spec(idx, spec)
+        return spec
 
     def search(self, queries: np.ndarray, k: int = 100, n_probe: int = 8,
                predicate: Optional[Node] = None, exact: bool = False,
@@ -777,11 +847,27 @@ class MicroNN:
         `resident_bytes` is what search must keep in memory (f32 tier +
         codes when quantized); in paged mode it is the preallocated frame
         pool (<= the byte budget by construction). Benchmarks and tests
-        assert on these counters instead of re-deriving them."""
+        assert on these counters instead of re-deriving them.
+
+        PR 7 adds the serving/maintenance-concurrency counters, uniform
+        in both modes: `scheduler_depth` (pending maintenance work
+        items), `daemon_alive`/`daemon_steps` (the background scheduler
+        thread's liveness and executed quanta), and `frontdoor` (the
+        attached serving front door's admission/coalescing/latency
+        counters -- queued, coalesced, batches, p50/p99 queue-wait and
+        execute times; zeroed when no front door is attached)."""
+        from ..serving import frontdoor as frontdoor_mod
+        sched = self.scheduler
+        fd = self._frontdoor
         out = {"paged": self.paged, "hits": 0, "misses": 0, "evictions": 0,
                "resident_bytes": 0, "budget_bytes": None,
                "trace_count": executor.trace_count(),
-               "compile_cache_size": executor.compile_cache_size()}
+               "compile_cache_size": executor.compile_cache_size(),
+               "scheduler_depth": sched.queue_depth(),
+               "daemon_alive": sched.daemon_alive,
+               "daemon_steps": sched.daemon_steps,
+               "frontdoor": fd.stats() if fd is not None
+               else frontdoor_mod.empty_stats()}
         idx = self.index
         if idx is None:
             return out

@@ -30,11 +30,28 @@ asset id and identical under either state), which
 tests/test_maintenance.py pins. Repair write I/O therefore scales with
 the touched neighbourhood; the full generation swap remains the rebuild
 path's mechanism.
+
+Daemon mode (PR 7): `start_daemon()` promotes the scheduler from a
+hand-cranked `maintain_step()` to a real background thread that drains
+one bounded quantum at a time whenever the serving queue is idle. Every
+step runs under the engine's write mutex (`MicroNN.lock`), so daemon
+repairs serialize with sessions/upserts while reads keep executing
+against consistent snapshots (resident queries hold an immutable index
+pytree; paged queries go through the RLock'd PartitionCache with
+deferred pinned-frame invalidation, and their SQLite reads ride the
+store's WAL snapshot connection). The `idle` callable -- typically the
+serving front door's queue-empty probe -- is advisory back-pressure:
+the daemon yields to foreground traffic but still makes progress on a
+saturated queue every `interval_s * _BUSY_BACKOFF` seconds, so
+maintenance can be starved only briefly, never forever. Liveness +
+progress surface through MicroNN.stats() (`daemon_alive`,
+`daemon_steps`, `scheduler_depth`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import threading
+from typing import Callable, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -53,6 +70,13 @@ class MaintenanceScheduler:
     `MicroNN.maintain_step()` / `maintain(until_idle=True)` are the
     public entry points."""
 
+    # idle-queue wait multiplier: with nothing to do the daemon sleeps
+    # interval_s * _IDLE_BACKOFF between polls (woken early by kick())
+    _IDLE_BACKOFF = 8
+    # busy-queue starvation bound: after this many consecutive yields to
+    # foreground traffic the daemon takes one quantum anyway
+    _BUSY_BACKOFF = 64
+
     def __init__(self, engine, max_rows_per_step: int = 4096):
         assert max_rows_per_step >= 1, max_rows_per_step
         self.engine = engine
@@ -62,12 +86,25 @@ class MaintenanceScheduler:
         # progress, so changed row contents (or a remapped clustering
         # after rebuild/recover) can never be masked by a stale key
         self._skip: set = set()
+        # -- daemon state ----------------------------------------------------
+        self._daemon: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._idle_fn: Optional[Callable[[], bool]] = None
+        self._interval_s = 0.002
+        self.daemon_steps = 0          # quanta the daemon has executed
+        self.daemon_errors = 0         # exceptions swallowed by the loop
+        self.last_daemon_error: Optional[BaseException] = None
 
     def pending(self) -> List:
         """The monitor's current prioritized queue (fresh every call)."""
         if self.engine.index is None:
             return []
         return self.engine.monitor.work_queue(self.engine.index)
+
+    def queue_depth(self) -> int:
+        """Number of pending maintenance work items (stats probe)."""
+        return len(self.pending())
 
     def step(self) -> Optional[StepReport]:
         """Execute the highest-priority actionable work item; None when
@@ -102,3 +139,83 @@ class MaintenanceScheduler:
                 break
             out.append(r)
         return out
+
+    # -- daemon thread (PR 7) -------------------------------------------------
+    @property
+    def daemon_alive(self) -> bool:
+        return self._daemon is not None and self._daemon.is_alive()
+
+    def start_daemon(self, idle: Optional[Callable[[], bool]] = None,
+                     interval_s: float = 0.002):
+        """Promote the scheduler to a background daemon thread.
+
+        `idle` is an advisory back-pressure probe (return False while
+        foreground requests are queued -- the serving front door passes
+        its queue-empty check); `interval_s` is the poll cadence. Each
+        quantum runs under `engine.lock`, so daemon repairs serialize
+        with every other writer. Idempotent while alive."""
+        if self.daemon_alive:
+            return
+        self._idle_fn = idle
+        self._interval_s = float(interval_s)
+        self._stop.clear()
+        self._wake.clear()
+        self._daemon = threading.Thread(
+            target=self._daemon_loop, name="micronn-maintenance",
+            daemon=True)
+        self._daemon.start()
+
+    def stop_daemon(self, timeout: Optional[float] = 10.0):
+        """Stop the daemon and join it (no-op when not running). The
+        in-flight quantum, if any, completes -- a step is never killed
+        halfway through its durability ordering."""
+        if self._daemon is None:
+            return
+        self._stop.set()
+        self._wake.set()
+        self._daemon.join(timeout)
+        assert not self._daemon.is_alive(), \
+            "maintenance daemon failed to stop within timeout"
+        self._daemon = None
+
+    def kick(self):
+        """Wake the daemon early (a writer just enqueued likely work, or
+        the serving queue went idle)."""
+        self._wake.set()
+
+    def _daemon_loop(self):
+        """while alive: when the serving queue is idle (or foreground
+        pressure has persisted past the starvation bound), take the
+        engine write mutex and drain ONE bounded quantum; back off when
+        the work queue is empty. Exceptions are recorded and swallowed
+        -- a failed repair plan must not kill maintenance forever."""
+        yielded = 0
+        while not self._stop.is_set():
+            if self.engine.index is None:
+                self._wake.wait(self._interval_s * self._IDLE_BACKOFF)
+                self._wake.clear()
+                continue
+            busy = self._idle_fn is not None and not self._idle_fn()
+            if busy and yielded < self._BUSY_BACKOFF:
+                yielded += 1
+                self._wake.wait(self._interval_s)
+                self._wake.clear()
+                continue
+            yielded = 0
+            report = None
+            try:
+                with self.engine.lock:
+                    if not self._stop.is_set():
+                        report = self.step()
+                        if report is not None:
+                            # count inside the mutex: an observer that
+                            # sees the queue drained also sees the step
+                            self.daemon_steps += 1
+            except BaseException as e:  # noqa: BLE001 -- daemon must live
+                self.daemon_errors += 1
+                self.last_daemon_error = e
+            if report is None:
+                # queue idle (or errored): poll again after a beat,
+                # woken early by kick()
+                self._wake.wait(self._interval_s * self._IDLE_BACKOFF)
+                self._wake.clear()

@@ -70,6 +70,35 @@ class VectorStore:
         self.db.execute("PRAGMA synchronous=NORMAL")
         self._txn_depth = 0
         self._create()
+        # Snapshot read connection (PR 7, file-backed stores only): the
+        # query path's reads -- pager faults, rerank gathers, attribute
+        # gathers -- go through a SECOND connection so WAL gives them
+        # snapshot isolation: a reader never observes another thread's
+        # open write transaction mid-flight, only committed states (and
+        # every committed prefix is servable by the crash-ordering
+        # contract: codes land before row moves). Writes, and any read
+        # that must see the surrounding transaction, stay on `self.db`.
+        # An in-memory database is private to its connection, so
+        # `:memory:` stores keep single-connection semantics -- callers
+        # needing concurrent readers (the serving front door checks
+        # `snapshot_reads`) should use a file path.
+        self._rdb: Optional[sqlite3.Connection] = None
+        if path != ":memory:":
+            self._rdb = sqlite3.connect(path, isolation_level=None,
+                                        check_same_thread=False)
+
+    @property
+    def snapshot_reads(self) -> bool:
+        """True when reads run on a dedicated WAL snapshot connection
+        (file-backed store) -- the precondition for serving queries
+        concurrently with writers without engine-level serialization."""
+        return self._rdb is not None
+
+    @property
+    def read_db(self) -> sqlite3.Connection:
+        """Connection for query-path reads: the WAL snapshot connection
+        when available, else the write connection."""
+        return self._rdb if self._rdb is not None else self.db
 
     @contextlib.contextmanager
     def transaction(self):
@@ -195,7 +224,7 @@ class VectorStore:
         for s in range(0, len(want), _PARAM_CHUNK):
             chunk = want[s:s + _PARAM_CHUNK]
             ph = ", ".join("?" * len(chunk))
-            for row in self.db.execute(
+            for row in self.read_db.execute(
                     f"SELECT asset_id, {cols} FROM {table}"
                     f" WHERE asset_id IN ({ph})", chunk):
                 for j in pos[row[0]]:
@@ -376,10 +405,11 @@ class VectorStore:
 
     # -- reads (snapshot-consistent within one connection txn) --------------
     def count(self) -> int:
-        return self.db.execute("SELECT COUNT(*) FROM vectors").fetchone()[0]
+        return self.read_db.execute(
+            "SELECT COUNT(*) FROM vectors").fetchone()[0]
 
     def scan_partition(self, pid: int) -> Tuple[np.ndarray, np.ndarray]:
-        rows = self.db.execute(
+        rows = self.read_db.execute(
             "SELECT asset_id, vec FROM vectors WHERE partition_id=?"
             " ORDER BY asset_id", (pid,)).fetchall()
         if not rows:
@@ -437,7 +467,7 @@ class VectorStore:
         for s in range(0, m, _PARAM_CHUNK):
             chunk = want[s:s + _PARAM_CHUNK]
             ph = ", ".join("?" * len(chunk))
-            rows = self.db.execute(
+            rows = self.read_db.execute(
                 f"SELECT {cols} FROM vectors v{joins}"
                 f" WHERE v.partition_id IN ({ph})"
                 f" ORDER BY v.partition_id, v.asset_id", chunk).fetchall()
@@ -513,7 +543,7 @@ class VectorStore:
     def partition_counts(self, k: int) -> np.ndarray:
         """[k] live main-tier rows per partition (one GROUP BY scan)."""
         out = np.zeros((k,), np.int64)
-        for p, c in self.db.execute(
+        for p, c in self.read_db.execute(
                 "SELECT partition_id, COUNT(*) FROM vectors"
                 " WHERE partition_id >= 0 GROUP BY partition_id"):
             if 0 <= p < k:
@@ -521,7 +551,7 @@ class VectorStore:
         return out
 
     def centroids(self) -> Tuple[np.ndarray, np.ndarray]:
-        rows = self.db.execute(
+        rows = self.read_db.execute(
             "SELECT vec, csize FROM centroids WHERE generation=?"
             " ORDER BY partition_id", (self.generation,)).fetchall()
         if not rows:
@@ -580,4 +610,6 @@ class VectorStore:
         return out
 
     def close(self):
+        if self._rdb is not None:
+            self._rdb.close()
         self.db.close()

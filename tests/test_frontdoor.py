@@ -1,0 +1,307 @@
+"""Serving front door (PR 7): admission queue, cross-request
+micro-batching, daemonized maintenance.
+
+Pins the subsystem's two load-bearing guarantees:
+
+  * **Coalescing is invisible.** N callers sharing a QuerySpec get
+    results bit-identical (ids + scores) to the solo `query()` each
+    replaced, on resident and paged engines and on both backends -- and
+    the fused call compiles exactly once per Q-bucket (trace_count).
+
+  * **Concurrency is safe.** Queries, session upserts, and daemon
+    maintenance interleaving from many threads leave the engine in a
+    state bit-identical to a single-threaded twin that applied the same
+    writes (store row-set equality + exact-search parity), and the
+    front door answers post-quiesce queries bit-identically to direct
+    `query()` on the same engine.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import executor
+from repro.core.query import Q, QuerySpec
+from repro.core.types import IVFConfig
+from repro.serving import FrontDoor, FrontDoorConfig, empty_stats
+from repro.storage import MicroNN
+from tests.conftest import clustered_data
+
+DIM = 16
+
+
+def _mk_engine(tmp_path, name, paged=False, n=900, seed=3):
+    X = clustered_data(n=n, dim=DIM, seed=seed)
+    eng = MicroNN(dim=DIM, path=str(tmp_path / f"{name}.db"),
+                  config=IVFConfig(dim=DIM, target_partition_size=50,
+                                   kmeans_iters=10, delta_capacity=64),
+                  memory_budget_mb=0.05 if paged else None)
+    eng.upsert(np.arange(n), X)
+    eng.build()
+    return eng, X
+
+
+# -- coalescing: bit-parity + one compile per bucket -------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["resident", "paged"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_coalesced_bit_parity_vs_solo(tmp_path, paged, backend):
+    """Acceptance: N callers sharing a spec inside one window get the
+    same ids+scores the solo query() path returns, bitwise, resident
+    and paged, both backends."""
+    eng, X = _mk_engine(tmp_path, f"par-{backend}", paged=paged)
+    spec = Q.knn(k=10, n_probe=6).backend(backend)
+    queries = X[:7] + 0.01  # 7 single-row callers -> one fused Q=7 call
+    solo = [eng.query(queries[i], spec) for i in range(len(queries))]
+    with FrontDoor(eng, window_s=0.2, max_batch_rows=64) as fd:
+        futs = [fd.submit(queries[i], spec) for i in range(len(queries))]
+        outs = [f.result(30) for f in futs]
+        st = fd.stats()
+    assert st["completed"] == len(queries)
+    assert st["coalesced"] >= 2, "window should have fused the callers"
+    for rs, ref in zip(outs, solo):
+        np.testing.assert_array_equal(np.asarray(rs.ids),
+                                      np.asarray(ref.ids))
+        np.testing.assert_array_equal(np.asarray(rs.scores),
+                                      np.asarray(ref.scores))
+    eng.store.close()
+
+
+def test_equal_specs_compile_once_per_bucket(tmp_path):
+    """Acceptance: equal specs from N threads hit ONE jit entry -- the
+    fused call traces once for its Q-bucket, and a second identical
+    wave retraces nothing."""
+    eng, X = _mk_engine(tmp_path, "trace")
+    # a spec signature no other test in this process has run, so the
+    # plan cache is provably cold for it
+    spec = QuerySpec(k=9, n_probe=7)
+    with FrontDoor(eng, window_s=0.3, max_batch_rows=64) as fd:
+        before = executor.trace_count()
+        futs = [fd.submit(X[i], spec) for i in range(6)]
+        [f.result(30) for f in futs]
+        st = fd.stats()
+        assert st["batches"] == 1 and st["coalesced"] == 6, st
+        assert executor.trace_count() == before + 1, \
+            "one fused call == one trace for its Q-bucket"
+        # same spec, same bucket, new callers: pure cache hit
+        futs = [fd.submit(X[6 + i], spec) for i in range(6)]
+        [f.result(30) for f in futs]
+        assert executor.trace_count() == before + 1
+    eng.store.close()
+
+
+def test_distinct_specs_split_into_separate_calls(tmp_path):
+    """Different specs in one drain never share a fused call (the spec
+    IS the compile key), and each group still returns per-caller."""
+    eng, X = _mk_engine(tmp_path, "groups")
+    s1, s2 = Q.knn(k=5, n_probe=4), Q.knn(k=3, n_probe=4)
+    with FrontDoor(eng, window_s=0.2) as fd:
+        futs = [fd.submit(X[i], s1 if i % 2 else s2) for i in range(6)]
+        outs = [f.result(30) for f in futs]
+    for i, rs in enumerate(outs):
+        assert np.asarray(rs.ids).shape == (1, 5 if i % 2 else 3)
+    eng.store.close()
+
+
+def test_window_zero_disables_coalescing(tmp_path):
+    """window_s=0 is the one-request-at-a-time baseline: everything
+    executes solo (this is bench_serve's control arm)."""
+    eng, X = _mk_engine(tmp_path, "nowin")
+    with FrontDoor(eng, window_s=0.0, max_batch_rows=1) as fd:
+        futs = [fd.submit(X[i], Q.knn(k=5)) for i in range(5)]
+        [f.result(30) for f in futs]
+        fd.drain()
+        st = fd.stats()
+    assert st["batches"] == 0 and st["coalesced"] == 0
+    assert st["solo"] == 5 and st["completed"] == 5
+    eng.store.close()
+
+
+def test_max_batch_rows_caps_fused_calls(tmp_path):
+    """A drain bigger than max_batch_rows splits into several fused
+    calls instead of one oversized bucket."""
+    eng, X = _mk_engine(tmp_path, "cap")
+    spec = Q.knn(k=4, n_probe=4)
+    with FrontDoor(eng, window_s=0.3, max_batch_rows=4) as fd:
+        futs = [fd.submit(X[i], spec) for i in range(10)]
+        outs = [f.result(30) for f in futs]
+        st = fd.stats()
+    assert st["completed"] == 10
+    assert st["batches"] >= 2, "10 rows over a 4-row cap must split"
+    for i, rs in enumerate(outs):
+        ref = eng.query(X[i], spec)
+        np.testing.assert_array_equal(np.asarray(rs.ids),
+                                      np.asarray(ref.ids))
+    eng.store.close()
+
+
+# -- interleave stress: queries + session upserts + daemon maintenance -------
+
+
+def _stress(tmp_path, paged):
+    n0, extra, writers_batches = 600, 40, 4
+    eng, X = _mk_engine(tmp_path, f"stress-{int(paged)}", paged=paged,
+                        n=n0, seed=13)
+    new = clustered_data(n=writers_batches * extra, dim=DIM, seed=14)
+    errors = []
+
+    with FrontDoor(eng, window_s=0.002, maintenance=True) as fd:
+        def writer():
+            try:
+                for b in range(writers_batches):
+                    lo = b * extra
+                    with eng.session() as s:
+                        s.upsert(np.arange(n0 + lo, n0 + lo + extra),
+                                 new[lo:lo + extra])
+                        if b % 2:  # churn: re-upsert a few existing ids
+                            s.upsert(np.arange(5), new[lo:lo + 5])
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        def reader(seed):
+            rng = np.random.default_rng(seed)
+            try:
+                for _ in range(8):
+                    q = rng.normal(size=(DIM,)).astype(np.float32)
+                    rs = fd.query(q, Q.knn(k=5, n_probe=4), timeout=60)
+                    assert np.asarray(rs.ids).shape == (1, 5)
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer)] + \
+            [threading.Thread(target=reader, args=(100 + i,))
+             for i in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+        assert not errors, errors
+        fd.drain(60)
+        assert eng.scheduler.daemon_alive
+
+        # quiesce, then pin: front-door answers == direct query() on the
+        # same engine state, bitwise
+        eng.maintain(until_idle=True)
+        probe = X[:6] + 0.02
+        spec = Q.knn(k=8, n_probe=6)
+        via_fd = fd.query(probe, spec, timeout=60)
+        direct = eng.query(probe, spec)
+        np.testing.assert_array_equal(np.asarray(via_fd.ids),
+                                      np.asarray(direct.ids))
+        np.testing.assert_array_equal(np.asarray(via_fd.scores),
+                                      np.asarray(direct.scores))
+
+    # single-threaded twin: same initial build, same writes, no
+    # concurrency -- the durable row set must match exactly
+    twin, _ = _mk_engine(tmp_path, f"twin-{int(paged)}", paged=paged,
+                         n=n0, seed=13)
+    for b in range(writers_batches):
+        lo = b * extra
+        with twin.session() as s:
+            s.upsert(np.arange(n0 + lo, n0 + lo + extra),
+                     new[lo:lo + extra])
+            if b % 2:
+                s.upsert(np.arange(5), new[lo:lo + 5])
+    twin.maintain(until_idle=True)
+
+    ids_a, _, vecs_a = eng.store.all_rows()
+    ids_b, _, vecs_b = twin.store.all_rows()
+    oa, ob = np.argsort(ids_a), np.argsort(ids_b)
+    np.testing.assert_array_equal(ids_a[oa], ids_b[ob])
+    np.testing.assert_array_equal(vecs_a[oa], vecs_b[ob])
+
+    # exact search is partition-assignment independent: same rows ->
+    # same neighbors regardless of how maintenance carved partitions
+    ra = eng.query(X[:4], Q.exact(k=5))
+    rb = twin.query(X[:4], Q.exact(k=5))
+    np.testing.assert_array_equal(np.sort(np.asarray(ra.ids), axis=1),
+                                  np.sort(np.asarray(rb.ids), axis=1))
+    np.testing.assert_array_equal(np.sort(np.asarray(ra.scores), axis=1),
+                                  np.sort(np.asarray(rb.scores), axis=1))
+    assert not eng.scheduler.daemon_alive, "close() must stop the daemon"
+    assert eng.scheduler.daemon_errors == 0, eng.scheduler.last_daemon_error
+    eng.store.close()
+    twin.store.close()
+
+
+def test_interleave_stress_resident(tmp_path):
+    """Satellite: queries + session upserts + daemon maintenance from
+    many threads, resident mode, pinned against a single-threaded
+    oracle."""
+    _stress(tmp_path, paged=False)
+
+
+def test_interleave_stress_paged(tmp_path):
+    """Same stress over the disk-resident paged engine: reads ride the
+    WAL snapshot connection + pager RLock while writers hold
+    MicroNN.lock."""
+    _stress(tmp_path, paged=True)
+
+
+# -- daemonized maintenance ---------------------------------------------------
+
+
+def test_daemon_drains_maintenance_queue(tmp_path):
+    """The daemon alone (no hand-cranked maintain()) drains pending
+    work in bounded quanta under the engine write mutex."""
+    eng, X = _mk_engine(tmp_path, "daemon", n=500, seed=21)
+    eng.upsert(np.arange(500, 560),
+               clustered_data(n=60, dim=DIM, seed=22))
+    with FrontDoor(eng, maintenance=True, daemon_interval_s=0.001) as fd:
+        assert eng.scheduler.daemon_alive
+        deadline = 30.0
+        import time
+        t0 = time.monotonic()
+        while eng.scheduler.queue_depth() > 0:
+            assert time.monotonic() - t0 < deadline, \
+                eng.stats()["scheduler_depth"]
+            time.sleep(0.005)
+        assert eng.scheduler.daemon_steps >= 1
+        assert eng.scheduler.daemon_errors == 0
+        # the drained index still answers through the front door
+        rs = fd.query(X[0], Q.knn(k=5), timeout=60)
+        assert np.asarray(rs.ids).shape == (1, 5)
+    assert not eng.scheduler.daemon_alive
+    eng.store.close()
+
+
+# -- uniform observability ----------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["resident", "paged"])
+def test_stats_uniform_frontdoor_keys(tmp_path, paged):
+    """Satellite: stats() reports scheduler depth, daemon liveness, and
+    the front-door counter block with identical keys in both modes --
+    zeroed via empty_stats() when no front door is attached."""
+    eng, X = _mk_engine(tmp_path, f"stats-{int(paged)}", paged=paged,
+                        n=400, seed=31)
+    s = eng.stats()
+    for key in ("scheduler_depth", "daemon_alive", "daemon_steps",
+                "frontdoor"):
+        assert key in s, key
+    assert s["frontdoor"] == empty_stats()
+    with FrontDoor(eng, window_s=0.05, maintenance=True) as fd:
+        futs = [fd.submit(X[i], Q.knn(k=3)) for i in range(4)]
+        [f.result(30) for f in futs]
+        fd.drain()
+        live = eng.stats()
+        assert live["daemon_alive"]
+        fs = live["frontdoor"]
+        assert sorted(fs) == sorted(empty_stats())
+        assert fs["submitted"] == 4 and fs["completed"] == 4
+        assert fs["total_p50_ms"] > 0 and fs["queue_wait_p99_ms"] >= 0
+    assert eng.stats()["frontdoor"] == empty_stats(), \
+        "close() detaches the front door from stats()"
+    eng.store.close()
+
+
+def test_close_is_idempotent_and_rejects_new_work(tmp_path):
+    eng, X = _mk_engine(tmp_path, "close", n=300, seed=41)
+    fd = FrontDoor(eng)
+    fd.query(X[0], Q.knn(k=3), timeout=60)
+    fd.close()
+    fd.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        fd.submit(X[0], Q.knn(k=3))
+    eng.store.close()
