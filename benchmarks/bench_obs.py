@@ -1,0 +1,264 @@
+"""Observability overhead + reconciliation gate (PR 8).
+
+The obs layer's contract is "free when off, exact when on":
+
+  * **free when off** -- the tracing hooks threaded through executor.run,
+    the pager fault path, and the engine planner must cost <= 3% on the
+    hot query paths when no trace is active. Two arms, measured
+    interleaved (enabled/disabled alternate every call, min per mode so
+    scheduler noise and frequency drift cancel):
+
+      - `exec_xla_q1`: the resident fused scan (n=8000, d=64, k=100,
+        n_probe=8, backend=xla, Q=1) through search.ann_search ->
+        executor.run -- the repo's headline single-query latency;
+      - `paged`: engine.query on the disk-resident path (int8 scan tier
+        under a small frame-pool budget) -- the fault-path hooks.
+
+    Baseline is `trace.set_enabled(False)` (the global kill-switch: every
+    hook short-circuits on one module-bool test); the measured arm is the
+    normal configuration, enabled=True with NO active trace (the default
+    production hot path: one thread-local lookup per hook site).
+
+  * **exact when on** -- an explain() trace's counters must reconcile
+    exactly against the independent registry-backed component counters:
+    pager_fault hits/misses/bytes_read == the pager stats() delta across
+    the traced call, and the scan span's `compiled` == the executor
+    trace-count delta. Asserted here on both engine modes, gated into
+    BENCH_obs.json.
+
+  * **zero allocation when off** -- untraced queries must not create new
+    registry series (registry.size() stable).
+
+`--smoke` shrinks shapes for scripts/ci.sh; the full run uses the
+bench_executor exec_xla_q1 shape verbatim.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import executor, ivf, search
+from repro.core.query import Q
+from repro.core.types import IVFConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.storage import MicroNN
+
+from .common import emit, write_json
+
+OVERHEAD_TOL = 1.03     # tracing-off hot path <= 3% over the kill-switch
+
+
+def _block(out):
+    import jax
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def _ab_arm(fn, *, calls: int, repeats: int = 3):
+    """Paired-difference A/B: each pair runs one enabled and one
+    disabled call back-to-back (order alternating per pair so neither
+    mode is systematically first), GC off. Adjacent calls share the
+    same noise regime (CPU frequency, cache state, allocator phase),
+    so the per-pair (on - off) delta isolates the systematic hook cost
+    while min- or median-of-independent-samples would need the two
+    modes' noise floors to coincide -- which on a shared CI container
+    they don't. The second call of a pair is also systematically
+    faster (warmer caches), which shifts on-first deltas up and
+    off-first deltas down by the same slot bias; the combined delta
+    population is therefore BImodal and its median lands anywhere
+    between the modes, so the estimator takes the median per pair
+    ORDER and averages the two -- the slot bias cancels exactly.
+
+    The whole A/B runs `repeats` independent windows and keeps the
+    smallest debiased delta: the hook cost is systematic (present in
+    every window), so the min over windows is the tightest upper bound
+    on it, while a bursty window (another container stealing the core
+    mid-run) can only inflate a delta, never deflate all of them.
+    Returns (on_us, off_us) with on_us = off + debiased delta.
+    """
+    import gc
+    best_delta, best_off = None, None
+    gc_was = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(repeats):
+            d_on_first, d_off_first, offs = [], [], []
+            for pair in range(calls // 2):
+                on_first = pair % 2 == 0
+                order = (True, False) if on_first else (False, True)
+                t = {}
+                for flag in order:
+                    obs_trace.set_enabled(flag)
+                    t0 = time.perf_counter()
+                    _block(fn())
+                    t[flag] = (time.perf_counter() - t0) * 1e6
+                (d_on_first if on_first else d_off_first).append(
+                    t[True] - t[False])
+                offs.append(t[False])
+            delta = (float(np.median(d_on_first))
+                     + float(np.median(d_off_first))) / 2.0
+            if best_delta is None or delta < best_delta:
+                best_delta, best_off = delta, float(np.median(offs))
+    finally:
+        obs_trace.set_enabled(True)
+        if gc_was:
+            gc.enable()
+    return best_off + best_delta, best_off
+
+
+def main(smoke: bool = False):
+    metrics, gates = {}, {}
+    rng = np.random.default_rng(0)
+    if smoke:
+        n, d, n_centers, k, n_probe = 3000, 64, 24, 100, 8
+        kmeans_iters, calls_exec, calls_paged = 8, 400, 160
+        n_paged, d_paged = 3000, 32
+    else:
+        n, d, n_centers, k, n_probe = 8000, 64, 40, 100, 8
+        kmeans_iters, calls_exec, calls_paged = 20, 800, 400
+        n_paged, d_paged = 8000, 32
+
+    # -- resident arm: exec_xla_q1 ------------------------------------------
+    centers = rng.normal(size=(n_centers, d)).astype(np.float32) * 5
+    X = (centers[rng.integers(0, n_centers, n)]
+         + rng.normal(size=(n, d))).astype(np.float32)
+    cfg = IVFConfig(dim=d, target_partition_size=100,
+                    kmeans_iters=kmeans_iters)
+    idx = ivf.build_index(X, cfg=cfg)
+    q1 = X[:1]
+    # warm the compile cache in both modes before the A/B
+    _block(search.ann_search(idx, q1, k, n_probe, backend="xla"))
+    size0 = obs_metrics.default_registry().size()
+    us_on, us_off = _ab_arm(
+        lambda: search.ann_search(idx, q1, k, n_probe, backend="xla"),
+        calls=calls_exec)
+    over_res = us_on / us_off
+    emit("obs_exec_xla_q1_traceoff", us_on,
+         f"killswitch_us={us_off:.1f};overhead={over_res:.3f}x")
+    metrics["exec_xla_q1_on_us"] = us_on
+    metrics["exec_xla_q1_off_us"] = us_off
+    metrics["exec_xla_q1_overhead"] = over_res
+    gates["overhead_exec_xla_q1"] = (
+        over_res <= OVERHEAD_TOL,
+        f"{us_on:.1f}us <= {OVERHEAD_TOL} * {us_off:.1f}us")
+    # zero-allocation contract: untraced queries registered nothing new
+    size1 = obs_metrics.default_registry().size()
+    gates["no_registry_growth_untraced"] = (
+        size1 == size0, f"registry series {size0} -> {size1}")
+
+    # -- paged arm + reconciliation -----------------------------------------
+    cfg_p = IVFConfig(dim=d_paged, target_partition_size=100,
+                      kmeans_iters=kmeans_iters, quantize="int8",
+                      rerank_factor=4)
+    centers_p = rng.normal(size=(16, d_paged)).astype(np.float32) * 5
+    Xp = (centers_p[rng.integers(0, 16, n_paged)]
+          + rng.normal(size=(n_paged, d_paged))).astype(np.float32)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "obs.db")
+        builder = MicroNN(dim=d_paged, path=path, config=cfg_p)
+        builder.upsert(np.arange(n_paged), Xp)
+        builder.build()
+        builder.store.close()
+
+        # budget sized so the probe working set stays resident: the A/B
+        # then times the hook sites on a hit-dominated steady state
+        # (fault() runs every chunk either way) instead of SQLite read
+        # variance, which is ms-scale and would swamp a 3% gate
+        pag = MicroNN(dim=d_paged, path=path, config=cfg_p,
+                      memory_budget_mb=1 if smoke else 4)
+        pag.recover()
+        qp = Xp[:4]
+        spec = Q.knn(k=20, n_probe=n_probe)
+        for _ in range(3):
+            pag.query(qp, spec)                   # warm compile + pool
+        us_on_p, us_off_p = _ab_arm(lambda: pag.query(qp, spec),
+                                    calls=calls_paged)
+        over_pag = us_on_p / us_off_p
+        emit("obs_paged_traceoff", us_on_p,
+             f"killswitch_us={us_off_p:.1f};overhead={over_pag:.3f}x")
+        metrics["paged_on_us"] = us_on_p
+        metrics["paged_off_us"] = us_off_p
+        metrics["paged_overhead"] = over_pag
+        gates["overhead_paged"] = (
+            over_pag <= OVERHEAD_TOL,
+            f"{us_on_p:.1f}us <= {OVERHEAD_TOL} * {us_off_p:.1f}us")
+
+        # -- reconciliation: trace counters == independent stats deltas ----
+        s0 = pag.stats()
+        tr = pag.explain(Xp[n_paged // 2:n_paged // 2 + 4], spec)
+        s1 = pag.stats()
+        f_hits = tr.counter("pager_fault", "hits")
+        f_miss = tr.counter("pager_fault", "misses")
+        f_bytes = tr.counter("pager_fault", "bytes_read")
+        d_hits = s1["hits"] - s0["hits"]
+        d_miss = s1["misses"] - s0["misses"]
+        d_bytes = s1["bytes_read"] - s0["bytes_read"]
+        recon_paged = (f_hits == d_hits and f_miss == d_miss
+                       and f_bytes == d_bytes)
+        complete_paged = all(
+            s in tr for s in ("plan", "probe", "scan", "merge"))
+        metrics["recon_fault_hits"] = f_hits
+        metrics["recon_fault_misses"] = f_miss
+        metrics["recon_fault_bytes"] = f_bytes
+        gates["reconcile_paged_fault_counters"] = (
+            recon_paged,
+            f"trace h/m/b={f_hits}/{f_miss}/{f_bytes}"
+            f" vs stats delta {d_hits}/{d_miss}/{d_bytes}")
+        pag.store.close()
+
+    # resident reconciliation: scan `compiled` == jit trace-count delta
+    res = MicroNN(dim=d, config=cfg)
+    res.upsert(np.arange(n), X)
+    res.build()
+    spec_r = Q.knn(k=k, n_probe=n_probe).backend("xla")
+    c0 = executor.trace_count()
+    tr_cold = res.explain(X[:1], spec_r)          # fresh Q-bucket: compiles
+    c1 = executor.trace_count()
+    tr_warm = res.explain(X[1:2], spec_r)         # same bucket: cache hit
+    c2 = executor.trace_count()
+    recon_res = (tr_cold.counter("scan", "compiled") == c1 - c0
+                 and tr_warm.counter("scan", "compiled") == c2 - c1
+                 and tr_warm.counter("scan", "cache_hit") is True)
+    complete_res = all(s in tr_cold for s in ("plan", "probe", "scan"))
+    gates["reconcile_resident_compiles"] = (
+        recon_res,
+        f"cold compiled={tr_cold.counter('scan', 'compiled')}"
+        f" (delta {c1 - c0}),"
+        f" warm compiled={tr_warm.counter('scan', 'compiled')}"
+        f" (delta {c2 - c1})")
+    gates["trace_complete"] = (
+        complete_res and complete_paged,
+        f"resident spans={list(tr_cold.span_names)}")
+    metrics["traced_resident_ms"] = tr_cold.total_ms
+    res.store.close()
+
+    write_json("obs", metrics,
+               config={"n": n, "d": d, "k": k, "n_probe": n_probe,
+                       "n_paged": n_paged, "d_paged": d_paged,
+                       "calls_exec": calls_exec,
+                       "calls_paged": calls_paged,
+                       "overhead_tol": OVERHEAD_TOL, "smoke": smoke,
+                       "cpu_count": os.cpu_count()},
+               gates=gates)
+
+    assert recon_paged, "paged trace counters diverged from pager stats"
+    assert recon_res, "scan compile counter diverged from trace_count()"
+    assert complete_res and complete_paged, "incomplete explain() trace"
+    assert over_res <= OVERHEAD_TOL, \
+        f"tracing-off overhead {over_res:.3f}x > {OVERHEAD_TOL}x" \
+        f" on exec_xla_q1"
+    assert over_pag <= OVERHEAD_TOL, \
+        f"tracing-off overhead {over_pag:.3f}x > {OVERHEAD_TOL}x on paged"
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + acceptance asserts (CI gate)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

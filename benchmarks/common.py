@@ -92,6 +92,15 @@ def write_json(name: str, metrics: Dict, config: Optional[Dict] = None,
         "metrics": metrics,
         "gates": norm,
     }
+    # PR 8: every artifact carries the process metrics-registry snapshot
+    # -- the counters behind the measurements (pager hits/misses, jit
+    # compiles, scheduler rows moved) ride along for post-hoc analysis.
+    # Guarded so a bench without the obs layer still writes its artifact.
+    try:
+        from repro.obs import metrics as _obs_metrics
+        doc["metrics_registry"] = _obs_metrics.default_registry().snapshot()
+    except Exception:
+        pass
     os.makedirs(d, exist_ok=True)
     path = os.path.join(d, f"BENCH_{name}.json")
     with open(path, "w") as f:

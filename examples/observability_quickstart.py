@@ -1,0 +1,115 @@
+"""Observability quickstart: tracing, metrics, and the event log (PR 8).
+
+    PYTHONPATH=src python examples/observability_quickstart.py
+
+Every MicroNN component -- pager, executor compile cache, scheduler,
+serving front door -- registers its counters into ONE process metrics
+registry (`repro.obs`). This script drives a mixed workload over a
+disk-resident quantized engine and then reads the three observability
+surfaces back:
+
+  1. `explain()` -- a per-stage QueryTrace (plan / probe / pager_fault /
+     scan / rerank / merge) whose work counters reconcile exactly with
+     the component counters;
+  2. the registry -- `MicroNN.stats()` as the derived dict view, plus
+     the Prometheus text exposition for scraping;
+  3. the trace ring -- last-N traces, the maintenance event log, and
+     the slow-query log.
+"""
+import os
+import tempfile
+import threading
+
+import numpy as np
+
+from repro.core.query import Q
+from repro.core.types import IVFConfig
+from repro.obs import metrics as obs_metrics
+from repro.serving import FrontDoor
+from repro.storage import MicroNN
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, dim = 4000, 32
+    centers = rng.normal(size=(24, dim)).astype(np.float32) * 5.0
+    X = (centers[rng.integers(0, 24, n)]
+         + rng.normal(size=(n, dim)).astype(np.float32))
+
+    with tempfile.TemporaryDirectory() as td:
+        eng = MicroNN(dim=dim, path=os.path.join(td, "vectors.db"),
+                      config=IVFConfig(dim=dim, target_partition_size=64,
+                                       kmeans_iters=20, delta_capacity=256,
+                                       quantize="int8", rerank_factor=4),
+                      memory_budget_mb=0.5,       # disk-resident + pager
+                      slow_query_ms=50.0)         # slow-log threshold
+        eng.upsert(np.arange(n), X)
+        eng.build()
+        spec = Q.knn(k=10, n_probe=8)
+
+        # --- 1. explain(): the per-stage trace --------------------------
+        tr = eng.explain(centers[:2] + 0.1, spec)
+        print("=== explain() -- cold pager, cold jit cache ===")
+        print(tr.format())
+        tr2 = eng.explain(centers[:2] + 0.1, spec)
+        print("\n=== same query again -- warm (cache_hit, fewer faults) ===")
+        print(tr2.format())
+        # the trace's fault counters ARE the pager's counters: exact
+        s0 = eng.stats()
+        tr3 = eng.explain(centers[10:12], spec)
+        s1 = eng.stats()
+        assert tr3.counter("pager_fault", "misses") == \
+            s1["misses"] - s0["misses"]
+        print("\nfault counters reconcile with pager stats, exactly")
+
+        # --- mixed workload: threads + writes + daemon maintenance ------
+        with FrontDoor(eng, window_s=0.002, maintenance=True) as fd:
+            def caller(i):
+                # every 3rd caller asks for a trace: per-caller
+                # queue_wait + the shared fused-call spans
+                rs = fd.query(centers[i % 24] + 0.1, spec,
+                              trace=(i % 3 == 0), timeout=60)
+                if rs.trace is not None:
+                    assert "queue_wait" in rs.trace
+            ts = [threading.Thread(target=caller, args=(i,))
+                  for i in range(12)]
+            for t in ts:
+                t.start()
+            with eng.session() as s:             # interleaved writes
+                s.upsert(np.arange(n, n + 150),
+                         rng.normal(size=(150, dim)).astype(np.float32))
+            for t in ts:
+                t.join()
+            fd.drain()
+            st = fd.stats()
+            print(f"\nserved={st['completed']}"
+                  f" coalesced={st['coalesced']}"
+                  f" total p50={st['total_p50_ms']:.2f}ms"
+                  f" p99={st['total_p99_ms']:.2f}ms")
+        eng.maintain(until_idle=True)
+
+        # --- 2. the unified registry ------------------------------------
+        print("\n=== stats(): derived view over the registry ===")
+        s = eng.stats()
+        print(f"pager: hits={s['hits']} misses={s['misses']}"
+              f" bytes_read={s['bytes_read']}")
+        print(f"scheduler: {s['scheduler']}")
+        print("\n=== Prometheus exposition (first 12 lines) ===")
+        text = obs_metrics.default_registry().to_prometheus()
+        print("\n".join(text.splitlines()[:12]))
+
+        # --- 3. the ring: event log + slow-query log --------------------
+        print("\n=== maintenance event log ===")
+        for e in eng.traces.events(5):
+            print(f"  {e.kind:<12} action={e.action or '-':<10}"
+                  f" rows={e.rows} dur={e.dur_ms:.2f}ms")
+        print(f"\nslow queries (> {eng.traces.slow_ms:.0f}ms):"
+              f" {len(eng.traces.slow())} of"
+              f" {len(eng.traces.traces())} traced")
+        for t in eng.traces.slow():
+            print(f"  {t.total_ms:8.2f}ms  {t.mode}  {list(t.span_names)}")
+        eng.store.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -28,9 +28,14 @@ python -m benchmarks.bench_updates --smoke
 # equivalence, sustained-QPS floor + uplift over the one-at-a-time
 # baseline, and a p99 tail-latency bound under mixed read/write load
 python -m benchmarks.bench_serve --smoke
+# regression gate for the observability layer (PR 8): tracing-off hooks
+# cost <= 3% on the resident exec_xla_q1 path and the paged path, and an
+# explain() trace's fault/compile counters reconcile exactly against the
+# pager stats deltas and the executor jit trace count
+python -m benchmarks.bench_obs --smoke
 # validate the artifacts: each bench must have written a well-formed
 # BENCH_*.json and no recorded acceptance gate may have failed
-python scripts/check_bench_json.py "$BENCH_JSON_DIR" quantized paged updates serve
+python scripts/check_bench_json.py "$BENCH_JSON_DIR" quantized paged updates serve obs
 # public-API smoke: the quickstart exercises QuerySpec/ResultSet, write
 # sessions, hybrid queries and recovery end-to-end -- API breakage fails
 # the gate before the unit tests even start

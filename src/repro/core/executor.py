@@ -59,6 +59,7 @@ number of live entries -- both surface through MicroNN.stats().
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Callable, Optional, Tuple
 
@@ -67,6 +68,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import quantize
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .hybrid import compile_filter
 from .query import QuerySpec, ResultSet
 from .topk import dedup_by_id, mask_scores, merge_topk, topk_smallest
@@ -707,6 +710,56 @@ def _bucket(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
+def _record_resident_probe(tr, index, q: jax.Array, spec: QuerySpec):
+    """Probe span for a traced resident query. The real probe runs fused
+    inside the jitted entry point, so tracing re-derives it eagerly from
+    the same centroids (identical math -- find_nearest_centroids is what
+    both plan variants call); the duplicate work only happens on
+    explicitly traced queries."""
+    kp = index.centroids.shape[0]
+    if spec.kind == "exact":
+        tr.record(obs_trace.STAGE_PROBE, 0.0, partitions=int(kp),
+                  n_probe=int(kp), kind="exact")
+        return
+    if spec.predicate is not None and spec.hybrid == "pre":
+        tr.record(obs_trace.STAGE_PROBE, 0.0, partitions=0,
+                  rows_cap=int(spec.cap or 0), kind="prefilter")
+        return
+    t0 = time.perf_counter()
+    qn = normalize_if_cosine(q.astype(jnp.float32), index.config.metric)
+    parts = np.unique(np.asarray(
+        find_nearest_centroids(index, qn, spec.n_probe)))
+    tr.record(obs_trace.STAGE_PROBE, (time.perf_counter() - t0) * 1e3,
+              partitions=int(parts.size), n_probe=int(min(spec.n_probe, kp)),
+              kind="ann")
+
+
+def _record_resident_scan(tr, index, spec: QuerySpec, b: int,
+                          dt_ms: float, compiled: int):
+    """Scan/rerank/merge spans for a traced resident query: one fused
+    jitted call covers all three stages, so rerank and merge are recorded
+    as fused markers (dur folded into the scan span)."""
+    kp, p_max, _ = index.vectors.shape
+    backend = spec.on_backend or default_backend()
+    quantized = spec.use_quantized
+    if quantized is None:
+        quantized = index.codes is not None
+    use_sq = bool(quantized) and spec.kind == "ann" and \
+        spec.hybrid != "pre"
+    n_parts = tr.counter(obs_trace.STAGE_PROBE, "partitions",
+                         default=int(kp))
+    tr.record(obs_trace.STAGE_SCAN, dt_ms,
+              partitions=n_parts, rows=n_parts * p_max, chunks=1,
+              backend=backend, q_bucket=b, quantized=use_sq,
+              compiled=compiled, cache_hit=(compiled == 0), fused=1)
+    if use_sq:
+        rf = index.config.rerank_factor
+        tr.record(obs_trace.STAGE_RERANK, 0.0, fused=1, rf=int(rf),
+                  candidates=b * min(max(spec.k, spec.k * rf),
+                                     n_parts * p_max))
+    tr.record(obs_trace.STAGE_MERGE, 0.0, fused=1)
+
+
 def run(index, queries: jax.Array, spec: QuerySpec, *,
         bucket: bool = True) -> ResultSet:
     """Execute a QuerySpec against a resident IVFIndex or a PagedIndex --
@@ -745,7 +798,18 @@ def run(index, queries: jax.Array, spec: QuerySpec, *,
     if b != Q:
         q = jnp.concatenate([q, jnp.zeros((b - Q, q.shape[1]), q.dtype)])
     qmask = jnp.arange(b) < Q
-    res = _run_spec(index, q, qmask, spec)
+    tr = obs_trace.current()
+    if tr is None:
+        res = _run_spec(index, q, qmask, spec)
+    else:
+        _record_resident_probe(tr, index, q[:Q], spec)
+        tc0 = _TRACE_COUNT
+        t0 = time.perf_counter()
+        res = _run_spec(index, q, qmask, spec)
+        jax.block_until_ready(res.scores)
+        _record_resident_scan(tr, index, spec, b,
+                              (time.perf_counter() - t0) * 1e3,
+                              _TRACE_COUNT - tc0)
     if b != Q:
         res = SearchResult(ids=res.ids[:Q], scores=res.scores[:Q])
     return ResultSet.of(res, spec)
@@ -845,13 +909,17 @@ def _rerank_from_store(store, q: jax.Array, cand_ids: jax.Array,
     holes) -- paged frames carry asset ids, and the durable tier is keyed
     by them. Disk-gather cost is O(unique candidates), independent of the
     scan width, which is the point of scanning codes."""
+    tr = obs_trace.current()
+    t0 = time.perf_counter() if tr is not None else 0.0
     cand = np.asarray(cand_ids)
     got = cand != INVALID_ID
     Q, kc = cand.shape
     d = store.dim
     v = np.zeros((Q, kc, d), np.float32)
+    n_uniq = 0
     if got.any():
         uniq = np.unique(cand[got])
+        n_uniq = int(uniq.size)
         rows, found = store.vectors_for(uniq)
         rows = np.asarray(normalize_if_cosine(
             jnp.asarray(rows, jnp.float32), metric))
@@ -859,8 +927,14 @@ def _rerank_from_store(store, q: jax.Array, cand_ids: jax.Array,
         idx = np.clip(idx, 0, len(uniq) - 1)
         got = got & (uniq[idx] == cand) & found[idx]
         v[got] = rows[idx[got]]
-    return _paged_rerank(q, jnp.asarray(v), jnp.asarray(got),
-                         jnp.asarray(cand), k_out=k_out, metric=metric)
+    out = _paged_rerank(q, jnp.asarray(v), jnp.asarray(got),
+                        jnp.asarray(cand), k_out=k_out, metric=metric)
+    if tr is not None:
+        jax.block_until_ready(out[0])
+        tr.record(obs_trace.STAGE_RERANK,
+                  (time.perf_counter() - t0) * 1e3,
+                  candidates=Q * kc, rows_gathered=n_uniq, k_out=k_out)
+    return out
 
 
 def _paged_probes(pindex, q: jax.Array, n_probe: int,
@@ -970,6 +1044,8 @@ def paged_search(
             f"paged scan tier is fixed by the frame pool payload " \
             f"({pindex.cache.payload}); cannot force quantized={quantized}"
 
+    tr = obs_trace.current()
+    t_probe = time.perf_counter() if tr is not None else 0.0
     if kind == "exact":
         counts = np.asarray(pindex.counts)
         upart = np.nonzero(counts > 0)[0]
@@ -979,6 +1055,10 @@ def paged_search(
         upart, qsel = _paged_probes(pindex, q, n_probe, qmask=qmask)
 
     n = len(upart)
+    if tr is not None:
+        tr.record(obs_trace.STAGE_PROBE,
+                  (time.perf_counter() - t_probe) * 1e3,
+                  partitions=int(n), n_probe=int(n_probe), kind=kind)
     p_max = cache.p_max
     if use_sq:
         k_run = min(max(k, k * cfg.rerank_factor), max(n * p_max, 1))
@@ -1036,6 +1116,7 @@ def paged_search(
                 fidx = jnp.asarray(frames.astype(np.int32))
                 cq = qsel[:, s:s + chunk]
                 k_chunk = min(k_run, len(cpids) * p_max)
+                t_scan = time.perf_counter() if tr is not None else 0.0
                 if use_sq:
                     cs, ci = _scan_frames_sq(
                         q, cache.payload_pool, pindex.qstats,
@@ -1048,6 +1129,14 @@ def paged_search(
                         cache.ids_pool, fidx, cq, attrs_pool,
                         k_out=k_chunk, metric=cfg.metric, backend=backend,
                         attr_filter=attr_filter)
+                if tr is not None:
+                    jax.block_until_ready(cs)
+                    tr.record(obs_trace.STAGE_SCAN,
+                              (time.perf_counter() - t_scan) * 1e3,
+                              chunks=1, partitions=len(cpids),
+                              rows=len(cpids) * p_max,
+                              backend=backend or default_backend(),
+                              quantized=use_sq, q_bucket=b)
             finally:
                 cache.unpin(frames)
             run_s, run_i = merge_topk(run_s, run_i, cs, ci, k_run)
@@ -1071,9 +1160,23 @@ def paged_search(
         s_m, i_m = (run_s, run_i) if n else (
             jnp.zeros((b, 0), jnp.float32), jnp.zeros((b, 0), jnp.int32))
 
+    t_merge = time.perf_counter() if tr is not None else 0.0
     s_f, i_f = _paged_epilogue(q, s_m, i_m, pindex.delta, qmask,
                                k=k, k_scan=k_scan, metric=cfg.metric,
                                attr_filter=attr_filter)
+    if tr is not None:
+        jax.block_until_ready(s_f)
+        tr.record(obs_trace.STAGE_MERGE,
+                  (time.perf_counter() - t_merge) * 1e3,
+                  k=int(k), k_scan=int(k_scan), fused=0)
     if b != Q:
         s_f, i_f = s_f[:Q], i_f[:Q]
     return ResultSet(ids=i_f, scores=s_f, spec=spec)
+
+
+# -- registry wiring (PR 8): the compile-cache instruments surface through
+# the process metrics registry next to the pager / front door / scheduler,
+# so one snapshot carries the whole telemetry state.
+_OBS = obs_metrics.default_registry().scope(component="executor")
+_OBS.gauge("trace_count", fn=trace_count)
+_OBS.gauge("compile_cache_size", fn=compile_cache_size)

@@ -215,6 +215,11 @@ class ResultSet:
     scores: jax.Array                   # [Q, k] float32
     spec: Optional[QuerySpec] = None
     attrs: Optional[np.ndarray] = None  # [Q, k, n_attr] if gathered
+    # obs.trace.QueryTrace when the query ran traced (engine.query(
+    # trace=True) / explain() / a traced front-door submit); None on the
+    # untraced hot path
+    trace: Optional[Any] = dataclasses.field(
+        default=None, repr=False, compare=False)
     # memoized host copy (one device->host transfer however often the
     # set is iterated/indexed)
     _np: Optional[Tuple[np.ndarray, np.ndarray]] = dataclasses.field(

@@ -1,0 +1,25 @@
+"""Observability: unified metrics registry + per-query tracing (PR 8).
+
+Two pieces, one import surface:
+
+  * `metrics` -- named counters/gauges/histograms in one process
+    registry; every subsystem (pager, executor, front door, scheduler,
+    engine) registers into `default_registry()` under labeled scopes so
+    `MicroNN.stats()` is a derived view of a single source of truth.
+  * `trace` -- thread-local per-query spans (`QueryTrace`), the bounded
+    `TraceRing` of recent traces + maintenance events, and the
+    slow-query log.
+"""
+from . import metrics, trace
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, Scope,
+                      default_registry, next_instance)
+from .trace import (MaintEvent, QueryTrace, Span, TraceRing, activate,
+                    current, enabled, set_enabled)
+
+__all__ = [
+    "metrics", "trace",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Scope",
+    "default_registry", "next_instance",
+    "MaintEvent", "QueryTrace", "Span", "TraceRing",
+    "activate", "current", "enabled", "set_enabled",
+]

@@ -50,10 +50,16 @@ write mutex instead -- a read on the shared connection could otherwise
 observe another thread's open transaction mid-flight. File-backed
 stores keep reads fully unserialized.
 
-Observability: per-request latency accounting -- queue wait vs execute,
-p50/p99, batch occupancy, coalesced/batched counters -- surfaces
-through `FrontDoor.stats()` and uniformly through `MicroNN.stats()`
-(zeroed `empty_stats()` when no front door is attached).
+Observability (PR 8): latency accounting lives in the process metrics
+registry (obs.metrics) -- the private sample reservoirs + percentile
+helper this module used to carry are gone; queue-wait / execute / total
+are shared mergeable histograms under this front door's registry scope,
+and `stats()` derives the same keys as before from them. Traced submits
+(`submit(..., trace=True)` / `query(..., trace=True)`) get a per-caller
+QueryTrace that records the request's own queue_wait and its slice of
+the coalesced batch (`split`), then ADOPTS the shared fused-call trace
+the dispatcher recorded -- so N coalesced callers each see the one
+fused scan they shared, plus their private admission latency.
 """
 from __future__ import annotations
 
@@ -63,15 +69,13 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from ..core.query import QuerySpec, ResultSet
-
-# latency reservoir size: p50/p99 are computed over the most recent
-# samples, enough for a stable p99 without unbounded growth
-_RESERVOIR = 4096
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 _STAT_KEYS = ("queued", "inflight", "submitted", "completed", "failed",
               "coalesced", "batches", "solo", "batch_occupancy",
@@ -88,14 +92,6 @@ def empty_stats() -> Dict:
             ("batch_occupancy",) else 0.0 for k in _STAT_KEYS}
 
 
-def _percentile(samples: Sequence[float], q: float) -> float:
-    if not samples:
-        return 0.0
-    s = sorted(samples)
-    i = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
-    return s[i]
-
-
 @dataclasses.dataclass
 class _Request:
     """One admitted query: the caller blocks on `future`."""
@@ -105,6 +101,7 @@ class _Request:
     future: Future
     t_submit: float           # monotonic seconds at admission
     n: int                    # rows (q)
+    trace: Optional[obs_trace.QueryTrace] = None   # traced submit
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,18 +146,29 @@ class FrontDoor:
         self._stop = False
         self._closed = False
         self._inflight = 0          # requests handed to the executor
-        # -- counters (guarded by _mu; hot-path increments only) -----------
-        self._mu = threading.Lock()
-        self._submitted = 0
-        self._completed = 0
-        self._failed = 0
-        self._coalesced = 0         # requests that shared a fused call
-        self._batches = 0           # fused calls with >= 2 requests
-        self._solo = 0              # single-request executions
-        self._occupancy = 0         # sum of requests over fused calls
-        self._wait_s: deque = deque(maxlen=_RESERVOIR)
-        self._exec_s: deque = deque(maxlen=_RESERVOIR)
-        self._total_s: deque = deque(maxlen=_RESERVOIR)
+        # -- registry metrics (PR 8) ---------------------------------------
+        # Each front door gets its own `fd` instance label: a closed and
+        # re-opened front door on the same engine starts its serving
+        # counters at zero (stats() is per-front-door, not cumulative
+        # across attachments), while still living in the ONE process
+        # registry for snapshot()/to_prometheus().
+        base = getattr(engine, "metrics", None)
+        if base is None:
+            base = obs_metrics.default_registry().scope(
+                inst=obs_metrics.next_instance())
+        metrics = base.scope(component="frontdoor",
+                             fd=obs_metrics.next_instance())
+        self.metrics = metrics
+        self._c_submitted = metrics.counter("submitted")
+        self._c_completed = metrics.counter("completed")
+        self._c_failed = metrics.counter("failed")
+        self._c_coalesced = metrics.counter("coalesced")
+        self._c_batches = metrics.counter("batches")
+        self._c_solo = metrics.counter("solo")
+        self._c_occupancy = metrics.counter("batch_occupancy_sum")
+        self._h_wait = metrics.histogram("queue_wait_s")
+        self._h_exec = metrics.histogram("execute_s")
+        self._h_total = metrics.histogram("total_s")
         # -- threads -------------------------------------------------------
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name="micronn-frontdoor",
@@ -175,26 +183,38 @@ class FrontDoor:
 
     # -- client API ----------------------------------------------------------
     def submit(self, vecs: np.ndarray,
-               spec: Optional[QuerySpec] = None) -> Future:
+               spec: Optional[QuerySpec] = None, *,
+               trace: bool = False) -> Future:
         """Admit one query (a [q, d] batch or a single [d] vector) and
-        return a Future resolving to its ResultSet. Thread-safe."""
+        return a Future resolving to its ResultSet. Thread-safe.
+
+        `trace=True` attaches a per-caller QueryTrace to the resolved
+        ResultSet (`rs.trace`): the caller's own queue_wait + its slice
+        of the coalesced batch, adopting the shared fused-call spans."""
         spec = QuerySpec() if spec is None else spec
         v = np.atleast_2d(np.asarray(vecs, np.float32))
+        tr = None
+        if trace and obs_trace.enabled():
+            tr = obs_trace.QueryTrace(
+                mode="paged" if self.engine.paged else "resident")
+            tr.n_queries = int(v.shape[0])
         req = _Request(vecs=v, spec=spec, future=Future(),
-                       t_submit=time.monotonic(), n=int(v.shape[0]))
+                       t_submit=time.monotonic(), n=int(v.shape[0]),
+                       trace=tr)
         with self._cv:
             if self._closed:
                 raise RuntimeError("FrontDoor is closed")
             self._queue.append(req)
-            self._submitted += 1
+            self._c_submitted.inc()
             self._cv.notify_all()
         return req.future
 
     def query(self, vecs: np.ndarray, spec: Optional[QuerySpec] = None,
-              timeout: Optional[float] = None) -> ResultSet:
+              timeout: Optional[float] = None, *,
+              trace: bool = False) -> ResultSet:
         """Blocking submit: the drop-in replacement for
         `engine.query(vecs, spec)` from any caller thread."""
-        return self.submit(vecs, spec).result(timeout)
+        return self.submit(vecs, spec, trace=trace).result(timeout)
 
     def queue_idle(self) -> bool:
         """True when no request is queued or executing -- the daemon
@@ -286,37 +306,59 @@ class FrontDoor:
     def _execute(self, spec: QuerySpec, reqs: List[_Request]):
         if not reqs:
             return
+        # Any traced caller in the batch? Record ONE shared trace around
+        # the fused call (activated thread-locally on this dispatcher
+        # thread, so the plan/probe/fault/scan spans every layer records
+        # land in it), then hand each traced caller a per-caller view.
+        shared = None
+        if obs_trace.enabled() and any(r.trace is not None for r in reqs):
+            shared = obs_trace.QueryTrace(
+                mode="paged" if self.engine.paged else "resident")
         t0 = time.monotonic()
         try:
-            with self._exec_guard(spec):
+            with self._exec_guard(spec), obs_trace.activate(shared):
                 if len(reqs) == 1:
                     results = [self.engine.query(reqs[0].vecs, spec)]
                 else:
                     results = self.engine.query_batched(
                         [r.vecs for r in reqs], spec)
         except BaseException as e:  # noqa: BLE001 -- fail the callers
-            t1 = time.monotonic()
-            with self._mu:
-                self._failed += len(reqs)
+            self._c_failed.inc(len(reqs))
             for r in reqs:
                 r.future.set_exception(e)
             with self._cv:
                 self._inflight -= len(reqs)
             return
         t1 = time.monotonic()
-        with self._mu:
-            if len(reqs) > 1:
-                self._batches += 1
-                self._coalesced += len(reqs)
-                self._occupancy += len(reqs)
-            else:
-                self._solo += 1
-            for r in reqs:
-                self._completed += 1
-                self._wait_s.append(t0 - r.t_submit)
-                self._exec_s.append(t1 - t0)
-                self._total_s.append(t1 - r.t_submit)
+        if shared is not None:
+            shared.finish()
+        if len(reqs) > 1:
+            self._c_batches.inc()
+            self._c_coalesced.inc(len(reqs))
+            self._c_occupancy.inc(len(reqs))
+        else:
+            self._c_solo.inc()
+        self._c_completed.inc(len(reqs))
+        for r in reqs:
+            self._h_wait.observe(t0 - r.t_submit)
+            self._h_exec.observe(t1 - t0)
+            self._h_total.observe(t1 - r.t_submit)
+        ring = getattr(self.engine, "traces", None)
         for r, rs in zip(reqs, results):
+            if r.trace is not None and shared is not None:
+                tr = r.trace
+                tr.record(obs_trace.STAGE_QUEUE,
+                          (t0 - r.t_submit) * 1e3, rows=r.n)
+                if len(reqs) > 1:
+                    tr.record(obs_trace.STAGE_SPLIT, 0.0,
+                              callers=len(reqs), rows=r.n,
+                              batch_rows=sum(x.n for x in reqs))
+                tr.adopt(shared)
+                tr.finish()
+                tr.result = rs
+                rs.trace = tr
+                if ring is not None:
+                    ring.append(tr)
             r.future.set_result(rs)
         with self._cv:
             self._inflight -= len(reqs)
@@ -329,25 +371,26 @@ class FrontDoor:
     def stats(self) -> Dict:
         """Serving counters + latency percentiles (ms). Keys match
         empty_stats(); MicroNN.stats() embeds this dict under
-        "frontdoor", so resident and paged engines report uniformly."""
-        with self._mu:
-            wait = list(self._wait_s)
-            ex = list(self._exec_s)
-            tot = list(self._total_s)
-            out = {
-                "queued": len(self._queue),
-                "inflight": self._inflight,
-                "submitted": self._submitted,
-                "completed": self._completed,
-                "failed": self._failed,
-                "coalesced": self._coalesced,
-                "batches": self._batches,
-                "solo": self._solo,
-                "batch_occupancy": (self._occupancy / self._batches)
-                if self._batches else 0.0,
-            }
-        for name, samples in (("queue_wait", wait), ("execute", ex),
-                              ("total", tot)):
-            out[f"{name}_p50_ms"] = _percentile(samples, 0.50) * 1e3
-            out[f"{name}_p99_ms"] = _percentile(samples, 0.99) * 1e3
+        "frontdoor", so resident and paged engines report uniformly.
+        All values are derived views over this front door's registry
+        series (one source of truth for stats(), BENCH snapshots, and
+        the Prometheus exporter)."""
+        batches = self._c_batches.value
+        out = {
+            "queued": len(self._queue),
+            "inflight": self._inflight,
+            "submitted": self._c_submitted.value,
+            "completed": self._c_completed.value,
+            "failed": self._c_failed.value,
+            "coalesced": self._c_coalesced.value,
+            "batches": batches,
+            "solo": self._c_solo.value,
+            "batch_occupancy": (self._c_occupancy.value / batches)
+            if batches else 0.0,
+        }
+        for name, h in (("queue_wait", self._h_wait),
+                        ("execute", self._h_exec),
+                        ("total", self._h_total)):
+            out[f"{name}_p50_ms"] = h.quantile(0.50) * 1e3
+            out[f"{name}_p99_ms"] = h.quantile(0.99) * 1e3
         return out

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import warnings
 from typing import List, Optional, Tuple
 
@@ -47,6 +48,8 @@ from ..core.query import Q, QuerySpec, ResultSet
 from ..core.types import (INVALID_ID, DeltaStore, IVFConfig, IVFIndex,
                           PagedIndex, SearchResult, effective_pad_to,
                           normalize_if_cosine)
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import pager
 from .scheduler import MaintenanceScheduler, StepReport
 from .store import VectorStore
@@ -131,7 +134,9 @@ class MicroNN:
                  quantize: Optional[str] = None,
                  rerank_factor: Optional[int] = None,
                  memory_budget_mb: Optional[float] = None,
-                 max_rows_per_step: int = 4096):
+                 max_rows_per_step: int = 4096,
+                 trace_ring_capacity: int = 256,
+                 slow_query_ms: float = 100.0):
         """`quantize="int8"` turns on the scalar-quantized tier: searches
         scan int8 codes and rerank `rerank_factor * k` candidates at
         float32. Both knobs land in IVFConfig (explicit kwargs override a
@@ -173,8 +178,20 @@ class MicroNN:
         self.index = None   # IVFIndex (resident) or PagedIndex (paged)
         self.optimizer: Optional[HybridOptimizer] = None
         self.maintenance_log = []
+        # observability (PR 8): this engine's labeled view into the ONE
+        # process metrics registry -- the pager, scheduler, and front door
+        # all hang their counters off sub-scopes of it, so stats() is a
+        # derived view of a single source of truth -- plus the trace ring:
+        # the last N QueryTraces and maintenance events, with a slow-query
+        # log above `slow_query_ms`.
+        self.metrics = obs_metrics.default_registry().scope(
+            component="engine", inst=str(obs_metrics.next_instance()))
+        self.traces = obs_trace.TraceRing(capacity=trace_ring_capacity,
+                                          slow_ms=slow_query_ms)
+        self._c_queries = self.metrics.counter("queries")
         self.scheduler = MaintenanceScheduler(
-            self, max_rows_per_step=max_rows_per_step)
+            self, max_rows_per_step=max_rows_per_step,
+            metrics=self.metrics.scope(component="scheduler"))
         # serving front door attached to this engine (if any) -- set by
         # serving.frontdoor.FrontDoor so stats() can surface its counters
         self._frontdoor = None
@@ -740,9 +757,18 @@ class MicroNN:
             cache.resize(new_p_max)
 
     # -- queries --------------------------------------------------------------
-    def query(self, queries: np.ndarray,
-              spec: Optional[QuerySpec] = None) -> ResultSet:
+    def query(self, queries: np.ndarray, spec: Optional[QuerySpec] = None,
+              *, trace: bool = False) -> ResultSet:
         """THE query entry point: execute a declarative QuerySpec.
+
+        `trace=True` activates a per-query QueryTrace for this call: every
+        layer the query crosses (planner, probe, pager, fused scan,
+        rerank, merge) records a stage span, the trace lands in the
+        engine's ring (`self.traces`, incl. the slow-query log) and rides
+        back on `result.trace`. With `trace=False` (default) no span is
+        allocated -- unless an OUTER trace is already active on this
+        thread (the front door's shared fused-call trace), in which case
+        the layers keep recording into that one.
 
         The spec alone routes execution -- resident fused scan, paged
         frame-pool streaming, or the hybrid pre/post-filter choice (the
@@ -758,11 +784,34 @@ class MicroNN:
         keeps scanning its consistent snapshot; paged execution is
         protected by the PartitionCache RLock (deferred pinned-frame
         invalidation) and the store's WAL snapshot read connection."""
+        if not (trace and obs_trace.enabled()):
+            return self._query_inner(queries, spec)
+        tr = obs_trace.QueryTrace(
+            mode="paged" if self.paged else "resident")
+        with obs_trace.activate(tr):
+            res = self._query_inner(queries, spec)
+        tr.finish()
+        tr.result = res
+        res.trace = tr
+        self.traces.append(tr)
+        return res
+
+    def explain(self, queries: np.ndarray,
+                spec: Optional[QuerySpec] = None) -> obs_trace.QueryTrace:
+        """Execute the query traced and return the QueryTrace (the result
+        rides on `trace.result`): the per-stage wall-time + work-counter
+        breakdown for this exact spec on this exact engine mode."""
+        return self.query(queries, spec, trace=True).trace
+
+    def _query_inner(self, queries: np.ndarray,
+                     spec: Optional[QuerySpec]) -> ResultSet:
         idx, optimizer = self.index, self.optimizer
         assert idx is not None, "build() or recover() first"
         spec = QuerySpec() if spec is None else spec
         q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
-        spec = self._resolve_spec(idx, optimizer, spec)
+        self._c_queries.inc()
+        spec = self._resolve_spec_traced(idx, optimizer, spec,
+                                         int(q.shape[0]))
         res = executor.run(idx, q, spec)
         if spec.gather_attrs and self.store.n_attr:
             res.attrs = self._gather_attrs(np.asarray(res.ids))
@@ -781,12 +830,34 @@ class MicroNN:
         idx, optimizer = self.index, self.optimizer
         assert idx is not None, "build() or recover() first"
         spec = QuerySpec() if spec is None else spec
-        spec = self._resolve_spec(idx, optimizer, spec)
+        self._c_queries.inc(len(chunks))
+        spec = self._resolve_spec_traced(
+            idx, optimizer, spec, sum(int(np.atleast_2d(c).shape[0])
+                                      for c in chunks))
         results = executor.run_coalesced(idx, chunks, spec)
         if spec.gather_attrs and self.store.n_attr:
             for rs in results:
                 rs.attrs = self._gather_attrs(np.asarray(rs.ids))
         return results
+
+    def _resolve_spec_traced(self, idx, optimizer, spec: QuerySpec,
+                             n_queries: int) -> QuerySpec:
+        """Spec resolution with the trace's `plan` span: records the
+        hybrid pre/post decision and the resolved shape when a trace is
+        active (no-op otherwise -- one thread-local lookup)."""
+        tr = obs_trace.current()
+        if tr is None:
+            return self._resolve_spec(idx, optimizer, spec)
+        t0 = time.perf_counter()
+        spec = self._resolve_spec(idx, optimizer, spec)
+        tr.record(obs_trace.STAGE_PLAN,
+                  (time.perf_counter() - t0) * 1e3,
+                  kind=spec.kind, k=int(spec.k),
+                  n_probe=int(spec.n_probe), hybrid=spec.hybrid,
+                  predicate=spec.predicate is not None)
+        tr.spec = spec
+        tr.n_queries += n_queries
+        return spec
 
     def _resolve_spec(self, idx, optimizer, spec: QuerySpec) -> QuerySpec:
         """Resolve the hybrid pre/post choice (and/or size the prefilter
@@ -855,7 +926,12 @@ class MicroNN:
         thread's liveness and executed quanta), and `frontdoor` (the
         attached serving front door's admission/coalescing/latency
         counters -- queued, coalesced, batches, p50/p99 queue-wait and
-        execute times; zeroed when no front door is attached)."""
+        execute times; zeroed when no front door is attached).
+
+        PR 8 makes every value here a derived view of the ONE process
+        metrics registry (obs.metrics) -- same keys, same plain-int
+        values -- and adds `scheduler`: the maintenance scheduler's
+        wakeup / backoff / rows-moved / per-action telemetry."""
         from ..serving import frontdoor as frontdoor_mod
         sched = self.scheduler
         fd = self._frontdoor
@@ -866,6 +942,7 @@ class MicroNN:
                "scheduler_depth": sched.queue_depth(),
                "daemon_alive": sched.daemon_alive,
                "daemon_steps": sched.daemon_steps,
+               "scheduler": sched.stats(),
                "frontdoor": fd.stats() if fd is not None
                else frontdoor_mod.empty_stats()}
         idx = self.index
@@ -947,7 +1024,8 @@ class MicroNN:
             self.store, p_max=p_max,
             budget_bytes=int(self.memory_budget_mb * 2 ** 20),
             payload=payload, metric=cfg.metric, qstats=qstats,
-            with_attrs=self.store.n_attr > 0)
+            with_attrs=self.store.n_attr > 0,
+            metrics=self.metrics.scope(component="pager"))
         if old_cache is not None:   # counters are cumulative across rebuilds
             cache.hits, cache.misses, cache.evictions = \
                 old_cache.hits, old_cache.misses, old_cache.evictions

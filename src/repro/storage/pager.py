@@ -83,6 +83,7 @@ the classic double-buffer cost, bounded by scan_frames * frame_bytes.
 from __future__ import annotations
 
 import threading
+import time
 from functools import partial
 from typing import Optional, Sequence
 
@@ -92,6 +93,8 @@ import numpy as np
 
 from ..core import quantize
 from ..core.types import INVALID_ID, normalize_if_cosine
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 
 @partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -116,7 +119,8 @@ class PartitionCache:
 
     def __init__(self, store, *, p_max: int, budget_bytes: int,
                  payload: str = "f32", metric: str = "l2",
-                 qstats=None, with_attrs: bool = False):
+                 qstats=None, with_attrs: bool = False,
+                 metrics=None):
         assert payload in ("f32", "int8"), payload
         if payload == "int8":
             assert qstats is not None, "int8 frames need quantizer stats"
@@ -126,13 +130,52 @@ class PartitionCache:
         self.qstats = qstats
         self.with_attrs = bool(with_attrs and store.n_attr)
         self.budget_bytes = int(budget_bytes)
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        # counters live in the process metrics registry (PR 8). The engine
+        # passes its own scope so counts survive re-attachment (the scope's
+        # get-or-create hands back the SAME counter objects); standalone
+        # caches get a fresh uniquely-labeled scope, so they start at zero.
+        if metrics is None:
+            metrics = obs_metrics.default_registry().scope(
+                component="pager", inst=str(obs_metrics.next_instance()))
+        self._metrics = metrics
+        self._c_hits = metrics.counter("hits")
+        self._c_misses = metrics.counter("misses")
+        self._c_evictions = metrics.counter("evictions")
+        self._c_bytes_read = metrics.counter("bytes_read")
+        self._c_bytes_staged = metrics.counter("bytes_staged")
+        self._c_staged_consumed = metrics.counter("staged_consumed")
+        # per-fault work breakdown, for the active trace's fault span:
+        # (hits, misses, staged frames consumed, bytes synchronously read)
+        self._last_fault = (0, 0, 0, 0)
         # guards every public method: the maintenance scheduler and query
         # threads may interleave fault/evict/invalidate (PR 5)
         self._lock = threading.RLock()
         self._alloc(p_max)
+
+    # -- cumulative counters (registry-backed; plain ints out) ---------------
+    @property
+    def hits(self) -> int:
+        return self._c_hits.value
+
+    @hits.setter
+    def hits(self, v: int):
+        self._c_hits.set(int(v))
+
+    @property
+    def misses(self) -> int:
+        return self._c_misses.value
+
+    @misses.setter
+    def misses(self, v: int):
+        self._c_misses.set(int(v))
+
+    @property
+    def evictions(self) -> int:
+        return self._c_evictions.value
+
+    @evictions.setter
+    def evictions(self, v: int):
+        self._c_evictions.set(int(v))
 
     # -- pool allocation ----------------------------------------------------
     @staticmethod
@@ -198,7 +241,6 @@ class PartitionCache:
         scans to unpin first: _alloc rebuilds the pin table (and may
         shrink the frame count), so reallocating under a live pin would
         corrupt a concurrent scan's unpin bookkeeping."""
-        import time
         deadline = time.monotonic() + 30.0
         while True:
             with self._lock:
@@ -223,6 +265,9 @@ class PartitionCache:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions,
+                    "bytes_read": self._c_bytes_read.value,
+                    "bytes_staged": self._c_bytes_staged.value,
+                    "staged_consumed": self._c_staged_consumed.value,
                     "resident_bytes": self.resident_bytes,
                     "budget_bytes": self.budget_bytes,
                     "capacity_frames": self.capacity,
@@ -331,6 +376,9 @@ class PartitionCache:
         if not want:
             return
         payload, ids, valid, attrs = self._fetch_blocks(want)
+        self._c_bytes_staged.inc(
+            payload.nbytes + ids.nbytes + valid.nbytes +
+            (0 if attrs is None else attrs.nbytes))
         with self._lock:
             if gen != self._stage_gen:
                 return          # a writer invalidated mid-fetch: drop all
@@ -356,8 +404,19 @@ class PartitionCache:
         land in the reusable scan ring instead of the admitted set, and
         hits do not touch reference bits -- so the stream cannot evict or
         artificially refresh the hot working set."""
+        tr = obs_trace.current()
+        if tr is None:
+            with self._lock:
+                return self._fault_locked(pids, admit)
+        t0 = time.perf_counter()
         with self._lock:
-            return self._fault_locked(pids, admit)
+            frames = self._fault_locked(pids, admit)
+            h, m, st, nb = self._last_fault
+        tr.record(obs_trace.STAGE_FAULT,
+                  (time.perf_counter() - t0) * 1e3,
+                  hits=h, misses=m, staged=st, bytes_read=nb,
+                  admitted=bool(admit))
+        return frames
 
     def _fault_locked(self, pids: Sequence[int], admit: bool) -> np.ndarray:
         # pins held by OTHER in-flight scans at entry decide whether the
@@ -374,7 +433,6 @@ class PartitionCache:
         for j, p in enumerate(want):
             f = self._pid_frame.get(p)
             if f is not None:
-                self.hits += 1
                 if admit:
                     self._ref[f] = True
                     if self._transient[f]:
@@ -386,30 +444,45 @@ class PartitionCache:
                 hit_frames.append(f)
             else:
                 missing.append((j, p))
+        if hit_frames:
+            self._c_hits.inc(len(hit_frames))
         if not missing:
+            self._last_fault = (len(hit_frames), 0, 0, 0)
             return frames
         new_frames = []
+        n_evicted = 0
         for j, p in missing:
             f = self._victim() if admit else self._scan_victim()
             old = self._frame_pid[f]
             if old >= 0:
                 del self._pid_frame[old]
-                self.evictions += 1
+                n_evicted += 1
             self._frame_pid[f] = p
             self._pid_frame[p] = f
             self._ref[f] = admit
             self._pins[f] += 1
-            self.misses += 1
             frames[j] = f
             new_frames.append(f)
+        # counted BEFORE the fetch: a failed fetch still paid the miss
+        # (and already evicted its victims) -- pinned by tests/test_pager
+        self._c_misses.inc(len(missing))
+        if n_evicted:
+            self._c_evictions.inc(n_evicted)
+        n_bytes = 0
         try:
             # consume staged read-ahead blocks first; anything not staged
             # is fetched in one batched SQL round-trip as before
             staged = {p: self._staged.pop(p)
                       for _, p in missing if p in self._staged}
+            n_staged = len(staged)
+            if n_staged:
+                self._c_staged_consumed.inc(n_staged)
             fetch = [p for _, p in missing if p not in staged]
             if fetch:
                 f_pay, f_ids, f_val, f_att = self._fetch_blocks(fetch)
+                n_bytes = f_pay.nbytes + f_ids.nbytes + f_val.nbytes + \
+                    (0 if f_att is None else f_att.nbytes)
+                self._c_bytes_read.inc(n_bytes)
                 for i, p in enumerate(fetch):
                     staged[p] = (f_pay[i], f_ids[i], f_val[i],
                                  None if f_att is None else f_att[i])
@@ -451,6 +524,7 @@ class PartitionCache:
             for f in hit_frames:
                 self._pins[f] -= 1
             raise
+        self._last_fault = (len(hit_frames), len(missing), n_staged, n_bytes)
         return frames
 
     def _free_frame(self, f: int):

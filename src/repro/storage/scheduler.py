@@ -51,7 +51,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Callable, List, Optional, Tuple
+
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -77,10 +81,31 @@ class MaintenanceScheduler:
     # foreground traffic the daemon takes one quantum anyway
     _BUSY_BACKOFF = 64
 
-    def __init__(self, engine, max_rows_per_step: int = 4096):
+    _ACTIONS = ("flush", "split", "merge", "repack", "recluster")
+
+    def __init__(self, engine, max_rows_per_step: int = 4096,
+                 metrics=None):
         assert max_rows_per_step >= 1, max_rows_per_step
         self.engine = engine
         self.max_rows_per_step = int(max_rows_per_step)
+        # registry telemetry (PR 8): closes the scheduler's observability
+        # gap -- it used to expose only a queue-depth probe. The engine
+        # passes a sub-scope of its own labels; a standalone scheduler
+        # registers under a fresh instance label.
+        if metrics is None:
+            metrics = obs_metrics.default_registry().scope(
+                component="scheduler",
+                inst=str(obs_metrics.next_instance()))
+        self.metrics = metrics
+        self._c_wakeups = metrics.counter("wakeups")
+        self._c_idle_probes = metrics.counter("idle_probes")
+        self._c_busy_backoffs = metrics.counter("busy_backoffs")
+        self._c_steps = metrics.counter("steps")
+        self._c_noops = metrics.counter("noops")
+        self._c_rows_moved = metrics.counter("rows_moved")
+        self._c_bytes_written = metrics.counter("bytes_written")
+        self._c_actions = {a: metrics.counter("action_steps", action=a)
+                           for a in self._ACTIONS}
         # (action, pids, rows) triples that planned to a no-op within the
         # current run of fruitless polls; cleared whenever any step makes
         # progress, so changed row contents (or a remapped clustering
@@ -106,7 +131,21 @@ class MaintenanceScheduler:
         """Number of pending maintenance work items (stats probe)."""
         return len(self.pending())
 
-    def step(self) -> Optional[StepReport]:
+    def _emit(self, kind: str, *, action: str = "", pids=(), rows: int = 0,
+              bytes_written: int = 0, dur_ms: float = 0.0, error: str = "",
+              daemon: bool = False):
+        """Append a structured MaintEvent to the engine's trace ring (the
+        maintenance event log); no-op without a ring or with tracing
+        globally disabled."""
+        ring = getattr(self.engine, "traces", None)
+        if ring is None or not obs_trace.enabled():
+            return
+        ring.append(obs_trace.MaintEvent(
+            kind=kind, action=action, pids=tuple(int(p) for p in pids),
+            rows=int(rows), bytes_written=int(bytes_written),
+            dur_ms=dur_ms, error=error, daemon=daemon))
+
+    def step(self, *, daemon: bool = False) -> Optional[StepReport]:
         """Execute the highest-priority actionable work item; None when
         the queue is idle (or nothing actionable fits the quantum)."""
         budget = self.max_rows_per_step
@@ -119,13 +158,56 @@ class MaintenanceScheduler:
                 # defer (see module contract)
                 self._skip.add(key)
                 continue
-            report = self.engine._execute_work_item(item, budget)
+            self._emit("planned", action=item.action, pids=item.pids,
+                       rows=item.rows, daemon=daemon)
+            t0 = time.perf_counter()
+            if daemon:
+                # count BEFORE the item commits: an observer that polls
+                # queue_depth() without the engine lock and sees the
+                # post-step index (queue drained) must also see the step
+                # counted -- rolled back below on noop/error
+                self.daemon_steps += 1
+            try:
+                report = self.engine._execute_work_item(item, budget)
+            except BaseException:
+                if daemon:
+                    self.daemon_steps -= 1
+                raise
             if report is None:
+                if daemon:
+                    self.daemon_steps -= 1
                 self._skip.add(key)
+                self._c_noops.inc()
+                self._emit("noop", action=item.action, pids=item.pids,
+                           daemon=daemon)
                 continue
             self._skip.clear()      # progress: stale no-op keys expire
+            self._c_steps.inc()
+            counter = self._c_actions.get(report.action)
+            if counter is not None:
+                counter.inc()
+            self._c_rows_moved.inc(report.rows)
+            self._c_bytes_written.inc(report.bytes_written)
+            self._emit("step", action=report.action, pids=report.pids,
+                       rows=report.rows, bytes_written=report.bytes_written,
+                       dur_ms=(time.perf_counter() - t0) * 1e3,
+                       daemon=daemon)
             return report
         return None
+
+    def stats(self) -> dict:
+        """The scheduler's registry-backed telemetry (surfaced through
+        MicroNN.stats()['scheduler'])."""
+        return {"wakeups": self._c_wakeups.value,
+                "idle_probes": self._c_idle_probes.value,
+                "busy_backoffs": self._c_busy_backoffs.value,
+                "steps": self._c_steps.value,
+                "noops": self._c_noops.value,
+                "rows_moved": self._c_rows_moved.value,
+                "bytes_written": self._c_bytes_written.value,
+                "daemon_errors": self.daemon_errors,
+                "actions": {a: c.value
+                            for a, c in self._c_actions.items()}}
 
     def drain(self, max_steps: Optional[int] = None) -> List[StepReport]:
         """Run steps until the queue is idle (maintain(until_idle=True)).
@@ -191,6 +273,7 @@ class MaintenanceScheduler:
         -- a failed repair plan must not kill maintenance forever."""
         yielded = 0
         while not self._stop.is_set():
+            self._c_wakeups.inc()
             if self.engine.index is None:
                 self._wake.wait(self._interval_s * self._IDLE_BACKOFF)
                 self._wake.clear()
@@ -198,6 +281,7 @@ class MaintenanceScheduler:
             busy = self._idle_fn is not None and not self._idle_fn()
             if busy and yielded < self._BUSY_BACKOFF:
                 yielded += 1
+                self._c_busy_backoffs.inc()
                 self._wake.wait(self._interval_s)
                 self._wake.clear()
                 continue
@@ -206,16 +290,16 @@ class MaintenanceScheduler:
             try:
                 with self.engine.lock:
                     if not self._stop.is_set():
-                        report = self.step()
-                        if report is not None:
-                            # count inside the mutex: an observer that
-                            # sees the queue drained also sees the step
-                            self.daemon_steps += 1
+                        # step(daemon=True) counts daemon_steps itself,
+                        # before the item's index swap becomes visible
+                        report = self.step(daemon=True)
             except BaseException as e:  # noqa: BLE001 -- daemon must live
                 self.daemon_errors += 1
                 self.last_daemon_error = e
+                self._emit("daemon_error", error=repr(e), daemon=True)
             if report is None:
                 # queue idle (or errored): poll again after a beat,
                 # woken early by kick()
+                self._c_idle_probes.inc()
                 self._wake.wait(self._interval_s * self._IDLE_BACKOFF)
                 self._wake.clear()

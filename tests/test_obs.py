@@ -1,0 +1,336 @@
+"""Observability layer (PR 8): unified metrics registry, per-query trace
+spans, the maintenance event log.
+
+Pins the layer's three contracts:
+
+  * **free when off** -- untraced queries allocate no new registry
+    series, record nothing into the trace ring, and return
+    `rs.trace is None`;
+  * **exact when on** -- `explain()` returns a complete per-stage
+    QueryTrace in all four engine modes (resident/paged x f32/int8, on
+    both backends), whose pager-fault counters reconcile EXACTLY with
+    the pager's registry counters across the traced call and whose scan
+    `compiled` count reconciles with the executor's jit trace count;
+  * **one source of truth** -- `MicroNN.stats()` / `FrontDoor.stats()`
+    keys are derived views over the registry (scheduler telemetry,
+    pager counters), and every series exports through snapshot() /
+    to_prometheus().
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import executor
+from repro.core.query import Q
+from repro.core.types import IVFConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.serving import FrontDoor
+from repro.storage import MicroNN
+from tests.conftest import clustered_data
+
+DIM = 16
+
+
+def _mk(tmp_path, name, *, paged=False, quant=False, n=400, seed=0,
+        **eng_kw):
+    cfg = IVFConfig(dim=DIM, target_partition_size=50, kmeans_iters=8,
+                    delta_capacity=64,
+                    **({"quantize": "int8", "rerank_factor": 4}
+                       if quant else {}))
+    eng = MicroNN(dim=DIM, path=str(tmp_path / f"{name}.db"), config=cfg,
+                  memory_budget_mb=0.05 if paged else None, **eng_kw)
+    X = clustered_data(n=n, dim=DIM, seed=seed)
+    eng.upsert(np.arange(n), X)
+    eng.build()
+    return eng, X
+
+
+# -- metrics registry unit behaviour -----------------------------------------
+
+
+def test_counter_gauge_get_or_create():
+    reg = obs_metrics.MetricsRegistry()
+    c = reg.counter("reqs", comp="a")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    # same (name, labels) -> same object; different labels -> new series
+    assert reg.counter("reqs", comp="a") is c
+    assert reg.counter("reqs", comp="b") is not c
+    g = reg.gauge("depth")
+    g.set(3.5)
+    assert g.value == 3.5
+    reg.gauge("live", fn=lambda: 7)
+    assert reg.gauge("live").value == 7
+    # a name registered as one kind cannot be re-registered as another
+    with pytest.raises(AssertionError):
+        reg.histogram("reqs", comp="a")
+
+
+def test_histogram_quantiles_and_merge():
+    reg = obs_metrics.MetricsRegistry()
+    h = reg.histogram("lat")
+    assert h.quantile(0.5) == 0.0            # empty -> 0 (empty_stats)
+    for v in (0.001, 0.002, 0.004, 0.008, 0.1):
+        h.observe(v)
+    assert h.count == 5 and h.sum == pytest.approx(0.115)
+    p50 = h.quantile(0.50)
+    assert 0.001 <= p50 <= 0.01
+    assert h.quantile(1.0) == pytest.approx(0.1)
+    # merge folds counts elementwise (same edges required)
+    h2 = obs_metrics.Histogram("lat2")
+    h2.observe(0.2)
+    h.merge(h2)
+    assert h.count == 6
+    assert h.quantile(1.0) == pytest.approx(0.2)
+    with pytest.raises(AssertionError):
+        h.merge(obs_metrics.Histogram("odd", buckets=(1.0, 2.0)))
+
+
+def test_scope_binds_and_nests_labels():
+    reg = obs_metrics.MetricsRegistry()
+    s = reg.scope(engine="0")
+    c = s.counter("ops", component="pager")
+    assert dict(c.labels) == {"engine": "0", "component": "pager"}
+    # nested scopes merge, inner wins on conflict
+    s2 = s.scope(component="exec").scope(component="exec2")
+    assert dict(s2.counter("ops").labels) == {"engine": "0",
+                                              "component": "exec2"}
+
+
+def test_snapshot_and_prometheus_export():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("hits", component="pager").inc(3)
+    reg.gauge("depth").set(2)
+    reg.histogram("wait_s").observe(0.005)
+    snap = reg.snapshot()
+    assert snap["counters"]['hits{component="pager"}'] == 3
+    assert snap["gauges"]["depth"] == 2
+    hs = snap["histograms"]["wait_s"]
+    assert hs["count"] == 1 and hs["p50"] > 0
+    text = reg.to_prometheus()
+    assert "# TYPE hits counter" in text
+    assert 'hits{component="pager"} 3' in text
+    assert "# TYPE wait_s histogram" in text
+    assert 'le="+Inf"' in text and "wait_s_count 1" in text
+
+
+# -- explain(): complete traces in every engine mode -------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("quant", [False, True], ids=["f32", "int8"])
+@pytest.mark.parametrize("paged", [False, True], ids=["resident", "paged"])
+def test_explain_complete_all_modes(tmp_path, paged, quant, backend):
+    """Acceptance: explain() returns a per-stage QueryTrace in all four
+    engine modes, on both backends, with the mode-appropriate spans and
+    work counters."""
+    eng, X = _mk(tmp_path, f"ex-{paged}-{quant}-{backend}",
+                 paged=paged, quant=quant)
+    spec = Q.knn(k=5, n_probe=4).backend(backend)
+    tr = eng.explain(X[:2] + 0.01, spec)
+    assert tr is not None and tr.mode == ("paged" if paged else "resident")
+    assert tr.n_queries == 2 and tr.total_ms > 0 and tr.spec is not None
+    for stage in ("plan", "probe", "scan", "merge"):
+        assert stage in tr, (stage, tr.span_names)
+    scan = tr.get("scan")
+    assert scan.counters["partitions"] > 0
+    assert scan.counters["rows"] > 0
+    assert scan.counters["backend"] == backend
+    assert scan.counters["quantized"] is quant
+    assert tr.counter("probe", "partitions") > 0
+    if paged:
+        assert "pager_fault" in tr
+    if quant:
+        assert "rerank" in tr
+    # the trace carries its ResultSet, and the ring kept it
+    assert tr.result is not None and tr.result.trace is tr
+    assert tr in eng.traces.traces()
+    # format() renders every span (the quickstart prints this)
+    txt = tr.format()
+    assert "scan" in txt and "QueryTrace" in txt
+    eng.store.close()
+
+
+def test_trace_counters_reconcile_paged(tmp_path):
+    """Acceptance: the fault span's hits/misses/bytes_read equal the
+    pager's registry-counter deltas across the traced call, EXACTLY."""
+    eng, X = _mk(tmp_path, "recon", paged=True, quant=True, n=600)
+    spec = Q.knn(k=5, n_probe=4)
+    eng.query(X[:2], spec)                      # warm compile path
+    s0 = eng.stats()
+    tr = eng.explain(X[300:302], spec)
+    s1 = eng.stats()
+    assert tr.counter("pager_fault", "hits") == s1["hits"] - s0["hits"]
+    assert tr.counter("pager_fault", "misses") == \
+        s1["misses"] - s0["misses"]
+    assert tr.counter("pager_fault", "bytes_read") == \
+        s1["bytes_read"] - s0["bytes_read"]
+    # the traced call faulted SOMETHING (fresh probe set, cold frames)
+    assert tr.counter("pager_fault", "hits") \
+        + tr.counter("pager_fault", "misses") > 0
+    eng.store.close()
+
+
+def test_trace_compile_counter_reconciles_resident(tmp_path):
+    """Acceptance: scan `compiled` == executor.trace_count() delta --
+    cold Q-bucket compiles, warm bucket is a cache hit."""
+    eng, X = _mk(tmp_path, "compiles")
+    spec = Q.knn(k=7, n_probe=5)                # fresh spec: cold cache
+    c0 = executor.trace_count()
+    tr_cold = eng.explain(X[:1], spec)
+    c1 = executor.trace_count()
+    tr_warm = eng.explain(X[1:2], spec)
+    c2 = executor.trace_count()
+    assert tr_cold.counter("scan", "compiled") == c1 - c0 > 0
+    assert tr_cold.counter("scan", "cache_hit") is False
+    assert tr_warm.counter("scan", "compiled") == c2 - c1 == 0
+    assert tr_warm.counter("scan", "cache_hit") is True
+    eng.store.close()
+
+
+# -- tracing-off hot path: zero cost, zero allocation ------------------------
+
+
+def test_untraced_queries_allocate_nothing(tmp_path):
+    eng, X = _mk(tmp_path, "zero")
+    spec = Q.knn(k=5, n_probe=4)
+    eng.query(X[:1], spec)                      # register + compile once
+    reg = obs_metrics.default_registry()
+    size0, ring0 = reg.size(), len(eng.traces)
+    for i in range(5):
+        rs = eng.query(X[i:i + 1], spec)
+        assert rs.trace is None
+    assert reg.size() == size0, "untraced query registered a new series"
+    assert len(eng.traces) == ring0, "untraced query entered the ring"
+    # global kill-switch: even trace=True records nothing
+    obs_trace.set_enabled(False)
+    try:
+        rs = eng.query(X[:1], spec, trace=True)
+        assert rs.trace is None and len(eng.traces) == ring0
+    finally:
+        obs_trace.set_enabled(True)
+    eng.store.close()
+
+
+# -- front door: per-caller traces under concurrent load ---------------------
+
+
+def test_frontdoor_traced_submits_under_threads(tmp_path):
+    """Traced and untraced callers interleave from many threads: every
+    traced caller gets its own queue_wait + the shared fused spans;
+    untraced callers get rs.trace None; results match solo query()."""
+    eng, X = _mk(tmp_path, "fdtrace")
+    spec = Q.knn(k=5, n_probe=4)
+    n_req = 8
+    solo = [eng.query(X[i] + 0.01, spec) for i in range(n_req)]
+    results = [None] * n_req
+    with FrontDoor(eng, window_s=0.2, max_batch_rows=64) as fd:
+        def worker(i):
+            results[i] = fd.query(X[i] + 0.01, spec,
+                                  trace=(i % 2 == 0), timeout=30)
+        ts = [threading.Thread(target=worker, args=(i,))
+              for i in range(n_req)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        st = fd.stats()
+    assert st["completed"] == n_req and st["failed"] == 0
+    for i, rs in enumerate(results):
+        np.testing.assert_array_equal(np.asarray(rs.ids),
+                                      np.asarray(solo[i].ids))
+        if i % 2 == 0:
+            tr = rs.trace
+            assert tr is not None and "queue_wait" in tr
+            for stage in ("plan", "probe", "scan"):
+                assert stage in tr, (stage, tr.span_names)
+            assert tr.shared is not None        # adopted the fused call
+            assert tr in eng.traces.traces()
+        else:
+            assert rs.trace is None
+    # coalesced traced callers reference the SAME fused-scan Span and
+    # record their share of the batch in the split sub-span
+    traced = [r.trace for i, r in enumerate(results) if i % 2 == 0]
+    by_shared = {}
+    for tr in traced:
+        by_shared.setdefault(id(tr.shared), []).append(tr)
+    for group in by_shared.values():
+        if len(group) > 1:
+            assert len({id(t.get("scan")) for t in group}) == 1
+            for t in group:
+                assert t.counter("split", "callers") >= len(group)
+    eng.store.close()
+
+
+def test_frontdoor_stats_derive_from_histograms(tmp_path):
+    """The reservoir replacement: percentile keys are now derived from
+    registry histograms and stay non-zero after traffic (the shape pin
+    lives in test_serving's uniform-stats test)."""
+    eng, X = _mk(tmp_path, "fdh")
+    with FrontDoor(eng, window_s=0.0) as fd:
+        for i in range(4):
+            fd.query(X[i], Q.knn(k=5, n_probe=4), timeout=30)
+        st = fd.stats()
+        assert st["total_p50_ms"] > 0 and st["execute_p99_ms"] > 0
+        # the series live in the process registry under this scope
+        assert fd.metrics.histogram("total_s").count == 4
+    eng.store.close()
+
+
+# -- scheduler telemetry + maintenance event log -----------------------------
+
+
+def test_scheduler_telemetry_and_event_log(tmp_path):
+    eng, X = _mk(tmp_path, "sched", n=400)
+    eng.upsert(np.arange(400, 480),
+               clustered_data(n=80, dim=DIM, seed=9))
+    reports = eng.maintain(until_idle=True)
+    assert reports, "expected at least one maintenance step"
+    st = eng.scheduler.stats()
+    assert st["steps"] == len(reports)
+    assert st["rows_moved"] == sum(r.rows for r in reports)
+    assert st["bytes_written"] == sum(r.bytes_written for r in reports)
+    assert sum(st["actions"].values()) == st["steps"]
+    assert st["actions"]["flush"] >= 1
+    # surfaced through the engine's uniform stats dict
+    assert eng.stats()["scheduler"]["steps"] == st["steps"]
+    # the event log saw every step: planned -> step pairs, in order
+    events = eng.traces.events()
+    kinds = [e.kind for e in events]
+    assert kinds.count("step") == len(reports)
+    assert kinds.index("planned") < kinds.index("step")
+    steps = [e for e in events if e.kind == "step"]
+    assert sum(e.rows for e in steps) == st["rows_moved"]
+    assert all(e.dur_ms >= 0 and e.action for e in steps)
+    assert all(e.to_dict()["kind"] == e.kind for e in events)
+    eng.store.close()
+
+
+# -- trace ring + slow-query log ---------------------------------------------
+
+
+def test_trace_ring_bounded_and_slow_log(tmp_path):
+    eng, X = _mk(tmp_path, "ring", trace_ring_capacity=4,
+                 slow_query_ms=0.0)           # every trace is "slow"
+    spec = Q.knn(k=5, n_probe=4)
+    for i in range(6):
+        eng.explain(X[i:i + 1], spec)
+    assert len(eng.traces) == 4               # ring rotated
+    assert len(eng.traces.traces()) == 4
+    slow = eng.traces.slow()
+    assert len(slow) == 6                     # slow log kept them all
+    assert all(t.total_ms >= 0.0 for t in slow)
+    eng.traces.clear()
+    assert len(eng.traces) == 0 and not eng.traces.slow()
+    eng.store.close()
+
+
+def test_slow_log_threshold_filters(tmp_path):
+    eng, X = _mk(tmp_path, "slowhi", slow_query_ms=1e9)
+    eng.explain(X[:1], Q.knn(k=5, n_probe=4))
+    assert len(eng.traces.traces()) == 1
+    assert eng.traces.slow() == []            # under the threshold
+    eng.store.close()
