@@ -1,0 +1,222 @@
+"""Fleet mode under Zipf tenant skew (PR 9): one shared FramePool at
+budget B vs T naive solo engines at B/T each.
+
+T per-tenant databases (distinct data, identical geometry) are built
+once, WAL-checkpointed, and copied byte-identically into both arms.
+Both arms then serve the SAME deterministic workload -- a Zipf(s)
+sequence over tenant ranks, single-vector ANN probes -- so per-query
+answers are directly comparable:
+
+  * `fleet` -- one Fleet: every tenant's PartitionCache is a view into
+    ONE FramePool of budget B. Global CLOCK lets the hot tenants'
+    working sets occupy most of the pool while cold tenants shrink to
+    ~nothing, which is the whole argument for fleet mode.
+  * `naive` -- T independent engines, each with its own private pool of
+    budget B/T: the equal-split allocation a process-per-tenant or
+    container-per-tenant deployment is stuck with. The hot tenant
+    thrashes its sliver while the cold tenants' slivers idle.
+
+Gates (scripts/ci.sh --smoke regression surface, BENCH_fleet.json):
+
+  * per_tenant_parity -- every query's ids+scores are bit-identical
+    across the two arms: pool sharing and eviction pressure never
+    change what a tenant's search computes.
+  * budget_bound -- the fleet pool's resident bytes never exceed B at
+    any sampled point (it is preallocated, so this pins the accounting).
+  * qps_uplift -- the shared pool beats the naive split's sustained
+    QPS by >= 1.2x on the skewed workload.
+"""
+import glob
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.query import Q
+from repro.core.types import IVFConfig
+from repro.fleet import Fleet
+from repro.storage import MicroNN
+
+from .common import emit, write_json
+
+DIM = 64
+K = 10
+N_PROBE = 8
+BATCH = 4           # rows per query call (one user's request burst)
+ZIPF_S = 1.6
+UPLIFT_MIN = 1.2
+
+
+def _clustered(n, seed, scale=5.0, n_clusters=24):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, DIM)).astype(np.float32) * scale
+    asg = rng.integers(0, n_clusters, n)
+    return (centers[asg]
+            + rng.normal(size=(n, DIM)).astype(np.float32))
+
+
+def _copy_db(src, dst):
+    for f in glob.glob(src + "*"):
+        shutil.copy(f, dst + f[len(src):])
+
+
+def _build_sources(tmp, cfg, tenants, n):
+    """One built db per tenant (distinct data), WAL folded in so the
+    bare .db file is the complete durable state."""
+    src = os.path.join(tmp, "src")
+    os.makedirs(src)
+    data = {}
+    for r, name in enumerate(tenants):
+        X = _clustered(n, seed=100 + r)
+        eng = MicroNN(dim=DIM, path=os.path.join(src, f"{name}.db"),
+                      config=cfg)
+        eng.upsert(np.arange(n), X)
+        eng.build()
+        eng.store.db.commit()
+        eng.store.db.execute("PRAGMA wal_checkpoint(TRUNCATE)")
+        eng.store.close()
+        data[name] = X
+    return src, data
+
+
+def _zipf_schedule(tenants, n_q, seed):
+    """Deterministic Zipf(s) draw over tenant RANKS: rank r (0-based)
+    gets probability ~ 1/(r+1)^s -- tenant 0 is the hot one."""
+    ranks = np.arange(1, len(tenants) + 1, dtype=np.float64)
+    p = ranks ** -ZIPF_S
+    p /= p.sum()
+    rng = np.random.default_rng(seed)
+    return rng.choice(len(tenants), size=n_q, p=p)
+
+
+def _drive(query_fn, tenants, schedule, probes, *, sample_fn=None):
+    """Run the fixed workload; returns (wall_s, answers, max_sample)."""
+    answers = []
+    peak = 0
+    t0 = time.perf_counter()
+    for i, r in enumerate(schedule):
+        rs = query_fn(tenants[r], probes[i])
+        answers.append((np.asarray(rs.ids).copy(),
+                        np.asarray(rs.scores).copy()))
+        if sample_fn is not None and i % 16 == 0:
+            peak = max(peak, sample_fn())
+    return time.perf_counter() - t0, answers, peak
+
+
+def fleet(smoke: bool = False):
+    T = 6 if smoke else 16
+    n = 4800
+    n_q = 120 if smoke else 800          # query CALLS (BATCH rows each)
+    budget_mb = 6.0
+    tenants = [f"user{r}" for r in range(T)]
+
+    # big partitions: a fault moves ~150KB/frame, so paging -- not jit
+    # dispatch -- is what the two arms get measured on
+    cfg = IVFConfig(dim=DIM, target_partition_size=256, kmeans_iters=12,
+                    delta_capacity=256)
+    spec = Q.knn(k=K, n_probe=N_PROBE)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        src, _ = _build_sources(tmp, cfg, tenants, n)
+        probes = _clustered(n_q * BATCH, seed=9).astype(
+            np.float32).reshape(n_q, BATCH, DIM)
+        schedule = _zipf_schedule(tenants, n_q, seed=11)
+
+        # -- fleet arm: ONE pool at budget B --------------------------------
+        froot = os.path.join(tmp, "fleet")
+        os.makedirs(froot)
+        for name in tenants:
+            _copy_db(os.path.join(src, f"{name}.db"),
+                     os.path.join(froot, f"{name}.db"))
+        fl = Fleet(froot, dim=DIM, budget_mb=budget_mb, max_live=T,
+                   config=cfg)
+        # the skew premise: the whole fleet does NOT fit (so sharing is
+        # a policy question), but one hot tenant's tier does
+        k0 = fl.get(tenants[0]).index.k
+        assert fl.pool.capacity < T * k0, "budget too generous"
+        assert fl.pool.capacity >= k0, "budget below one tenant's tier"
+        for name in tenants:                      # warm compiles, not frames
+            fl.query(name, probes[0], spec)
+        budget_bytes = fl.pool.budget_bytes
+        wall_f, ans_f, peak_resident = _drive(
+            lambda t, q: fl.query(t, q, spec), tenants, schedule, probes,
+            sample_fn=lambda: fl.pool.resident_bytes)
+        misses_fleet = sum(fl.get(t).index.cache.misses for t in tenants)
+        fl.close()
+
+        # -- naive arm: T private pools at B/T each -------------------------
+        nroot = os.path.join(tmp, "naive")
+        os.makedirs(nroot)
+        solos = {}
+        for name in tenants:
+            path = os.path.join(nroot, f"{name}.db")
+            _copy_db(os.path.join(src, f"{name}.db"), path)
+            eng = MicroNN(dim=DIM, path=path, config=cfg,
+                          memory_budget_mb=budget_mb / T)
+            eng.recover()
+            solos[name] = eng
+        for name in tenants:
+            solos[name].query(probes[0], spec)
+        wall_n, ans_n, _ = _drive(
+            lambda t, q: solos[t].query(q, spec), tenants, schedule,
+            probes)
+        misses_naive = sum(e.index.cache.misses for e in solos.values())
+        for eng in solos.values():
+            eng.store.close()
+
+    parity = all(
+        np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+        for a, b in zip(ans_f, ans_n))
+    qps_f, qps_n = n_q / wall_f, n_q / wall_n
+    uplift = qps_f / max(qps_n, 1e-9)
+
+    emit("fleet_qps_shared", 1e6 * wall_f / n_q,
+         f"qps={qps_f:.1f} T={T} budget={budget_mb}MB")
+    emit("fleet_qps_naive_split", 1e6 * wall_n / n_q,
+         f"qps={qps_n:.1f} uplift={uplift:.2f}x")
+    emit("fleet_pool_misses", 0.0,
+         f"shared={misses_fleet} naive={misses_naive}")
+
+    write_json(
+        "fleet",
+        metrics={"qps_fleet": qps_f, "qps_naive": qps_n,
+                 "qps_uplift": uplift,
+                 "misses_fleet": misses_fleet,
+                 "misses_naive": misses_naive,
+                 "peak_resident_bytes": peak_resident,
+                 "budget_bytes": budget_bytes},
+        config={"tenants": T, "rows_per_tenant": n, "queries": n_q,
+                "budget_mb": budget_mb, "zipf_s": ZIPF_S, "dim": DIM,
+                "k": K, "n_probe": N_PROBE, "smoke": smoke},
+        gates={
+            "per_tenant_parity": (
+                parity,
+                "fleet ids+scores bitwise == naive per-tenant engines"),
+            "budget_bound": (
+                peak_resident <= budget_bytes,
+                f"peak resident {peak_resident} <= {budget_bytes}"),
+            "qps_uplift": (
+                uplift >= UPLIFT_MIN,
+                f"{qps_f:.1f} >= {UPLIFT_MIN} * {qps_n:.1f}"),
+        })
+
+    # acceptance pins (scripts/ci.sh --smoke regression gate)
+    assert parity, "shared pool changed a tenant's answers"
+    assert peak_resident <= budget_bytes, \
+        f"fleet pool exceeded budget: {peak_resident} > {budget_bytes}"
+    assert uplift >= UPLIFT_MIN, \
+        f"fleet uplift {uplift:.2f}x < {UPLIFT_MIN}x"
+
+
+def main(smoke: bool = False):
+    fleet(smoke=smoke)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload + acceptance asserts (CI gate)")
+    main(**vars(ap.parse_args()))

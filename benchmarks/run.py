@@ -24,10 +24,10 @@ def main() -> None:
     if args.json_dir:
         common.set_json_dir(args.json_dir)
 
-    from . import (bench_build, bench_e2e, bench_executor, bench_hybrid,
-                   bench_minibatch, bench_mqo, bench_obs, bench_paged,
-                   bench_quantized, bench_roofline, bench_serve,
-                   bench_updates)
+    from . import (bench_build, bench_e2e, bench_executor, bench_fleet,
+                   bench_hybrid, bench_minibatch, bench_mqo, bench_obs,
+                   bench_paged, bench_quantized, bench_roofline,
+                   bench_serve, bench_updates)
     sections = {
         "fig4_5_e2e": bench_e2e.main,
         "fig6_build": bench_build.main,
@@ -41,6 +41,7 @@ def main() -> None:
         "paged": bench_paged.main,
         "serve": bench_serve.main,
         "obs": bench_obs.main,
+        "fleet": bench_fleet.main,
     }
     print("name,us_per_call,derived")
     failed = 0

@@ -1,0 +1,65 @@
+"""Async serving quickstart (PR 9): the FrontDoor from asyncio.
+
+    PYTHONPATH=src python examples/async_serve.py
+
+An asyncio server task awaits `FrontDoor.query_async()` (or holds the
+`submit_async()` future) instead of blocking a thread on `.result()`:
+the request still flows through the same admission queue and
+cross-request micro-batching dispatcher, so N concurrent coroutines
+coalesce into fused scans exactly like N caller threads would -- with
+bit-identical results -- while the event loop stays free. With
+`adaptive_window=True` the dispatcher sizes its coalescing wait from
+the observed arrival rate (EWMA of inter-arrival gaps, clamped to
+[0, window_s]): a burst of concurrent requests batches, a lone request
+executes with ~zero added latency.
+"""
+import asyncio
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core.query import Q
+from repro.serving import FrontDoor
+from repro.storage import MicroNN
+
+
+async def one_request(fd: FrontDoor, q: np.ndarray, k: int):
+    rs = await fd.query_async(q, Q.knn(k=k).probe(8))
+    return rs.ids[0]
+
+
+async def main_async(fd: FrontDoor, queries: np.ndarray):
+    # 32 concurrent "server tasks": arrivals land inside one adaptive
+    # window and coalesce into a handful of fused calls
+    results = await asyncio.gather(
+        *(one_request(fd, q, 5) for q in queries))
+    st = fd.stats()
+    print(f"completed={st['completed']} batches={st['batches']} "
+          f"coalesced={st['coalesced']} "
+          f"occupancy={st['batch_occupancy']:.1f}")
+    print(f"adaptive window={st['window_ms']:.3f}ms "
+          f"(arrival ewma={st['arrival_ewma_ms']:.3f}ms)")
+    return results
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, d = 2000, 32
+    with tempfile.TemporaryDirectory() as tmp:
+        eng = MicroNN(dim=d, path=os.path.join(tmp, "db.sqlite"))
+        with eng.session() as s:
+            s.upsert(np.arange(n), rng.normal(size=(n, d)))
+        eng.build()
+        queries = rng.normal(size=(32, d)).astype(np.float32)
+        with FrontDoor(eng, adaptive_window=True) as fd:
+            results = asyncio.run(main_async(fd, queries))
+        # async answers == the plain synchronous engine's, bit for bit
+        for q, ids in zip(queries, results):
+            solo = eng.query(q, Q.knn(k=5).probe(8))
+            assert np.array_equal(solo.ids[0], ids)
+        print("async results bit-identical to solo query(): ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,9 +33,14 @@ python -m benchmarks.bench_serve --smoke
 # explain() trace's fault/compile counters reconcile exactly against the
 # pager stats deltas and the executor jit trace count
 python -m benchmarks.bench_obs --smoke
+# fleet-mode gate (PR 9): T tenants sharing ONE FramePool at budget B
+# vs naive per-tenant B/T pools on a Zipf-skewed workload -- answers
+# bit-identical across arms, pool bytes never exceed B, and the shared
+# pool's sustained QPS beats the equal split by >= 1.2x
+python -m benchmarks.bench_fleet --smoke
 # validate the artifacts: each bench must have written a well-formed
 # BENCH_*.json and no recorded acceptance gate may have failed
-python scripts/check_bench_json.py "$BENCH_JSON_DIR" quantized paged updates serve obs
+python scripts/check_bench_json.py "$BENCH_JSON_DIR" quantized paged updates serve obs fleet
 # public-API smoke: the quickstart exercises QuerySpec/ResultSet, write
 # sessions, hybrid queries and recovery end-to-end -- API breakage fails
 # the gate before the unit tests even start

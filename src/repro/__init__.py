@@ -7,5 +7,6 @@ Public surface:
     repro.configs.get_arch       -- --arch registry (10 assigned archs)
     repro.launch.dryrun          -- multi-pod dry-run + roofline
     repro.distributed            -- pod-scale distributed ANN search
+    repro.fleet.Fleet            -- multi-tenant engines, one FramePool
 """
 __version__ = "1.0.0"

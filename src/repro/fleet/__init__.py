@@ -1,0 +1,33 @@
+"""Fleet mode (PR 9): many per-tenant MicroNN engines behind ONE
+global memory budget and one maintenance daemon.
+
+  * `pool`    -- FramePool: the process-global, budget-bounded frame
+                 pool shared by every tenant's pager view (global CLOCK
+                 eviction, per-tenant pin accounting).
+  * `manager` -- Fleet: open/get/close tenants with lazy recover, an
+                 LRU of live engine handles that spills idle tenants,
+                 and FleetScheduler: one deficit-round-robin
+                 maintenance daemon for the whole fleet.
+
+`manager` imports the full engine stack, so it loads lazily (PEP 562)
+-- the pager can import `fleet.pool` without a circular import through
+`storage.engine`.
+"""
+from .pool import FramePool, compute_frame_bytes
+
+_LAZY = ("Fleet", "FleetScheduler")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from . import manager as _manager
+        return getattr(_manager, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))
+
+
+__all__ = ["FramePool", "compute_frame_bytes", "Fleet", "FleetScheduler",
+           "pool"]

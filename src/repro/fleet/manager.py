@@ -1,0 +1,341 @@
+"""Fleet manager (PR 9): many per-tenant MicroNN engines under ONE
+global memory budget, one live-handle LRU, and one maintenance daemon.
+
+The paper's deployment is one on-device index per user; the server-side
+mirror is one process hosting thousands of per-user/per-corpus indexes
+(RAG stores, chat-session memory, semantic caches). `Fleet` is that
+process's front door:
+
+    fleet = Fleet(root, dim=64, budget_mb=8.0, max_live=64)
+    eng = fleet.get("alice")          # lazy open + recover()
+    with eng.session() as s: s.upsert(ids, vecs)
+    eng.build()
+    rs = fleet.query("alice", q, Q.knn(k=10))
+    fleet.start_maintenance()         # ONE daemon for every tenant
+
+Resource governance, in three shared pieces:
+
+  * **One frame pool.** Every tenant's pager view is registered into a
+    single `FramePool` (fleet/pool.py): fleet-wide resident bytes <=
+    `budget_mb` BY CONSTRUCTION, and the pool's global CLOCK lets hot
+    tenants' working sets grow at cold tenants' expense -- no per-tenant
+    quota tuning, and strictly better capacity use than naive
+    equal-split per-tenant pools (gated by benchmarks/bench_fleet.py).
+
+  * **One live-handle LRU.** SQLite connections, index metadata
+    pytrees, and the optimizer are per-engine host state; `max_live`
+    bounds how many tenants keep theirs open. The LRU victim is
+    *spilled*: its frames invalidated, its store closed, its engine
+    dropped -- everything durable already lives in SQLite, so the next
+    `get()` simply re-opens and `recover()`s (paged recovery is
+    metadata-only; partitions fault back on first probe). Per-tenant
+    metrics are labeled by tenant NAME, so a reopened tenant resumes
+    its cumulative series.
+
+  * **One maintenance daemon.** `FleetScheduler` runs deficit round
+    robin over the live tenants' `MaintenanceScheduler`s: each round a
+    tenant may spend up to `quantum_rows` of maintenance work (debt
+    from an oversized step carries into its next round), so a churning
+    tenant cannot starve the rest -- every tenant with pending work
+    makes progress within a bounded number of rounds
+    (tests/test_fleet.py pins the bound).
+
+The executor's jit compile cache is process-global and keyed by the
+frozen QuerySpec + shapes (PR 4), never by engine identity -- so N
+tenants with a shared geometry compile once per (spec, Q-bucket) with
+no code here at all; tests assert the zero-retrace property.
+"""
+from __future__ import annotations
+
+import os
+import re
+import threading
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+from ..core.types import IVFConfig, PagedIndex, effective_pad_to
+from ..obs import metrics as obs_metrics
+from ..storage.engine import MicroNN
+from .pool import FramePool
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+
+class FleetScheduler:
+    """Deficit-round-robin maintenance across a fleet's live tenants.
+
+    One daemon thread serves every tenant's `MaintenanceScheduler`: each
+    round visits the live tenants in order, granting each `quantum_rows`
+    of credit; a tenant steps (bounded quanta, under ITS engine lock)
+    until its credit runs out or its queue idles. Unused credit is NOT
+    banked (an idle tenant starts the next round at zero), while
+    overdraft from a final oversized step carries as debt -- the classic
+    DRR fairness bound: over any window, every backlogged tenant gets
+    within one max-step of its 1/N share, so a churning tenant cannot
+    starve the rest."""
+
+    # idle-fleet wait multiplier: with no actionable work anywhere the
+    # daemon sleeps interval_s * _IDLE_BACKOFF between polls (woken
+    # early by kick())
+    _IDLE_BACKOFF = 8
+
+    def __init__(self, fleet: "Fleet", *, quantum_rows: Optional[int] = None,
+                 interval_s: float = 0.002, metrics=None):
+        self.fleet = fleet
+        self.quantum_rows = int(quantum_rows or fleet.max_rows_per_step)
+        self.interval_s = float(interval_s)
+        self._deficit: Dict[str, float] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        if metrics is None:
+            metrics = fleet.metrics.scope(component="fleet_scheduler")
+        self._c_rounds = metrics.counter("rounds")
+        self._c_steps = metrics.counter("steps")
+
+    def step_round(self) -> int:
+        """One full rotation over the live tenants; returns the number
+        of maintenance steps executed. Callable without the daemon (the
+        hand-cranked test/drain path)."""
+        with self.fleet._lock:
+            items = list(self.fleet._live.items())
+        steps = 0
+        for name, eng in items:
+            credit = self._deficit.get(name, 0.0) + self.quantum_rows
+            while credit > 0:
+                # per-step engine lock (never the fleet lock): queries on
+                # other tenants, and snapshot reads on this one, proceed
+                with eng.lock:
+                    if getattr(eng, "_spilled", False):
+                        report = None
+                    else:
+                        report = eng.scheduler.step(daemon=True)
+                if report is None:
+                    credit = 0.0        # queue idle: no banked credit
+                    break
+                steps += 1
+                credit -= max(int(report.rows), 1)
+            self._deficit[name] = min(credit, 0.0)   # carry only debt
+        self._c_rounds.inc()
+        if steps:
+            self._c_steps.inc(steps)
+        return steps
+
+    def drain(self, timeout: float = 30.0) -> int:
+        """Hand-crank rounds until no tenant has actionable work."""
+        deadline = time.monotonic() + timeout
+        total = 0
+        while True:
+            did = self.step_round()
+            total += did
+            if not did:
+                return total
+            if time.monotonic() > deadline:
+                raise TimeoutError("fleet maintenance did not drain")
+
+    # -- daemon --------------------------------------------------------------
+    @property
+    def alive(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self):
+        if self.alive:
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._loop, name="micronn-fleet-maintenance",
+            daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout: float = 5.0):
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._wake.set()
+        self._thread.join(timeout)
+        self._thread = None
+
+    def kick(self):
+        """Wake the daemon early (a writer just queued work)."""
+        self._wake.set()
+
+    def _loop(self):
+        while not self._stop.is_set():
+            did = self.step_round()
+            wait = self.interval_s if did \
+                else self.interval_s * self._IDLE_BACKOFF
+            self._wake.wait(wait)
+            self._wake.clear()
+
+
+class Fleet:
+    """Open/get/close many per-tenant MicroNN engines over one shared
+    FramePool, one live-handle LRU, and one maintenance daemon."""
+
+    def __init__(self, root: str, *, dim: int, n_attr: int = 0,
+                 budget_mb: float = 8.0, max_live: int = 64,
+                 config: Optional[IVFConfig] = None,
+                 quantize: Optional[str] = None,
+                 rerank_factor: Optional[int] = None,
+                 max_rows_per_step: int = 4096,
+                 maintenance_interval_s: float = 0.002):
+        import dataclasses
+        assert budget_mb > 0, budget_mb
+        assert max_live >= 1, max_live
+        cfg = config or IVFConfig(dim=dim)
+        if quantize is not None:
+            cfg = dataclasses.replace(cfg, quantize=quantize)
+        if rerank_factor is not None:
+            cfg = dataclasses.replace(cfg, rerank_factor=rerank_factor)
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.dim = int(dim)
+        self.n_attr = int(n_attr)
+        self.budget_mb = float(budget_mb)
+        self.max_live = int(max_live)
+        self.config = cfg
+        self.max_rows_per_step = int(max_rows_per_step)
+        # ONE pool for the whole fleet, allocated eagerly at the global
+        # budget (resident bytes <= budget from the first fault onward);
+        # geometry starts at the config's pad and grows to the largest
+        # tenant via the ordinary resize path on registration
+        self.pool = FramePool(
+            dim=self.dim, p_max=effective_pad_to(cfg),
+            budget_bytes=int(self.budget_mb * 2 ** 20),
+            payload="int8" if cfg.quantize == "int8" else "f32",
+            n_attr=self.n_attr)
+        self._lock = threading.RLock()
+        self._live: "OrderedDict[str, MicroNN]" = OrderedDict()
+        self._closed = False
+        self.metrics = obs_metrics.default_registry().scope(
+            component="fleet", inst=str(obs_metrics.next_instance()))
+        self._c_opens = self.metrics.counter("tenant_opens")
+        self._c_spills = self.metrics.counter("tenant_spills")
+        self.metrics.gauge("resident_bytes",
+                           fn=lambda: self.pool.resident_bytes)
+        self.metrics.gauge("live_tenants", fn=lambda: len(self._live))
+        self.scheduler = FleetScheduler(
+            self, interval_s=maintenance_interval_s,
+            quantum_rows=max_rows_per_step)
+
+    # -- tenant lifecycle ----------------------------------------------------
+    def _path(self, name: str) -> str:
+        assert _NAME_RE.match(name), \
+            f"tenant name {name!r} must match {_NAME_RE.pattern}"
+        return os.path.join(self.root, f"{name}.db")
+
+    def get(self, name: str) -> MicroNN:
+        """The tenant's live engine: opened + `recover()`ed lazily on
+        first touch, then LRU-cached up to `max_live` handles (the LRU
+        victim is spilled -- see _spill)."""
+        with self._lock:
+            assert not self._closed, "Fleet is closed"
+            eng = self._live.get(name)
+            if eng is not None:
+                self._live.move_to_end(name)
+                return eng
+            eng = MicroNN(
+                self.dim, self.n_attr, path=self._path(name),
+                config=self.config,
+                memory_budget_mb=self.budget_mb,
+                max_rows_per_step=self.max_rows_per_step,
+                frame_pool=self.pool, tenant=name)
+            eng.recover()
+            self._live[name] = eng
+            self._c_opens.inc()
+            while len(self._live) > self.max_live:
+                victim = next(iter(self._live))
+                if victim == name:
+                    break
+                self._spill(victim)
+            return eng
+
+    open = get
+
+    def _spill(self, name: str):
+        """Evict one live handle: invalidate its frames (they describe
+        an engine that is about to vanish), close its SQLite
+        connections, and drop the engine. Everything durable -- rows,
+        clustering, codes, pending delta (partition -1), maintenance
+        signals -- already lives in SQLite, so a later get() re-opens
+        and recover()s to an equivalent engine."""
+        eng = self._live.pop(name)
+        with eng.lock:
+            # flag checked under the engine lock by the fleet daemon: a
+            # step scheduled against a spilled engine becomes a no-op
+            # instead of touching a closed connection
+            eng._spilled = True
+            if isinstance(eng.index, PagedIndex):
+                eng.index.cache.invalidate_all()
+            eng.index = None
+            eng.optimizer = None
+            eng.store.close()
+        self._deficit_forget(name)
+        self._c_spills.inc()
+
+    def _deficit_forget(self, name: str):
+        self.scheduler._deficit.pop(name, None)
+
+    def close(self, name: Optional[str] = None):
+        """Close one tenant (spill it), or -- with no name -- stop the
+        maintenance daemon and spill every live tenant."""
+        if name is not None:
+            with self._lock:
+                if name in self._live:
+                    self._spill(name)
+            return
+        self.scheduler.stop()
+        with self._lock:
+            for n in list(self._live):
+                self._spill(n)
+            self._closed = True
+
+    def __enter__(self) -> "Fleet":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+    # -- convenience ---------------------------------------------------------
+    def query(self, name: str, vecs, spec=None, **kwargs):
+        return self.get(name).query(vecs, spec, **kwargs)
+
+    def tenants(self) -> List[str]:
+        """Every tenant known to this fleet root (live or on disk)."""
+        on_disk = {f[:-3] for f in os.listdir(self.root)
+                   if f.endswith(".db")}
+        with self._lock:
+            return sorted(on_disk | set(self._live))
+
+    def live_tenants(self) -> List[str]:
+        with self._lock:
+            return list(self._live)
+
+    # -- maintenance ---------------------------------------------------------
+    def start_maintenance(self):
+        self.scheduler.start()
+
+    def stop_maintenance(self):
+        self.scheduler.stop()
+
+    def maintain(self, until_idle: bool = True) -> int:
+        """Foreground maintenance: one deficit round (or rounds until
+        every tenant idles)."""
+        if until_idle:
+            return self.scheduler.drain()
+        return self.scheduler.step_round()
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            live = list(self._live)
+        return {"budget_bytes": self.pool.budget_bytes,
+                "resident_bytes": self.pool.resident_bytes,
+                "capacity_frames": self.pool.capacity,
+                "live_tenants": live,
+                "tenant_opens": self._c_opens.value,
+                "tenant_spills": self._c_spills.value,
+                "daemon_alive": self.scheduler.alive,
+                "pool": self.pool.stats()}

@@ -1,0 +1,537 @@
+"""Process-global frame pool: ONE budget-bounded buffer pool of
+partition frames shared by MANY tenants (PR 9's fleet mode).
+
+PR 6's `storage.pager.PartitionCache` owned its pool outright: one
+engine, one budget, one frame table. The server-side mirror of the
+paper's per-device story -- thousands of per-user indexes in one
+process -- needs the opposite ownership: the POOL is the process-wide
+singleton and each engine holds only a *view* into it. This module is
+that pool, extracted from the pager with one key change: the frame
+table is keyed by `(tenant, pid)` instead of `pid`.
+
+Everything else is the PR 6 design, globalized:
+
+  * F frames are preallocated up front from the byte budget (the pool
+    never grows, so FLEET-wide resident bytes <= the budget by
+    construction -- no per-tenant quota tuning can violate it);
+  * eviction is one global CLOCK sweep across all tenants' frames: a
+    hot tenant's frames keep their reference bits refreshed and stay
+    resident, a cold tenant's frames go cold and get reclaimed --
+    tenant working sets size themselves to the traffic, which is the
+    whole point over naive equal-split per-tenant pools;
+  * the scan-resistant admission ring is likewise global: ONE tenant's
+    one-off exact scan is capped at `scan_frames` frames and cannot
+    flush any tenant's hot working set;
+  * pins are per-frame with per-tenant accounting (`pinned_count`), so
+    a fleet can report who holds what and tests can bound each
+    tenant's footprint;
+  * read-ahead staging blocks are keyed `(tenant, pid)` with the same
+    generation counter, so one tenant's invalidation storm drops only
+    advisory state.
+
+One pool = one frame GEOMETRY. Every registered tenant must share the
+payload dtype, vector dim, and attr width (a fleet of same-embedding
+per-user stores, the common production shape); `p_max` is unified to
+the largest registered tenant via the ordinary resize path (which
+drops all frames -- resident state is a cache, correctness is
+unaffected). Heterogeneous fleets run one pool per geometry.
+
+Eviction policy NEVER changes results -- a fault re-reads the durable
+tier -- so a tenant's answers through a shared pool are bit-identical
+to the same engine running solo (asserted by tests/test_fleet.py and
+gated by benchmarks/bench_fleet.py).
+
+The per-tenant view (fault/stage/unpin/invalidate + counters) remains
+`storage.pager.PartitionCache`; in solo mode it simply constructs a
+private single-tenant FramePool, so a standalone engine's behavior --
+down to the donated-scatter aliasing and the hit/miss counting order
+pinned by tests/test_pager.py -- is unchanged.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import INVALID_ID
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _scatter_frames(payload_pool, ids_pool, valid_pool, fidx, payload,
+                    ids, valid):
+    """Donated in-place scatter of freshly fetched frames into the pool:
+    the three pool buffers are aliased input->output, so the update costs
+    O(fetched frames) writes, not a pool-sized copy."""
+    return (payload_pool.at[fidx].set(payload),
+            ids_pool.at[fidx].set(ids),
+            valid_pool.at[fidx].set(valid))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_one(pool, fidx, block):
+    """Donated single-pool scatter (the optional attrs pool)."""
+    return pool.at[fidx].set(block)
+
+
+def compute_frame_bytes(p_max: int, dim: int, payload: str = "f32",
+                        n_attr: int = 0) -> int:
+    """Bytes one partition frame costs: payload + ids + valid + attrs."""
+    per_row = (1 if payload == "int8" else 4) * dim + 4 + 1 + 4 * n_attr
+    return p_max * per_row
+
+
+class FramePool:
+    """Budget-bounded pool of partition frames shared across tenants.
+
+    Tenants are `storage.pager.PartitionCache` views registered via
+    `register(view, name, p_max)`; the view supplies the per-tenant
+    fetch path (`_fetch_blocks` over ITS VectorStore, with its metric
+    normalisation and quantizer stats) and the per-tenant cumulative
+    counters; the pool owns frames, eviction, pins, and staging.
+    """
+
+    def __init__(self, *, dim: int, p_max: int, budget_bytes: int,
+                 payload: str = "f32", n_attr: int = 0):
+        assert payload in ("f32", "int8"), payload
+        self.dim = int(dim)
+        self.payload = payload
+        self.n_attr = int(n_attr)
+        self.budget_bytes = int(budget_bytes)
+        # guards every public method: tenants' query threads, the fleet
+        # maintenance daemon, and prefetch threads all interleave here
+        self._lock = threading.RLock()
+        # tenant bookkeeping: name -> stable integer tid (stable across
+        # re-registration, so a rebuilt engine keeps its identity), tid
+        # -> live view, and per-tenant pin / resident-frame accounting
+        self._tid_by_name: Dict[str, int] = {}
+        self._tenants: Dict[int, object] = {}
+        self._tids = itertools.count()
+        self._t_pins: Dict[int, int] = {}
+        self._t_resident: Dict[int, int] = {}
+        self._alloc(p_max)
+
+    # -- registration --------------------------------------------------------
+    def register(self, view, name: str, p_max: int) -> int:
+        """Attach a tenant view; returns its tid. One pool = one frame
+        geometry: payload dtype / dim / attr width must match; a larger
+        p_max grows the pool for everyone (dropping all frames, like any
+        resize). Re-registering a name (a paged rebuild re-attaching)
+        drops the old view's frames and rebinds the tid."""
+        assert view.payload == self.payload, \
+            f"pool holds {self.payload} frames, tenant {name!r} wants " \
+            f"{view.payload}"
+        assert view.store.dim == self.dim, \
+            f"pool geometry is dim={self.dim}, tenant {name!r} has " \
+            f"dim={view.store.dim}"
+        n_attr = view.store.n_attr if view.with_attrs else 0
+        assert n_attr == self.n_attr, \
+            f"pool geometry is n_attr={self.n_attr}, tenant {name!r} " \
+            f"has n_attr={n_attr}"
+        with self._lock:
+            tid = self._tid_by_name.get(name)
+            if tid is None:
+                tid = next(self._tids)
+                self._tid_by_name[name] = tid
+            else:
+                # re-attachment: the old view's frames describe an index
+                # generation that no longer exists
+                self._invalidate_tenant_locked(tid)
+            self._tenants[tid] = view
+            self._t_pins.setdefault(tid, 0)
+            self._t_resident.setdefault(tid, 0)
+        if p_max > self.p_max:
+            self.resize(p_max)
+        return tid
+
+    # -- pool allocation ----------------------------------------------------
+    def _alloc(self, p_max: int):
+        # validate before mutating any state: a failed resize must leave
+        # the pool fully usable at its old geometry
+        frame_bytes = compute_frame_bytes(p_max, self.dim, self.payload,
+                                          self.n_attr)
+        cap = self.budget_bytes // frame_bytes
+        if cap < 1:
+            raise ValueError(
+                f"memory budget {self.budget_bytes}B cannot seat one "
+                f"partition frame ({frame_bytes}B at p_max={p_max})")
+        self.p_max = int(p_max)
+        self.frame_bytes = frame_bytes
+        self.capacity = int(cap)
+        shape = (self.capacity, self.p_max, self.dim)
+        if self.payload == "int8":
+            self.payload_pool = jnp.zeros(shape, jnp.int8)
+        else:
+            self.payload_pool = jnp.zeros(shape, jnp.float32)
+        self.ids_pool = jnp.full((self.capacity, self.p_max), INVALID_ID,
+                                 jnp.int32)
+        self.valid_pool = jnp.zeros((self.capacity, self.p_max), bool)
+        self.attrs_pool = (
+            jnp.zeros((self.capacity, self.p_max, self.n_attr), jnp.float32)
+            if self.n_attr else None)
+        # host-side frame table (frame -> (tenant, partition) indirection)
+        self._frame_pid = np.full(self.capacity, -1, np.int64)
+        self._frame_tid = np.full(self.capacity, -1, np.int64)
+        self._key_frame: Dict[Tuple[int, int], int] = {}
+        self._ref = np.zeros(self.capacity, bool)
+        self._pins = np.zeros(self.capacity, np.int64)
+        # invalidated-while-pinned frames: freed at the last unpin
+        self._stale = np.zeros(self.capacity, bool)
+        self._hand = 0
+        # scan-resistant admission: ring of frames owned by non-admitted
+        # (one-off stream) faults; scan_frames bounds how much of the
+        # pool a full scan may dirty
+        self.scan_frames = max(1, self.capacity // 4)
+        self._transient = np.zeros(self.capacity, bool)
+        self._ring: List[int] = []
+        self._ring_hand = 0
+        # read-ahead staging: (tid, pid) -> (payload, ids, valid, attrs)
+        # host blocks prefetched by stage(); the generation counter lets
+        # invalidate()/resize() discard stages still in flight
+        self._staged: Dict[Tuple[int, int], tuple] = {}
+        self._stage_gen = getattr(self, "_stage_gen", 0) + 1
+        for tid in self._t_resident:
+            self._t_resident[tid] = 0
+
+    def resize(self, p_max: int):
+        """Reallocate the pool for a larger partition size. Drops every
+        tenant's frames -- resident state is a cache -- but keeps the
+        byte budget and each tenant's cumulative counters. Waits for
+        in-flight scans (any tenant) to unpin first: _alloc rebuilds the
+        pin table (and may shrink the frame count), so reallocating
+        under a live pin would corrupt a concurrent scan's unpin
+        bookkeeping."""
+        deadline = time.monotonic() + 30.0
+        while True:
+            with self._lock:
+                if not self._pins.any():
+                    self._alloc(p_max)
+                    return
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    "resize timed out waiting for pinned frames -- a scan "
+                    "leaked a pin (missing unpin())")
+            time.sleep(0.001)
+
+    # -- budget accounting ---------------------------------------------------
+    @property
+    def resident_bytes(self) -> int:
+        pools = [self.payload_pool, self.ids_pool, self.valid_pool]
+        if self.attrs_pool is not None:
+            pools.append(self.attrs_pool)
+        return int(sum(p.nbytes for p in pools))
+
+    def resident_count(self, tid: int) -> int:
+        with self._lock:
+            return self._t_resident.get(tid, 0)
+
+    def pinned_count(self, tid: int) -> int:
+        with self._lock:
+            return self._t_pins.get(tid, 0)
+
+    def stats(self) -> dict:
+        """Fleet-wide pool view: geometry + per-tenant frame footprint."""
+        with self._lock:
+            by_name = {}
+            for name, tid in self._tid_by_name.items():
+                by_name[name] = {"resident_frames": self._t_resident
+                                 .get(tid, 0),
+                                 "pinned_frames": self._t_pins.get(tid, 0)}
+            return {"budget_bytes": self.budget_bytes,
+                    "resident_bytes": self.resident_bytes,
+                    "capacity_frames": self.capacity,
+                    "frame_bytes": self.frame_bytes,
+                    "p_max": self.p_max,
+                    "resident_partitions": len(self._key_frame),
+                    "tenants": by_name}
+
+    # -- clock eviction ------------------------------------------------------
+    def _release_ring(self, f: int):
+        """Remove a frame from the scan ring (promotion or reclaim)."""
+        self._transient[f] = False
+        if f in self._ring:
+            self._ring.remove(f)
+            self._ring_hand = 0
+
+    def _clock_victim(self) -> int:
+        """Second-chance sweep across ALL tenants' frames: skip pinned
+        frames, clear reference bits, reclaim the first cold unpinned
+        frame (transient scan-ring frames carry no reference bit, so
+        they fall out first)."""
+        for _ in range(3 * self.capacity):
+            f = self._hand
+            self._hand = (self._hand + 1) % self.capacity
+            if self._pins[f] > 0:
+                continue
+            if self._ref[f] and not self._transient[f]:
+                self._ref[f] = False
+                continue
+            if self._transient[f]:
+                self._release_ring(f)
+            return f
+        raise RuntimeError(
+            "all cache frames pinned -- probe chunk exceeds pool capacity")
+
+    def _victim(self) -> int:
+        """Victim for an *admitted* fault: scan-ring frames first (a
+        one-off stream must never force out hot admitted frames), then
+        the CLOCK sweep."""
+        for f in self._ring:
+            if self._pins[f] == 0:
+                self._release_ring(f)
+                return f
+        return self._clock_victim()
+
+    def _scan_victim(self) -> int:
+        """Victim for a NON-admitted (scan-resistant) fault: reuse ring
+        frames round-robin; grow the ring (via the normal sweep) only up
+        to scan_frames."""
+        for _ in range(len(self._ring)):
+            f = self._ring[self._ring_hand % len(self._ring)]
+            self._ring_hand += 1
+            if self._pins[f] == 0:
+                return f
+        if len(self._ring) < self.scan_frames:
+            f = self._clock_victim()
+            self._ring.append(f)
+            self._transient[f] = True
+            return f
+        raise RuntimeError(
+            "scan ring exhausted -- chunk a non-admitted scan to at most "
+            f"scan_frames={self.scan_frames} missing partitions")
+
+    # -- staging -------------------------------------------------------------
+    def stage(self, tid: int, pids: Sequence[int]):
+        """Read ahead for one tenant: fetch + pack the listed partitions'
+        blocks into the host-side staging dict so the tenant's next
+        fault() skips its SQL round-trip. Takes no frames and no pins,
+        and never rebinds a pool -- safe on a prefetch thread while any
+        tenant scans. Advisory only: a concurrent invalidate() bumps the
+        generation and the whole in-flight stage is discarded."""
+        view = self._tenants[tid]
+        with self._lock:
+            gen = self._stage_gen
+            want = [int(p) for p in pids
+                    if (tid, int(p)) not in self._key_frame
+                    and (tid, int(p)) not in self._staged]
+        if not want:
+            return
+        payload, ids, valid, attrs = view._fetch_blocks(want)
+        view._c_bytes_staged.inc(
+            payload.nbytes + ids.nbytes + valid.nbytes +
+            (0 if attrs is None else attrs.nbytes))
+        with self._lock:
+            if gen != self._stage_gen:
+                return          # a writer invalidated mid-fetch: drop all
+            # bound leftover entries (a scan that raised mid-stream never
+            # consumes its staged chunk) -- the dict may never outgrow a
+            # few chunks of host blocks
+            if len(self._staged) > 2 * self.capacity:
+                self._staged.clear()
+            for i, p in enumerate(want):
+                if (tid, p) in self._key_frame:  # faulted while we fetched
+                    continue
+                self._staged[(tid, p)] = (payload[i], ids[i], valid[i],
+                                          None if attrs is None
+                                          else attrs[i])
+
+    # -- fault / pin / invalidate -------------------------------------------
+    def fault(self, tid: int, pids: Sequence[int],
+              admit: bool = True) -> np.ndarray:
+        with self._lock:
+            return self._fault_locked(tid, pids, admit)
+
+    def _fault_locked(self, tid: int, pids: Sequence[int],
+                      admit: bool) -> np.ndarray:
+        view = self._tenants[tid]
+        # pins held by in-flight scans (ANY tenant) at entry decide
+        # whether the scatter may donate the pool buffers: donation
+        # invalidates the old arrays, which a concurrent scan -- no
+        # matter whose -- may still be reading
+        foreign_pins = int(self._pins.sum())
+        want = [int(p) for p in pids]
+        if len(want) > self.capacity:
+            raise ValueError(
+                f"probe set of {len(want)} partitions exceeds the pool's "
+                f"{self.capacity} frames -- chunk the scan")
+        frames = np.empty(len(want), np.int32)
+        missing = []
+        hit_frames = []
+        for j, p in enumerate(want):
+            f = self._key_frame.get((tid, p))
+            if f is not None:
+                if admit:
+                    self._ref[f] = True
+                    if self._transient[f]:
+                        # an admitted hit proves the frame hot: promote
+                        # it out of the scan ring into the admitted set
+                        self._release_ring(f)
+                self._pins[f] += 1
+                self._t_pins[tid] += 1
+                frames[j] = f
+                hit_frames.append(f)
+            else:
+                missing.append((j, p))
+        if hit_frames:
+            view._c_hits.inc(len(hit_frames))
+        if not missing:
+            view._last_fault = (len(hit_frames), 0, 0, 0)
+            return frames
+        new_frames = []
+        n_evicted = 0
+        for j, p in missing:
+            f = self._victim() if admit else self._scan_victim()
+            old_pid = int(self._frame_pid[f])
+            if old_pid >= 0:
+                old_tid = int(self._frame_tid[f])
+                del self._key_frame[(old_tid, old_pid)]
+                self._t_resident[old_tid] -= 1
+                n_evicted += 1
+            self._frame_pid[f] = p
+            self._frame_tid[f] = tid
+            self._key_frame[(tid, p)] = f
+            self._t_resident[tid] += 1
+            self._ref[f] = admit
+            self._pins[f] += 1
+            self._t_pins[tid] += 1
+            frames[j] = f
+            new_frames.append(f)
+        # counted BEFORE the fetch: a failed fetch still paid the miss
+        # (and already evicted its victims) -- pinned by tests/test_pager
+        view._c_misses.inc(len(missing))
+        if n_evicted:
+            view._c_evictions.inc(n_evicted)
+        n_bytes = 0
+        try:
+            # consume staged read-ahead blocks first; anything not staged
+            # is fetched in one batched SQL round-trip as before
+            staged = {p: self._staged.pop((tid, p))
+                      for _, p in missing if (tid, p) in self._staged}
+            n_staged = len(staged)
+            if n_staged:
+                view._c_staged_consumed.inc(n_staged)
+            fetch = [p for _, p in missing if p not in staged]
+            if fetch:
+                f_pay, f_ids, f_val, f_att = view._fetch_blocks(fetch)
+                n_bytes = f_pay.nbytes + f_ids.nbytes + f_val.nbytes + \
+                    (0 if f_att is None else f_att.nbytes)
+                view._c_bytes_read.inc(n_bytes)
+                for i, p in enumerate(fetch):
+                    staged[p] = (f_pay[i], f_ids[i], f_val[i],
+                                 None if f_att is None else f_att[i])
+            order = [staged[p] for _, p in missing]
+            payload = jnp.asarray(np.stack([e[0] for e in order]))
+            bids = jnp.asarray(np.stack([e[1] for e in order]))
+            bval = jnp.asarray(np.stack([e[2] for e in order]))
+            battrs = None if self.attrs_pool is None else \
+                jnp.asarray(np.stack([e[3] for e in order]))
+            fidx = jnp.asarray(np.asarray(new_frames, np.int32))
+            if foreign_pins == 0:
+                # no concurrent scan can be reading the old pool objects:
+                # donate them -- the scatter updates the buffers in place
+                # instead of writing a second pool-sized copy
+                self.payload_pool, self.ids_pool, self.valid_pool = \
+                    _scatter_frames(self.payload_pool, self.ids_pool,
+                                    self.valid_pool, fidx, payload,
+                                    bids, bval)
+                if self.attrs_pool is not None:
+                    self.attrs_pool = _scatter_one(
+                        self.attrs_pool, fidx, battrs)
+            else:
+                # a scan may still hold the old arrays: copy-on-write
+                self.payload_pool = self.payload_pool.at[fidx].set(payload)
+                self.ids_pool = self.ids_pool.at[fidx].set(bids)
+                self.valid_pool = self.valid_pool.at[fidx].set(bval)
+                if self.attrs_pool is not None:
+                    self.attrs_pool = self.attrs_pool.at[fidx].set(battrs)
+        except BaseException:
+            # roll back the provisional registrations: the frames never
+            # received data, so a later fault must not count them as hits
+            # (and their pins must not leak until _victim starves); hit
+            # pins are released too -- the caller gets no frames to unpin
+            for (j, p), f in zip(missing, new_frames):
+                if self._key_frame.pop((tid, p), None) is not None:
+                    self._t_resident[tid] -= 1
+                self._frame_pid[f] = -1
+                self._frame_tid[f] = -1
+                self._ref[f] = False
+                self._pins[f] -= 1
+                self._t_pins[tid] -= 1
+            for f in hit_frames:
+                self._pins[f] -= 1
+                self._t_pins[tid] -= 1
+            raise
+        view._last_fault = (len(hit_frames), len(missing), n_staged,
+                            n_bytes)
+        return frames
+
+    def _free_frame(self, f: int):
+        self._frame_pid[f] = -1
+        self._frame_tid[f] = -1
+        self._ref[f] = False
+        self._stale[f] = False
+
+    def unpin(self, frames: np.ndarray):
+        with self._lock:
+            for f in np.asarray(frames, np.int64):
+                assert self._pins[f] > 0, f"frame {f} not pinned"
+                self._pins[f] -= 1
+                tid = int(self._frame_tid[f])
+                if tid >= 0:
+                    self._t_pins[tid] -= 1
+                if self._pins[f] == 0 and self._stale[f]:
+                    # invalidated while this scan was reading it: the
+                    # deferred release happens at the last unpin
+                    self._free_frame(f)
+
+    def invalidate(self, tid: int, pids: Sequence[int]):
+        """Drop one tenant's listed frames (durable rows changed); the
+        next fault re-reads them from SQLite. A frame pinned by an
+        in-flight scan is released lazily at its last unpin -- the scan
+        keeps its pre-invalidation snapshot, the mapping is gone at
+        once."""
+        with self._lock:
+            # discard staged read-ahead for the changed partitions, and
+            # bump the generation so an in-flight stage() that read them
+            # mid-write drops its whole batch instead of inserting
+            self._stage_gen += 1
+            for p in pids:
+                self._staged.pop((tid, int(p)), None)
+                f = self._key_frame.pop((tid, int(p)), None)
+                if f is None:
+                    continue
+                self._t_resident[tid] -= 1
+                if self._pins[f] > 0:
+                    self._stale[f] = True
+                    continue
+                self._free_frame(f)
+
+    def _invalidate_tenant_locked(self, tid: int):
+        self.invalidate(tid, [p for (t, p) in list(self._key_frame)
+                              if t == tid])
+        self._staged = {k: v for k, v in self._staged.items()
+                        if k[0] != tid}
+
+    def invalidate_tenant(self, tid: int):
+        """Drop every frame and staged block a tenant holds (rebuild,
+        spill, or close)."""
+        with self._lock:
+            self._invalidate_tenant_locked(tid)
+
+    # -- per-tenant views ----------------------------------------------------
+    def tenant_frames(self, tid: int) -> Dict[int, int]:
+        """pid -> frame mapping for one tenant (test/introspection view;
+        the hot path uses the keyed dict directly)."""
+        with self._lock:
+            return {p: f for (t, p), f in self._key_frame.items()
+                    if t == tid}
+
+    def tenant_staged(self, tid: int) -> Dict[int, tuple]:
+        with self._lock:
+            return {p: v for (t, p), v in self._staged.items()
+                    if t == tid}

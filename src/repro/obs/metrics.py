@@ -40,6 +40,7 @@ import itertools
 import re
 import threading
 from bisect import bisect_left
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
 # Default histogram buckets: log-spaced upper edges covering 1us..~134s
@@ -241,24 +242,59 @@ class Histogram:
 
 
 class MetricsRegistry:
-    """Thread-safe get-or-create registry keyed on (name, labels)."""
+    """Thread-safe get-or-create registry keyed on (name, labels).
 
-    def __init__(self):
+    Cardinality guard (PR 9): fleet mode labels series per TENANT, so
+    an unbounded tenant population must not grow the registry without
+    bound. Each metric NAME keeps an LRU over its label sets, capped at
+    `max_series_per_name`; registering a fresh label set past the cap
+    evicts the least-recently-REGISTERED/looked-up series for that name
+    and increments the registry's own `obs_series_evicted` counter. An
+    evicted series simply restarts from zero if its component comes
+    back (get-or-create re-creates it) -- the same contract as a
+    process restart. The LRU is touched only inside _get (component
+    construction), never on inc()/observe(), so the hot-path
+    zero-allocation guarantee is unchanged."""
+
+    def __init__(self, max_series_per_name: int = 512):
         self._lock = threading.Lock()
         self._metrics: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
                             object] = {}
+        # name -> OrderedDict(label_key -> None), most recent LAST
+        self._by_name: Dict[str, "OrderedDict"] = {}
+        self.max_series_per_name = int(max_series_per_name)
+
+    def _evicted_counter(self) -> Counter:
+        # the guard's own telemetry, registered directly (self._lock is
+        # NOT re-entrant) under its own name: a single-series name, so
+        # it can never evict itself
+        key = ("obs_series_evicted", ())
+        m = self._metrics.get(key)
+        if m is None:
+            m = Counter(*key)
+            self._metrics[key] = m
+            self._by_name.setdefault("obs_series_evicted",
+                                     OrderedDict())[()] = None
+        return m
 
     def _get(self, cls, name: str, labels: Dict[str, str], **kwargs):
         key = (name, _label_key(labels))
         with self._lock:
             m = self._metrics.get(key)
+            lru = self._by_name.setdefault(name, OrderedDict())
             if m is None:
+                while len(lru) >= max(self.max_series_per_name, 1):
+                    old_labels, _ = lru.popitem(last=False)
+                    del self._metrics[(name, old_labels)]
+                    self._evicted_counter().inc()
                 m = cls(name, key[1], **kwargs)
                 self._metrics[key] = m
+                lru[key[1]] = None
             else:
                 assert isinstance(m, cls), \
                     f"metric {name!r}{labels} already registered as " \
                     f"{m.kind}, not {cls.kind}"
+                lru.move_to_end(key[1])
             return m
 
     def counter(self, name: str, **labels) -> Counter:

@@ -81,15 +81,17 @@ _STAT_KEYS = ("queued", "inflight", "submitted", "completed", "failed",
               "coalesced", "batches", "solo", "batch_occupancy",
               "queue_wait_p50_ms", "queue_wait_p99_ms",
               "execute_p50_ms", "execute_p99_ms",
-              "total_p50_ms", "total_p99_ms")
+              "total_p50_ms", "total_p99_ms",
+              "window_ms", "arrival_ewma_ms")
+
+_FLOAT_KEYS = ("batch_occupancy", "window_ms", "arrival_ewma_ms")
 
 
 def empty_stats() -> Dict:
     """The zeroed counter dict MicroNN.stats() reports when no front
     door is attached -- same keys as FrontDoor.stats(), so dashboards
     and tests read one uniform shape in every mode."""
-    return {k: 0 if k not in
-            ("batch_occupancy",) else 0.0 for k in _STAT_KEYS}
+    return {k: 0 if k not in _FLOAT_KEYS else 0.0 for k in _STAT_KEYS}
 
 
 @dataclasses.dataclass
@@ -120,12 +122,24 @@ class FrontDoorConfig:
                      daemon thread, draining quanta while this queue is
                      idle
     daemon_interval_s  the daemon's poll cadence
+    adaptive_window  size the coalescing window from the OBSERVED
+                     arrival rate instead of the fixed window_s: an
+                     EWMA of inter-arrival gaps picks the wait that
+                     coalesces ~coalesce_target requests, clamped to
+                     [0, window_s] -- sparse traffic pays ~zero added
+                     latency (window collapses to 0 when the next
+                     arrival is unlikely inside window_s), dense
+                     traffic still batches up to the cap
+    coalesce_target  requests the adaptive window aims to coalesce
+                     per fused call (the EWMA gap multiplier)
     """
 
     window_s: float = 0.002
     max_batch_rows: int = 64
     maintenance: bool = False
     daemon_interval_s: float = 0.002
+    adaptive_window: bool = False
+    coalesce_target: int = 8
 
 
 class FrontDoor:
@@ -169,6 +183,15 @@ class FrontDoor:
         self._h_wait = metrics.histogram("queue_wait_s")
         self._h_exec = metrics.histogram("execute_s")
         self._h_total = metrics.histogram("total_s")
+        # adaptive coalescing window (PR 9): EWMA of inter-arrival gaps
+        # observed at submit(), and the effective window the dispatcher
+        # last used -- both surfaced as registry gauges + stats() keys
+        self._ewma_gap_s: Optional[float] = None
+        self._last_arrival_s: Optional[float] = None
+        self._window_s = cfg.window_s
+        self._g_window = metrics.gauge("window_s")
+        self._g_window.set(cfg.window_s)
+        self._g_ewma = metrics.gauge("arrival_ewma_s")
         # -- threads -------------------------------------------------------
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name="micronn-frontdoor",
@@ -206,8 +229,39 @@ class FrontDoor:
                 raise RuntimeError("FrontDoor is closed")
             self._queue.append(req)
             self._c_submitted.inc()
+            if self.config.adaptive_window:
+                # EWMA of inter-arrival gaps (alpha=0.2): the signal the
+                # dispatcher sizes its coalescing window from
+                last = self._last_arrival_s
+                if last is not None:
+                    gap = req.t_submit - last
+                    e = self._ewma_gap_s
+                    self._ewma_gap_s = gap if e is None \
+                        else 0.2 * gap + 0.8 * e
+                    self._g_ewma.set(self._ewma_gap_s)
+                self._last_arrival_s = req.t_submit
             self._cv.notify_all()
         return req.future
+
+    def submit_async(self, vecs: np.ndarray,
+                     spec: Optional[QuerySpec] = None, *,
+                     trace: bool = False) -> "asyncio.Future":
+        """`submit()` for asyncio callers: the same admission queue and
+        coalescing, returned as an awaitable asyncio Future bound to the
+        RUNNING event loop (call from a coroutine / loop context). The
+        dispatcher thread resolves the underlying concurrent Future and
+        asyncio marshals the result back onto the loop -- no thread may
+        block the loop, so one async server task per request coalesces
+        exactly like N caller threads would."""
+        import asyncio
+        return asyncio.wrap_future(self.submit(vecs, spec, trace=trace))
+
+    async def query_async(self, vecs: np.ndarray,
+                          spec: Optional[QuerySpec] = None, *,
+                          trace: bool = False) -> ResultSet:
+        """Awaitable `query()`: the drop-in replacement for
+        `engine.query(vecs, spec)` inside a coroutine."""
+        return await self.submit_async(vecs, spec, trace=trace)
 
     def query(self, vecs: np.ndarray, spec: Optional[QuerySpec] = None,
               timeout: Optional[float] = None, *,
@@ -253,6 +307,27 @@ class FrontDoor:
         return False
 
     # -- dispatcher ----------------------------------------------------------
+    def _effective_window(self) -> float:
+        """The coalescing wait for this drain. Fixed mode: window_s.
+        Adaptive mode: enough EWMA inter-arrival gaps to gather
+        ~coalesce_target requests, clamped to [0, window_s] -- and 0
+        outright when even ONE more arrival is unlikely inside window_s
+        (waiting would add latency and coalesce nothing)."""
+        cfg = self.config
+        if not cfg.adaptive_window:
+            return cfg.window_s
+        gap = self._ewma_gap_s
+        if gap is None:                 # no signal yet: fixed behavior
+            w = cfg.window_s
+        elif gap >= cfg.window_s:
+            w = 0.0
+        else:
+            w = min(cfg.window_s,
+                    gap * max(cfg.coalesce_target - 1, 1))
+        self._window_s = w
+        self._g_window.set(w)
+        return w
+
     def _dispatch_loop(self):
         cfg = self.config
         while True:
@@ -263,8 +338,10 @@ class FrontDoor:
                     return
                 # micro-batching window: wait (woken per arrival) until
                 # the window closes or enough rows queued for a full call
-                if cfg.window_s > 0:
-                    deadline = time.monotonic() + cfg.window_s
+                window = self._effective_window() if cfg.window_s > 0 \
+                    else 0.0
+                if window > 0:
+                    deadline = time.monotonic() + window
                     while not self._stop:
                         if sum(r.n for r in self._queue) \
                                 >= cfg.max_batch_rows:
@@ -393,4 +470,6 @@ class FrontDoor:
                         ("total", self._h_total)):
             out[f"{name}_p50_ms"] = h.quantile(0.50) * 1e3
             out[f"{name}_p99_ms"] = h.quantile(0.99) * 1e3
+        out["window_ms"] = self._window_s * 1e3
+        out["arrival_ewma_ms"] = (self._ewma_gap_s or 0.0) * 1e3
         return out

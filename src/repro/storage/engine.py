@@ -136,7 +136,9 @@ class MicroNN:
                  memory_budget_mb: Optional[float] = None,
                  max_rows_per_step: int = 4096,
                  trace_ring_capacity: int = 256,
-                 slow_query_ms: float = 100.0):
+                 slow_query_ms: float = 100.0,
+                 frame_pool=None,
+                 tenant: Optional[str] = None):
         """`quantize="int8"` turns on the scalar-quantized tier: searches
         scan int8 codes and rerank `rerank_factor * k` candidates at
         float32. Both knobs land in IVFConfig (explicit kwargs override a
@@ -152,7 +154,16 @@ class MicroNN:
 
         `max_rows_per_step` bounds the incremental maintenance
         scheduler's work quantum: one `maintain_step()` (or one step of
-        `maintain(until_idle=True)`) touches at most this many rows."""
+        `maintain(until_idle=True)`) touches at most this many rows.
+
+        `frame_pool` + `tenant` (PR 9 fleet mode, paged only): page
+        partitions through a SHARED `fleet.pool.FramePool` instead of a
+        private one -- this engine's frames then compete with every
+        co-tenant's under the pool's global CLOCK and ONE fleet-wide
+        byte budget. `tenant` is the stable name identifying this
+        engine's frames (and its metrics label), so a spilled/reopened
+        tenant resumes its cumulative series. Normally wired up by
+        `fleet.Fleet`, not called directly."""
         # Engine-level write mutex (PR 7): EVERY durable-state writer --
         # upsert/delete, session commits, build/recover, and each
         # maintenance quantum (hand-cranked or the scheduler daemon's) --
@@ -175,6 +186,14 @@ class MicroNN:
         if memory_budget_mb is not None:
             assert memory_budget_mb > 0, memory_budget_mb
         self.memory_budget_mb = memory_budget_mb
+        if frame_pool is not None:
+            assert memory_budget_mb is not None, \
+                "a shared frame pool implies paged mode: pass " \
+                "memory_budget_mb"
+            assert tenant is not None, \
+                "a shared frame pool needs a stable tenant name"
+        self._frame_pool = frame_pool
+        self.tenant = None if tenant is None else str(tenant)
         self.index = None   # IVFIndex (resident) or PagedIndex (paged)
         self.optimizer: Optional[HybridOptimizer] = None
         self.maintenance_log = []
@@ -184,8 +203,15 @@ class MicroNN:
         # derived view of a single source of truth -- plus the trace ring:
         # the last N QueryTraces and maintenance events, with a slow-query
         # log above `slow_query_ms`.
-        self.metrics = obs_metrics.default_registry().scope(
-            component="engine", inst=str(obs_metrics.next_instance()))
+        # fleet tenants label their scope by NAME (not a fresh instance
+        # id): a spilled tenant reopened later lands on the same series,
+        # so per-tenant counters stay cumulative across its lifetimes
+        if self.tenant is not None:
+            self.metrics = obs_metrics.default_registry().scope(
+                component="engine", tenant=self.tenant)
+        else:
+            self.metrics = obs_metrics.default_registry().scope(
+                component="engine", inst=str(obs_metrics.next_instance()))
         self.traces = obs_trace.TraceRing(capacity=trace_ring_capacity,
                                           slow_ms=slow_query_ms)
         self._c_queries = self.metrics.counter("queries")
@@ -1025,7 +1051,8 @@ class MicroNN:
             budget_bytes=int(self.memory_budget_mb * 2 ** 20),
             payload=payload, metric=cfg.metric, qstats=qstats,
             with_attrs=self.store.n_attr > 0,
-            metrics=self.metrics.scope(component="pager"))
+            metrics=self.metrics.scope(component="pager"),
+            pool=self._frame_pool, tenant=self.tenant)
         if old_cache is not None:   # counters are cumulative across rebuilds
             cache.hits, cache.misses, cache.evictions = \
                 old_cache.hits, old_cache.misses, old_cache.evictions

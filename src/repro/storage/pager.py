@@ -13,9 +13,21 @@ layout the resident tier uses:
 
 so the existing fused-scan kernels run over the pool unchanged: the
 scalar-prefetched `part_ids` input simply carries *frame* indices instead
-of partition indices (the frame -> partition indirection lives in this
-module's host-side frame table). F = budget_bytes // frame_bytes; the
+of partition indices (the frame -> partition indirection lives in the
+pool's host-side frame table). F = budget_bytes // frame_bytes; the
 pool never grows, so resident bytes are <= the budget by construction.
+
+PR 9 splits ownership: the pool mechanics -- preallocated frames, CLOCK
+eviction, scan-resistant admission ring, pins, read-ahead staging, the
+donated batched scatter -- live in `fleet.pool.FramePool`, keyed by
+`(tenant, pid)` so MANY engines can share ONE pool under one global
+budget (fleet mode). `PartitionCache` here is the per-tenant VIEW an
+engine holds: it owns the tenant-specific fetch path (its VectorStore,
+metric normalisation, quantizer stats) and the tenant's cumulative
+counters, and delegates frames/eviction/pins to the pool. A solo engine
+(no fleet) constructs a private single-tenant pool, so its behavior --
+eviction order, hit/miss accounting, donation rules, budget errors --
+is exactly the PR 6 pager's (pinned by tests/test_pager.py).
 
 Eviction is CLOCK (second chance): a fault sweeps the hand past pinned
 frames and frames whose reference bit is set (clearing it), and reclaims
@@ -50,21 +62,21 @@ the mapping is dropped immediately so the next fault refetches. Counters
 (hits / misses / evictions) are cumulative and surface through
 MicroNN.stats().
 
-Thread safety: every public method takes the cache's RLock, so the
-background maintenance scheduler (storage/scheduler.py) and query
-threads may interleave fault/invalidate/unpin safely (closing the PR 3
-"single-writer/single-reader" restriction). Scans themselves run outside
-the lock: pinned frames cannot be evicted, and the pool arrays are
-functionally rebound -- a scan always reads a consistent snapshot.
+Thread safety: every public method takes the POOL's RLock, so the
+background maintenance scheduler (storage/scheduler.py), query threads,
+and -- in fleet mode -- every co-tenant engine may interleave
+fault/invalidate/unpin safely. Scans themselves run outside the lock:
+pinned frames cannot be evicted, and the pool arrays are functionally
+rebound -- a scan always reads a consistent snapshot.
 
-Fault scatter: when no *other* scan holds pins, the batched fault
-scatters fetched frames into the pool through a jitted donated update
-(`donate_argnums`) -- XLA aliases the output to the input buffer and
-updates the touched frames in place, so a fault never allocates a second
-pool-sized buffer (asserted by tests/test_pager.py via the compiled
-memory analysis). With foreign pins outstanding the fault falls back to
-a copying scatter: donation would invalidate the buffer a concurrent
-scan may still be reading.
+Fault scatter: when no scan (of ANY tenant) holds pins, the batched
+fault scatters fetched frames into the pool through a jitted donated
+update (`donate_argnums`) -- XLA aliases the output to the input buffer
+and updates the touched frames in place, so a fault never allocates a
+second pool-sized buffer (asserted by tests/test_pager.py via the
+compiled memory analysis). With foreign pins outstanding the fault
+falls back to a copying scatter: donation would invalidate the buffer a
+concurrent scan may still be reading.
 
 Read-ahead staging (PR 6 double-buffering): `stage(pids)` runs the SQL
 round-trip + host-side block packing for a future chunk WITHOUT taking
@@ -82,45 +94,34 @@ the classic double-buffer cost, bounded by scan_frames * frame_bytes.
 """
 from __future__ import annotations
 
-import threading
 import time
-from functools import partial
 from typing import Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import quantize
-from ..core.types import INVALID_ID, normalize_if_cosine
+from ..core.types import normalize_if_cosine
+from ..fleet.pool import (FramePool, _scatter_frames, _scatter_one,  # noqa: F401 -- re-exported; tests compile _scatter_frames directly
+                          compute_frame_bytes)
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 
 
-@partial(jax.jit, donate_argnums=(0, 1, 2))
-def _scatter_frames(payload_pool, ids_pool, valid_pool, fidx, payload,
-                    ids, valid):
-    """Donated in-place scatter of freshly fetched frames into the pool:
-    the three pool buffers are aliased input->output, so the update costs
-    O(fetched frames) writes, not a pool-sized copy."""
-    return (payload_pool.at[fidx].set(payload),
-            ids_pool.at[fidx].set(ids),
-            valid_pool.at[fidx].set(valid))
-
-
-@partial(jax.jit, donate_argnums=(0,))
-def _scatter_one(pool, fidx, block):
-    """Donated single-pool scatter (the optional attrs pool)."""
-    return pool.at[fidx].set(block)
-
-
 class PartitionCache:
-    """Memory-budgeted buffer pool of partition frames over a VectorStore."""
+    """Per-tenant view over a FramePool of partition frames.
+
+    Solo mode (pool=None): constructs a private single-tenant pool from
+    `budget_bytes` -- the PR 6 pager, verbatim. Fleet mode: pass the
+    shared `pool` and a stable `tenant` name; frames then compete under
+    the fleet-wide budget via the pool's global CLOCK, and
+    `budget_bytes` reflects the POOL's (fleet) budget."""
 
     def __init__(self, store, *, p_max: int, budget_bytes: int,
                  payload: str = "f32", metric: str = "l2",
                  qstats=None, with_attrs: bool = False,
-                 metrics=None):
+                 metrics=None, pool: Optional[FramePool] = None,
+                 tenant: Optional[str] = None):
         assert payload in ("f32", "int8"), payload
         if payload == "int8":
             assert qstats is not None, "int8 frames need quantizer stats"
@@ -129,7 +130,6 @@ class PartitionCache:
         self.payload = payload
         self.qstats = qstats
         self.with_attrs = bool(with_attrs and store.n_attr)
-        self.budget_bytes = int(budget_bytes)
         # counters live in the process metrics registry (PR 8). The engine
         # passes its own scope so counts survive re-attachment (the scope's
         # get-or-create hands back the SAME counter objects); standalone
@@ -147,10 +147,19 @@ class PartitionCache:
         # per-fault work breakdown, for the active trace's fault span:
         # (hits, misses, staged frames consumed, bytes synchronously read)
         self._last_fault = (0, 0, 0, 0)
-        # guards every public method: the maintenance scheduler and query
-        # threads may interleave fault/evict/invalidate (PR 5)
-        self._lock = threading.RLock()
-        self._alloc(p_max)
+        self._private_pool = pool is None
+        if pool is None:
+            pool = FramePool(
+                dim=store.dim, p_max=p_max, budget_bytes=budget_bytes,
+                payload=payload,
+                n_attr=store.n_attr if self.with_attrs else 0)
+            tenant = "solo" if tenant is None else tenant
+        else:
+            assert tenant is not None, \
+                "a shared FramePool view needs a stable tenant name"
+        self._pool = pool
+        self.tenant = str(tenant)
+        self._tid = pool.register(self, self.tenant, p_max=p_max)
 
     # -- cumulative counters (registry-backed; plain ints out) ---------------
     @property
@@ -177,158 +186,115 @@ class PartitionCache:
     def evictions(self, v: int):
         self._c_evictions.set(int(v))
 
-    # -- pool allocation ----------------------------------------------------
-    @staticmethod
-    def compute_frame_bytes(p_max: int, dim: int, payload: str = "f32",
-                            n_attr: int = 0) -> int:
-        """Bytes one partition frame costs: payload + ids + valid + attrs."""
-        per_row = (1 if payload == "int8" else 4) * dim + 4 + 1 + 4 * n_attr
-        return p_max * per_row
+    # -- pool geometry (delegated) -------------------------------------------
+    compute_frame_bytes = staticmethod(compute_frame_bytes)
 
-    def _alloc(self, p_max: int):
-        store = self.store
-        d = store.dim
-        n_attr = store.n_attr if self.with_attrs else 0
-        # validate before mutating any state: a failed resize must leave
-        # the cache fully usable at its old geometry
-        frame_bytes = self.compute_frame_bytes(p_max, d, self.payload,
-                                               n_attr)
-        cap = self.budget_bytes // frame_bytes
-        if cap < 1:
-            raise ValueError(
-                f"memory budget {self.budget_bytes}B cannot seat one "
-                f"partition frame ({frame_bytes}B at p_max={p_max})")
-        self.p_max = int(p_max)
-        self.frame_bytes = frame_bytes
-        self.capacity = int(cap)
-        shape = (self.capacity, self.p_max, d)
-        if self.payload == "int8":
-            self.payload_pool = jnp.zeros(shape, jnp.int8)
-        else:
-            self.payload_pool = jnp.zeros(shape, jnp.float32)
-        self.ids_pool = jnp.full((self.capacity, self.p_max), INVALID_ID,
-                                 jnp.int32)
-        self.valid_pool = jnp.zeros((self.capacity, self.p_max), bool)
-        self.attrs_pool = (
-            jnp.zeros((self.capacity, self.p_max, n_attr), jnp.float32)
-            if self.with_attrs else None)
-        # host-side frame table (the frame -> partition indirection)
-        self._frame_pid = np.full(self.capacity, -1, np.int64)
-        self._pid_frame: dict = {}
-        self._ref = np.zeros(self.capacity, bool)
-        self._pins = np.zeros(self.capacity, np.int64)
-        # invalidated-while-pinned frames: freed at the last unpin
-        self._stale = np.zeros(self.capacity, bool)
-        self._hand = 0
-        # scan-resistant admission: ring of frames owned by non-admitted
-        # (one-off stream) faults; scan_frames bounds how much of the
-        # pool a full scan may dirty
-        self.scan_frames = max(1, self.capacity // 4)
-        self._transient = np.zeros(self.capacity, bool)
-        self._ring: list = []
-        self._ring_hand = 0
-        # read-ahead staging (PR 6): pid -> (payload, ids, valid, attrs)
-        # host blocks prefetched by stage(); the generation counter lets
-        # invalidate()/resize() discard stages still in flight
-        self._staged: dict = {}
-        self._stage_gen = getattr(self, "_stage_gen", 0) + 1
+    @property
+    def pool(self) -> FramePool:
+        return self._pool
+
+    @property
+    def budget_bytes(self) -> int:
+        return self._pool.budget_bytes
+
+    @property
+    def p_max(self) -> int:
+        return self._pool.p_max
+
+    @property
+    def frame_bytes(self) -> int:
+        return self._pool.frame_bytes
+
+    @property
+    def capacity(self) -> int:
+        return self._pool.capacity
+
+    @property
+    def scan_frames(self) -> int:
+        return self._pool.scan_frames
+
+    @property
+    def payload_pool(self):
+        return self._pool.payload_pool
+
+    @property
+    def ids_pool(self):
+        return self._pool.ids_pool
+
+    @property
+    def valid_pool(self):
+        return self._pool.valid_pool
+
+    @property
+    def attrs_pool(self):
+        return self._pool.attrs_pool
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._pool.resident_bytes
+
+    # -- frame-table views (tests + introspection; pool holds the truth) ----
+    @property
+    def _lock(self):
+        return self._pool._lock
+
+    @property
+    def _pid_frame(self) -> dict:
+        return self._pool.tenant_frames(self._tid)
+
+    @property
+    def _staged(self) -> dict:
+        return self._pool.tenant_staged(self._tid)
+
+    @property
+    def _frame_pid(self) -> np.ndarray:
+        return self._pool._frame_pid
+
+    @property
+    def _pins(self) -> np.ndarray:
+        return self._pool._pins
+
+    @property
+    def _ref(self) -> np.ndarray:
+        return self._pool._ref
+
+    @property
+    def _stale(self) -> np.ndarray:
+        return self._pool._stale
+
+    @property
+    def _transient(self) -> np.ndarray:
+        return self._pool._transient
+
+    @property
+    def _ring(self) -> list:
+        return self._pool._ring
 
     def resize(self, p_max: int):
         """Reallocate the pool for a larger partition size (after a flush
         or merge grows some partition past p_max). Drops every frame --
         the caller already invalidated the moved partitions -- but keeps
-        the cumulative counters and the byte budget. Waits for in-flight
-        scans to unpin first: _alloc rebuilds the pin table (and may
-        shrink the frame count), so reallocating under a live pin would
-        corrupt a concurrent scan's unpin bookkeeping."""
-        deadline = time.monotonic() + 30.0
-        while True:
-            with self._lock:
-                if not self._pins.any():
-                    self._alloc(p_max)
-                    return
-            if time.monotonic() > deadline:
-                raise RuntimeError(
-                    "resize timed out waiting for pinned frames -- a scan "
-                    "leaked a pin (missing unpin())")
-            time.sleep(0.001)
-
-    # -- budget accounting ---------------------------------------------------
-    @property
-    def resident_bytes(self) -> int:
-        pools = [self.payload_pool, self.ids_pool, self.valid_pool]
-        if self.attrs_pool is not None:
-            pools.append(self.attrs_pool)
-        return int(sum(p.nbytes for p in pools))
+        the cumulative counters and the byte budget. A SHARED pool only
+        ever grows: co-tenants' partitions may still need the current
+        p_max."""
+        if not self._private_pool:
+            p_max = max(int(p_max), self._pool.p_max)
+        self._pool.resize(p_max)
 
     def stats(self) -> dict:
-        with self._lock:
-            return {"hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions,
-                    "bytes_read": self._c_bytes_read.value,
-                    "bytes_staged": self._c_bytes_staged.value,
-                    "staged_consumed": self._c_staged_consumed.value,
-                    "resident_bytes": self.resident_bytes,
-                    "budget_bytes": self.budget_bytes,
-                    "capacity_frames": self.capacity,
-                    "frame_bytes": self.frame_bytes,
-                    "resident_partitions": len(self._pid_frame)}
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes_read": self._c_bytes_read.value,
+                "bytes_staged": self._c_bytes_staged.value,
+                "staged_consumed": self._c_staged_consumed.value,
+                "resident_bytes": self.resident_bytes,
+                "budget_bytes": self.budget_bytes,
+                "capacity_frames": self.capacity,
+                "frame_bytes": self.frame_bytes,
+                "resident_partitions":
+                    self._pool.resident_count(self._tid)}
 
-    # -- clock eviction ------------------------------------------------------
-    def _release_ring(self, f: int):
-        """Remove a frame from the scan ring (promotion or reclaim)."""
-        self._transient[f] = False
-        if f in self._ring:
-            self._ring.remove(f)
-            self._ring_hand = 0
-
-    def _clock_victim(self) -> int:
-        """Second-chance sweep: skip pinned frames, clear reference bits,
-        reclaim the first cold unpinned frame (transient scan-ring frames
-        carry no reference bit, so they fall out first)."""
-        for _ in range(3 * self.capacity):
-            f = self._hand
-            self._hand = (self._hand + 1) % self.capacity
-            if self._pins[f] > 0:
-                continue
-            if self._ref[f] and not self._transient[f]:
-                self._ref[f] = False
-                continue
-            if self._transient[f]:
-                self._release_ring(f)
-            return f
-        raise RuntimeError(
-            "all cache frames pinned -- probe chunk exceeds pool capacity")
-
-    def _victim(self) -> int:
-        """Victim for an *admitted* fault: scan-ring frames first (a
-        one-off stream must never force out hot admitted frames), then
-        the CLOCK sweep."""
-        for f in self._ring:
-            if self._pins[f] == 0:
-                self._release_ring(f)
-                return f
-        return self._clock_victim()
-
-    def _scan_victim(self) -> int:
-        """Victim for a NON-admitted (scan-resistant) fault: reuse ring
-        frames round-robin; grow the ring (via the normal sweep) only up
-        to scan_frames."""
-        for _ in range(len(self._ring)):
-            f = self._ring[self._ring_hand % len(self._ring)]
-            self._ring_hand += 1
-            if self._pins[f] == 0:
-                return f
-        if len(self._ring) < self.scan_frames:
-            f = self._clock_victim()
-            self._ring.append(f)
-            self._transient[f] = True
-            return f
-        raise RuntimeError(
-            "scan ring exhausted -- chunk a non-admitted scan to at most "
-            f"scan_frames={self.scan_frames} missing partitions")
-
-    # -- fetch / staging -----------------------------------------------------
+    # -- fetch ---------------------------------------------------------------
     def _fetch_blocks(self, pids: Sequence[int]):
         """One batched SQL round-trip for the listed partitions, packed to
         pool layout on the host: (payload, ids, valid, attrs) numpy blocks
@@ -362,36 +328,12 @@ class PartitionCache:
 
     def stage(self, pids: Sequence[int]):
         """Read ahead: fetch + pack the listed partitions' blocks into the
-        host-side staging dict so the next fault() skips its SQL round
-        trip. Takes no frames and no pins, and never rebinds a pool --
-        safe to run on a prefetch thread concurrently with a scan of the
-        current chunk. Advisory only: a concurrent invalidate() bumps the
-        generation and the whole in-flight stage is discarded (the next
-        fault re-reads from SQLite)."""
-        with self._lock:
-            gen = self._stage_gen
-            want = [int(p) for p in pids
-                    if int(p) not in self._pid_frame
-                    and int(p) not in self._staged]
-        if not want:
-            return
-        payload, ids, valid, attrs = self._fetch_blocks(want)
-        self._c_bytes_staged.inc(
-            payload.nbytes + ids.nbytes + valid.nbytes +
-            (0 if attrs is None else attrs.nbytes))
-        with self._lock:
-            if gen != self._stage_gen:
-                return          # a writer invalidated mid-fetch: drop all
-            # bound leftover entries (a scan that raised mid-stream never
-            # consumes its staged chunk) -- the dict may never outgrow a
-            # few chunks of host blocks
-            if len(self._staged) > 2 * self.capacity:
-                self._staged.clear()
-            for i, p in enumerate(want):
-                if p in self._pid_frame:    # faulted while we fetched
-                    continue
-                self._staged[p] = (payload[i], ids[i], valid[i],
-                                   None if attrs is None else attrs[i])
+        pool's host-side staging dict so the next fault() skips its SQL
+        round trip. Takes no frames and no pins -- safe on a prefetch
+        thread concurrently with any tenant's scan. Advisory only: a
+        concurrent invalidate() bumps the generation and the whole
+        in-flight stage is discarded (the next fault re-reads)."""
+        self._pool.stage(self._tid, pids)
 
     # -- fault / pin / invalidate -------------------------------------------
     def fault(self, pids: Sequence[int], admit: bool = True) -> np.ndarray:
@@ -406,11 +348,10 @@ class PartitionCache:
         artificially refresh the hot working set."""
         tr = obs_trace.current()
         if tr is None:
-            with self._lock:
-                return self._fault_locked(pids, admit)
+            return self._pool.fault(self._tid, pids, admit)
         t0 = time.perf_counter()
-        with self._lock:
-            frames = self._fault_locked(pids, admit)
+        with self._pool._lock:
+            frames = self._pool.fault(self._tid, pids, admit)
             h, m, st, nb = self._last_fault
         tr.record(obs_trace.STAGE_FAULT,
                   (time.perf_counter() - t0) * 1e3,
@@ -418,150 +359,15 @@ class PartitionCache:
                   admitted=bool(admit))
         return frames
 
-    def _fault_locked(self, pids: Sequence[int], admit: bool) -> np.ndarray:
-        # pins held by OTHER in-flight scans at entry decide whether the
-        # scatter may donate the pool buffers (see module docstring)
-        foreign_pins = int(self._pins.sum())
-        want = [int(p) for p in pids]
-        if len(want) > self.capacity:
-            raise ValueError(
-                f"probe set of {len(want)} partitions exceeds the pool's "
-                f"{self.capacity} frames -- chunk the scan")
-        frames = np.empty(len(want), np.int32)
-        missing = []
-        hit_frames = []
-        for j, p in enumerate(want):
-            f = self._pid_frame.get(p)
-            if f is not None:
-                if admit:
-                    self._ref[f] = True
-                    if self._transient[f]:
-                        # an admitted hit proves the frame hot: promote
-                        # it out of the scan ring into the admitted set
-                        self._release_ring(f)
-                self._pins[f] += 1
-                frames[j] = f
-                hit_frames.append(f)
-            else:
-                missing.append((j, p))
-        if hit_frames:
-            self._c_hits.inc(len(hit_frames))
-        if not missing:
-            self._last_fault = (len(hit_frames), 0, 0, 0)
-            return frames
-        new_frames = []
-        n_evicted = 0
-        for j, p in missing:
-            f = self._victim() if admit else self._scan_victim()
-            old = self._frame_pid[f]
-            if old >= 0:
-                del self._pid_frame[old]
-                n_evicted += 1
-            self._frame_pid[f] = p
-            self._pid_frame[p] = f
-            self._ref[f] = admit
-            self._pins[f] += 1
-            frames[j] = f
-            new_frames.append(f)
-        # counted BEFORE the fetch: a failed fetch still paid the miss
-        # (and already evicted its victims) -- pinned by tests/test_pager
-        self._c_misses.inc(len(missing))
-        if n_evicted:
-            self._c_evictions.inc(n_evicted)
-        n_bytes = 0
-        try:
-            # consume staged read-ahead blocks first; anything not staged
-            # is fetched in one batched SQL round-trip as before
-            staged = {p: self._staged.pop(p)
-                      for _, p in missing if p in self._staged}
-            n_staged = len(staged)
-            if n_staged:
-                self._c_staged_consumed.inc(n_staged)
-            fetch = [p for _, p in missing if p not in staged]
-            if fetch:
-                f_pay, f_ids, f_val, f_att = self._fetch_blocks(fetch)
-                n_bytes = f_pay.nbytes + f_ids.nbytes + f_val.nbytes + \
-                    (0 if f_att is None else f_att.nbytes)
-                self._c_bytes_read.inc(n_bytes)
-                for i, p in enumerate(fetch):
-                    staged[p] = (f_pay[i], f_ids[i], f_val[i],
-                                 None if f_att is None else f_att[i])
-            order = [staged[p] for _, p in missing]
-            payload = jnp.asarray(np.stack([e[0] for e in order]))
-            bids = jnp.asarray(np.stack([e[1] for e in order]))
-            bval = jnp.asarray(np.stack([e[2] for e in order]))
-            battrs = None if self.attrs_pool is None else \
-                jnp.asarray(np.stack([e[3] for e in order]))
-            fidx = jnp.asarray(np.asarray(new_frames, np.int32))
-            if foreign_pins == 0:
-                # no concurrent scan can be reading the old pool objects:
-                # donate them -- the scatter updates the buffers in place
-                # instead of writing a second pool-sized copy
-                self.payload_pool, self.ids_pool, self.valid_pool = \
-                    _scatter_frames(self.payload_pool, self.ids_pool,
-                                    self.valid_pool, fidx, payload,
-                                    bids, bval)
-                if self.attrs_pool is not None:
-                    self.attrs_pool = _scatter_one(
-                        self.attrs_pool, fidx, battrs)
-            else:
-                # a scan may still hold the old arrays: copy-on-write
-                self.payload_pool = self.payload_pool.at[fidx].set(payload)
-                self.ids_pool = self.ids_pool.at[fidx].set(bids)
-                self.valid_pool = self.valid_pool.at[fidx].set(bval)
-                if self.attrs_pool is not None:
-                    self.attrs_pool = self.attrs_pool.at[fidx].set(battrs)
-        except BaseException:
-            # roll back the provisional registrations: the frames never
-            # received data, so a later fault must not count them as hits
-            # (and their pins must not leak until _victim starves); hit
-            # pins are released too -- the caller gets no frames to unpin
-            for (j, p), f in zip(missing, new_frames):
-                self._pid_frame.pop(p, None)
-                self._frame_pid[f] = -1
-                self._ref[f] = False
-                self._pins[f] -= 1
-            for f in hit_frames:
-                self._pins[f] -= 1
-            raise
-        self._last_fault = (len(hit_frames), len(missing), n_staged, n_bytes)
-        return frames
-
-    def _free_frame(self, f: int):
-        self._frame_pid[f] = -1
-        self._ref[f] = False
-        self._stale[f] = False
-
     def unpin(self, frames: np.ndarray):
-        with self._lock:
-            for f in np.asarray(frames, np.int64):
-                assert self._pins[f] > 0, f"frame {f} not pinned"
-                self._pins[f] -= 1
-                if self._pins[f] == 0 and self._stale[f]:
-                    # invalidated while this scan was reading it: the
-                    # deferred release happens at the last unpin
-                    self._free_frame(f)
+        self._pool.unpin(frames)
 
     def invalidate(self, pids: Sequence[int]):
         """Drop the listed partitions' frames (durable rows changed); the
         next fault re-reads them from SQLite. A frame pinned by an
         in-flight scan is released lazily at its last unpin -- the scan
         keeps its pre-invalidation snapshot, the mapping is gone at once."""
-        with self._lock:
-            # discard staged read-ahead for the changed partitions, and
-            # bump the generation so an in-flight stage() that read them
-            # mid-write drops its whole batch instead of inserting
-            self._stage_gen += 1
-            for p in pids:
-                self._staged.pop(int(p), None)
-                f = self._pid_frame.pop(int(p), None)
-                if f is None:
-                    continue
-                if self._pins[f] > 0:
-                    self._stale[f] = True
-                    continue
-                self._free_frame(f)
+        self._pool.invalidate(self._tid, pids)
 
     def invalidate_all(self):
-        with self._lock:
-            self.invalidate(list(self._pid_frame))
+        self._pool.invalidate_tenant(self._tid)

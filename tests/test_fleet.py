@@ -1,0 +1,311 @@
+"""Fleet mode (PR 9): many tenants, one FramePool, one budget.
+
+Pins the subsystem's contracts:
+  * tenant isolation -- a tenant's answers through the SHARED pool are
+    bit-identical (ids + scores) to a solo engine on the same durable
+    state, on both scan backends (eviction policy never changes
+    results);
+  * the fleet-wide byte budget is never exceeded under a randomized
+    multi-tenant workload (it is preallocated, so <= budget BY
+    CONSTRUCTION -- asserted against live faulting anyway);
+  * global CLOCK fairness -- a hot tenant's re-referenced working set
+    stays resident while a cold tenant's stream recycles its own
+    frames;
+  * the fleet maintenance scheduler's deficit round robin bounds
+    starvation -- every backlogged tenant steps within one round;
+  * spill/reopen -- the live-handle LRU closes an idle tenant's SQLite
+    connections and drops its frames; a later get() recovers an
+    equivalent engine (same answers, cumulative counters).
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import executor
+from repro.core.query import Q
+from repro.core.types import IVFConfig
+from repro.fleet import Fleet, FramePool
+from repro.storage import MicroNN, VectorStore
+from repro.storage.pager import PartitionCache
+from tests.conftest import clustered_data
+
+DIM = 16
+CFG = dict(dim=DIM, target_partition_size=50, kmeans_iters=10,
+           delta_capacity=64)
+
+
+def _build_tenant(fleet, name, seed, n=600):
+    X = clustered_data(n=n, dim=DIM, seed=seed)
+    eng = fleet.get(name)
+    eng.upsert(np.arange(n), X)
+    eng.build()
+    eng.store.db.commit()
+    # fold the WAL into the main db file so shutil.copy captures it all
+    eng.store.db.execute("PRAGMA wal_checkpoint(TRUNCATE)")
+    return X
+
+
+@pytest.fixture(scope="module")
+def fleet_root(tmp_path_factory):
+    """One fleet, three distinct tenants, budget far below the sum of
+    their scan tiers -- plus a byte-identical twin of t0 for the shared
+    compile-cache assertion."""
+    root = str(tmp_path_factory.mktemp("fleet"))
+    fleet = Fleet(root, dim=DIM, budget_mb=0.04, max_live=8,
+                  config=IVFConfig(**CFG))
+    data = {n: _build_tenant(fleet, n, seed)
+            for seed, n in enumerate(("t0", "t1", "t2"))}
+    shutil.copy(os.path.join(root, "t0.db"),
+                os.path.join(root, "twin.db"))
+    yield fleet, root, data
+    fleet.close()
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_tenant_isolation_bitwise_vs_solo(fleet_root, backend, tmp_path):
+    """Every tenant's fleet answers == a solo paged engine's on a copy
+    of its durable state, bit for bit, while all three interleave on
+    ONE pool tight enough to force cross-tenant eviction."""
+    fleet, root, data = fleet_root
+    # the shared pool seats fewer frames than ONE tenant's partitions
+    assert fleet.pool.capacity < fleet.get("t0").index.k
+    solo_rs = {}
+    for name, X in data.items():
+        dst = str(tmp_path / f"{name}-{backend}.db")
+        shutil.copy(os.path.join(root, f"{name}.db"), dst)
+        solo = MicroNN(dim=DIM, path=dst, config=IVFConfig(**CFG),
+                       memory_budget_mb=0.04)
+        solo.recover()
+        solo_rs[name] = solo.search(X[:8], k=10, n_probe=8,
+                                    backend=backend)
+    # interleave tenants so their frames genuinely compete
+    for _ in range(2):
+        for name, X in data.items():
+            r = fleet.get(name).search(X[:8], k=10, n_probe=8,
+                                       backend=backend)
+            np.testing.assert_array_equal(np.asarray(r.ids),
+                                          np.asarray(solo_rs[name].ids))
+            np.testing.assert_array_equal(
+                np.asarray(r.scores), np.asarray(solo_rs[name].scores))
+
+
+def test_shared_pool_budget_and_eviction_pressure(fleet_root):
+    fleet, _, data = fleet_root
+    budget = fleet.pool.budget_bytes
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        name = ("t0", "t1", "t2")[rng.integers(0, 3)]
+        X = data[name]
+        fleet.get(name).search(X[rng.integers(0, len(X), 4)],
+                               k=5, n_probe=8)
+        assert fleet.pool.resident_bytes <= budget
+    s = fleet.stats()
+    assert s["resident_bytes"] <= s["budget_bytes"]
+    # the tight budget forced cross-tenant competition
+    pool_stats = s["pool"]
+    assert pool_stats["resident_partitions"] <= fleet.pool.capacity
+    assert sum(t["resident_frames"]
+               for t in pool_stats["tenants"].values()) \
+        == pool_stats["resident_partitions"]
+
+
+def test_shared_compile_cache_zero_retrace_across_tenants(fleet_root):
+    """Specs are tenant-agnostic by construction: a twin tenant with
+    byte-identical durable state (=> identical shapes) reuses t0's
+    compiled executables -- zero new jit traces for its first query."""
+    fleet, _, data = fleet_root
+    q = data["t0"][:8]
+    spec = Q.knn(k=10).probe(8)
+    fleet.get("t0").query(q, spec)
+    fleet.get("t0").query(q, spec)          # warmed + stable
+    t0 = executor.trace_count()
+    r_twin = fleet.get("twin").query(q, spec)
+    assert executor.trace_count() == t0
+    r_t0 = fleet.get("t0").query(q, spec)
+    np.testing.assert_array_equal(np.asarray(r_twin.ids),
+                                  np.asarray(r_t0.ids))
+
+
+# -- raw pool-level contracts (no engines) -----------------------------------
+
+
+def _mk_store(tmp_path, name, n=160, d=8, k=16, seed=0, id_base=0):
+    rng = np.random.default_rng(seed)
+    st = VectorStore(str(tmp_path / name), dim=d, n_attr=0)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    st.upsert(list(range(id_base, id_base + n)), X)
+    assign = rng.integers(0, k, n)
+    st.set_partitions(np.arange(id_base, id_base + n), assign,
+                      rng.normal(size=(k, d)).astype(np.float32),
+                      np.zeros(k))
+    return st, int(np.bincount(assign, minlength=k).max())
+
+
+def _mk_views(tmp_path, n_frames, names=("a", "b"), k=16):
+    p_max = 0
+    stores = {}
+    for i, name in enumerate(names):
+        st, pm = _mk_store(tmp_path, f"{name}.db", seed=i, k=k,
+                           id_base=10_000 * i)
+        stores[name] = st
+        p_max = max(p_max, pm)
+    fb = PartitionCache.compute_frame_bytes(p_max, 8)
+    pool = FramePool(dim=8, p_max=p_max, budget_bytes=n_frames * fb)
+    views = {name: PartitionCache(st, p_max=p_max, budget_bytes=0,
+                                  pool=pool, tenant=name)
+             for name, st in stores.items()}
+    return pool, views, stores
+
+
+def test_randomized_multitenant_faults_hold_budget_and_isolation(tmp_path):
+    pool, views, stores = _mk_views(tmp_path, n_frames=6,
+                                    names=("a", "b", "c"))
+    budget = pool.budget_bytes
+    rng = np.random.default_rng(1)
+    names = list(views)
+    for _ in range(60):
+        name = names[rng.integers(0, 3)]
+        cache = views[name]
+        pids = rng.choice(16, size=rng.integers(1, 4), replace=False)
+        f = cache.fault(list(pids))
+        assert pool.resident_bytes <= budget
+        assert len(pool._key_frame) <= pool.capacity
+        # isolation: the frames just pinned hold THIS tenant's rows
+        lo = 10_000 * names.index(name)
+        ids = np.asarray(cache.ids_pool)[np.asarray(f)]
+        live = ids[ids >= 0]
+        assert ((live >= lo) & (live < lo + 10_000)).all()
+        cache.unpin(f)
+    assert (pool._pins == 0).all()
+    # per-tenant accounting reconciles with the global frame table
+    for name, cache in views.items():
+        assert pool.resident_count(cache._tid) == len(cache._pid_frame)
+    assert sum(pool.resident_count(v._tid) for v in views.values()) \
+        == len(pool._key_frame)
+
+
+def test_hot_tenant_stays_resident_under_cold_stream(tmp_path):
+    """Global CLOCK fairness: tenant a's re-referenced working set keeps
+    its reference bits fresh, so tenant b's cold single-partition
+    stream recycles b's own cold frames instead of flushing a."""
+    pool, views, _ = _mk_views(tmp_path, n_frames=8)
+    a, b = views["a"], views["b"]
+    hot = [0, 1, 2, 3, 4]
+    a.unpin(a.fault(hot))                   # warm the hot working set
+    for i in range(5):                      # ride out the first-sweep
+        b.unpin(b.fault([i % 16]))          # transient (all ref bits set
+        a.unpin(a.fault(hot))               # -> hand evicts blindly once)
+    warm_misses = a.misses
+    for i in range(5, 30):
+        b.unpin(b.fault([i % 16]))          # cold stream, one at a time
+        a.unpin(a.fault(hot))               # hot set re-referenced
+    assert a.misses == warm_misses, \
+        "cold tenant's stream evicted the hot tenant's working set"
+    assert pool.resident_count(a._tid) == len(hot)
+    assert b.misses > b.hits                # the cold stream kept missing
+
+
+def test_tenant_invalidation_is_scoped(tmp_path):
+    """One tenant's write invalidation must not drop a co-tenant's
+    frame for the same partition id."""
+    pool, views, _ = _mk_views(tmp_path, n_frames=8)
+    a, b = views["a"], views["b"]
+    a.unpin(a.fault([3]))
+    b.unpin(b.fault([3]))
+    a.invalidate([3])
+    assert 3 not in a._pid_frame
+    assert 3 in b._pid_frame                # b's frame 3 survives
+    b.invalidate_all()
+    assert not b._pid_frame
+    assert pool.resident_count(b._tid) == 0
+
+
+# -- fleet scheduler + spill/reopen ------------------------------------------
+
+
+def _fleet_with_backlog(tmp_path, names, n=400):
+    fleet = Fleet(str(tmp_path / "fl"), dim=DIM, budget_mb=0.05,
+                  max_live=8, config=IVFConfig(**CFG),
+                  max_rows_per_step=256)
+    rng = np.random.default_rng(7)
+    for name in names:
+        X = clustered_data(n=n, dim=DIM, seed=3)
+        eng = fleet.get(name)
+        eng.upsert(np.arange(n), X)
+        eng.build()
+        # overflow the delta threshold: flush work lands in the queue
+        extra = rng.normal(size=(64, DIM)).astype(np.float32)
+        eng.upsert(np.arange(9000, 9064), extra)
+    return fleet
+
+
+def test_deficit_round_robin_serves_every_backlogged_tenant(tmp_path):
+    fleet = _fleet_with_backlog(tmp_path, ("churn", "steady"))
+    churn, steady = fleet.get("churn"), fleet.get("steady")
+    assert churn.stats()["scheduler_depth"] > 0
+    assert steady.stats()["scheduler_depth"] > 0
+    fleet.scheduler.step_round()
+    # ONE round: both tenants stepped -- the churning tenant could not
+    # absorb the whole round (the starvation bound)
+    assert churn.scheduler.daemon_steps >= 1
+    assert steady.scheduler.daemon_steps >= 1
+    # keep churn backlogged; steady must still drain within bounded rounds
+    rng = np.random.default_rng(8)
+    for r in range(10):
+        churn.upsert(np.arange(9500 + 64 * r, 9564 + 64 * r),
+                     rng.normal(size=(64, DIM)).astype(np.float32))
+        fleet.scheduler.step_round()
+        if steady.stats()["scheduler_depth"] == 0:
+            break
+    assert steady.stats()["scheduler_depth"] == 0, \
+        "churning tenant starved its neighbor's maintenance"
+    fleet.close()
+
+
+def test_fleet_daemon_drains_all_tenants(tmp_path):
+    fleet = _fleet_with_backlog(tmp_path, ("x", "y"))
+    fleet.start_maintenance()
+    try:
+        deadline = 30.0
+        import time
+        t0 = time.monotonic()
+        while any(fleet.get(n).stats()["scheduler_depth"] > 0
+                  for n in ("x", "y")):
+            assert time.monotonic() - t0 < deadline
+            time.sleep(0.01)
+    finally:
+        fleet.stop_maintenance()
+    for n in ("x", "y"):
+        eng = fleet.get(n)
+        assert int(eng.index.delta.count) == 0
+        assert eng.scheduler.daemon_steps >= 1
+    fleet.close()
+
+
+def test_spill_reopen_round_trip(tmp_path):
+    """max_live=1: opening tenant b spills tenant a (store closed,
+    frames dropped); re-opening a recovers an equivalent engine with
+    cumulative per-tenant counters."""
+    fleet = Fleet(str(tmp_path / "fl"), dim=DIM, budget_mb=0.05,
+                  max_live=1, config=IVFConfig(**CFG))
+    Xa = _build_tenant(fleet, "a", seed=0, n=400)
+    q = Xa[:4]
+    before = fleet.query("a", q, Q.knn(k=5).probe(6))
+    hits_before = fleet.get("a").index.cache.hits
+    a_ref = fleet.get("a")
+    _build_tenant(fleet, "b", seed=1, n=400)    # evicts a (max_live=1)
+    assert fleet.live_tenants() == ["b"]
+    assert a_ref.index is None                  # spilled: pytree dropped
+    assert fleet.stats()["pool"]["tenants"]["a"]["resident_frames"] == 0
+    again = fleet.query("a", q, Q.knn(k=5).probe(6))    # lazy reopen
+    np.testing.assert_array_equal(np.asarray(before.ids),
+                                  np.asarray(again.ids))
+    np.testing.assert_array_equal(np.asarray(before.scores),
+                                  np.asarray(again.scores))
+    assert fleet.get("a") is not a_ref
+    # tenant-labeled series are cumulative across spill/reopen
+    assert fleet.get("a").index.cache.hits >= hits_before
+    assert fleet.stats()["tenant_spills"] >= 2
+    fleet.close()

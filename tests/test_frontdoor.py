@@ -305,3 +305,78 @@ def test_close_is_idempotent_and_rejects_new_work(tmp_path):
     with pytest.raises(RuntimeError, match="closed"):
         fd.submit(X[0], Q.knn(k=3))
     eng.store.close()
+
+
+# -- async surface + adaptive coalescing window (PR 9 satellites) ------------
+
+
+def test_async_submit_bit_parity_and_coalescing(tmp_path):
+    """query_async()/submit_async() ride the same admission queue and
+    dispatcher: concurrent coroutines coalesce and return bit-identical
+    answers to the solo query() path."""
+    import asyncio
+
+    eng, X = _mk_engine(tmp_path, "async", n=400, seed=51)
+    spec = Q.knn(k=5, n_probe=6)
+    queries = X[:8] + 0.01
+    solo = [eng.query(queries[i], spec) for i in range(len(queries))]
+
+    async def run(fd):
+        futs = [fd.submit_async(queries[i], spec)
+                for i in range(len(queries))]
+        return await asyncio.gather(*futs)
+
+    with FrontDoor(eng, window_s=0.2) as fd:
+        outs = asyncio.run(run(fd))
+        one = asyncio.run(fd.query_async(queries[0], spec))
+        st = fd.stats()
+    assert st["completed"] == len(queries) + 1
+    assert st["coalesced"] >= 2
+    for rs, ref in zip(outs, solo):
+        np.testing.assert_array_equal(np.asarray(rs.ids),
+                                      np.asarray(ref.ids))
+        np.testing.assert_array_equal(np.asarray(rs.scores),
+                                      np.asarray(ref.scores))
+    np.testing.assert_array_equal(np.asarray(one.ids),
+                                  np.asarray(solo[0].ids))
+    eng.store.close()
+
+
+def test_adaptive_window_tracks_arrival_rate(tmp_path):
+    """adaptive_window=True sizes the coalescing wait from the EWMA of
+    inter-arrival gaps: a dense burst yields an effective window well
+    under the configured ceiling, surfaced via stats()/gauges, and the
+    window never exceeds window_s."""
+    eng, X = _mk_engine(tmp_path, "adaptive", n=400, seed=52)
+    spec = Q.knn(k=5)
+    with FrontDoor(eng, window_s=0.25, adaptive_window=True,
+                   coalesce_target=4) as fd:
+        # a tight burst: gaps are ~free, so the EWMA collapses
+        futs = [fd.submit(X[i], spec) for i in range(16)]
+        [f.result(30) for f in futs]
+        st = fd.stats()
+        assert st["completed"] == 16
+        assert st["arrival_ewma_ms"] >= 0.0
+        # effective window obeys the [0, window_s] clamp and, for a
+        # back-to-back burst, sits far below the 250ms ceiling
+        assert 0.0 <= st["window_ms"] <= 250.0
+        assert st["window_ms"] < 125.0
+        w = fd._effective_window()
+        assert 0.0 <= w <= 0.25
+    # fixed-window mode leaves the configured window untouched
+    with FrontDoor(eng, window_s=0.05) as fd:
+        fd.query(X[0], spec, timeout=60)
+        assert fd.stats()["window_ms"] == pytest.approx(50.0)
+    eng.store.close()
+
+
+def test_stats_include_window_keys(tmp_path):
+    """empty_stats() and live stats() agree on the new float keys."""
+    from repro.serving import empty_stats
+    es = empty_stats()
+    assert "window_ms" in es and "arrival_ewma_ms" in es
+    eng, X = _mk_engine(tmp_path, "wkeys", n=300, seed=53)
+    with FrontDoor(eng) as fd:
+        fd.query(X[0], Q.knn(k=3), timeout=60)
+        assert sorted(fd.stats()) == sorted(es)
+    eng.store.close()

@@ -334,3 +334,44 @@ def test_slow_log_threshold_filters(tmp_path):
     assert len(eng.traces.traces()) == 1
     assert eng.traces.slow() == []            # under the threshold
     eng.store.close()
+
+
+# -- registry cardinality guard (PR 9 satellite) -----------------------------
+
+
+def test_registry_cardinality_guard_caps_per_name_series():
+    """A runaway label set (one series per request id, say) is bounded:
+    per-name LRU keeps the cap hottest series, evictions are counted in
+    obs_series_evicted, and other names are untouched."""
+    reg = obs_metrics.MetricsRegistry(max_series_per_name=4)
+    for i in range(10):
+        reg.counter("chatty", rid=str(i)).inc()
+    snap = reg.snapshot()
+    chatty = [k for k in snap["counters"] if k.startswith("chatty")]
+    assert len(chatty) == 4
+    kept = {k.split('rid="')[1].rstrip('"}') for k in chatty}
+    assert kept == {"6", "7", "8", "9"}     # LRU: most recent survive
+    ev = reg.counter("obs_series_evicted")
+    assert ev.value == 6
+    # an evicted series re-registers fresh (counts reset -- the guard
+    # trades unbounded memory for that)
+    c0 = reg.counter("chatty", rid="0")
+    assert c0.value == 0
+
+
+def test_registry_cardinality_guard_lru_touch_on_reuse():
+    """Re-fetching a series refreshes its LRU slot, so steady-state
+    series survive churn from one-shot labels."""
+    reg = obs_metrics.MetricsRegistry(max_series_per_name=3)
+    hot = reg.counter("m", k="hot")
+    hot.inc(5)
+    for i in range(8):
+        reg.counter("m", k=f"cold{i}")
+        assert reg.counter("m", k="hot") is hot     # touch keeps it live
+    assert hot.value == 5
+    assert reg.counter("obs_series_evicted").value == 6
+    # distinct names each get their own budget; single-series names are
+    # never at risk (the guard key is (name) -> labels LRU)
+    for i in range(10):
+        reg.gauge("g_other", i=str(i)).set(i)
+    assert reg.counter("m", k="hot") is hot
