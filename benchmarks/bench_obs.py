@@ -29,6 +29,17 @@ The obs layer's contract is "free when off, exact when on":
   * **zero allocation when off** -- untraced queries must not create new
     registry series (registry.size() stable).
 
+PR 10 adds the flight-recorder contracts to the same gate:
+
+  * **recording off is free** -- the recorder hook in MicroNN.query is
+    one global load + branch when no recorder is installed; the A/B
+    arms an armed-but-sampling-out recorder (a strict upper bound on
+    the off path) against uninstalled and holds both engine modes to
+    the same <= 3% tolerance.
+  * **replay is bit-exact** -- workloads captured on the resident
+    (xla + pallas), paged, and multi-tenant Fleet paths replay to
+    bit-identical ids + scores (obs.recorder.replay strict mode).
+
 `--smoke` shrinks shapes for scripts/ci.sh; the full run uses the
 bench_executor exec_xla_q1 shape verbatim.
 """
@@ -42,6 +53,7 @@ from repro.core import executor, ivf, search
 from repro.core.query import Q
 from repro.core.types import IVFConfig
 from repro.obs import metrics as obs_metrics
+from repro.obs import recorder as obs_recorder
 from repro.obs import trace as obs_trace
 from repro.storage import MicroNN
 
@@ -57,7 +69,8 @@ def _block(out):
             leaf.block_until_ready()
 
 
-def _ab_arm(fn, *, calls: int, repeats: int = 3):
+def _ab_arm(fn, *, calls: int, repeats: int = 3,
+            toggle=obs_trace.set_enabled, restore: bool = True):
     """Paired-difference A/B: each pair runs one enabled and one
     disabled call back-to-back (order alternating per pair so neither
     mode is systematically first), GC off. Adjacent calls share the
@@ -91,7 +104,7 @@ def _ab_arm(fn, *, calls: int, repeats: int = 3):
                 order = (True, False) if on_first else (False, True)
                 t = {}
                 for flag in order:
-                    obs_trace.set_enabled(flag)
+                    toggle(flag)
                     t0 = time.perf_counter()
                     _block(fn())
                     t[flag] = (time.perf_counter() - t0) * 1e6
@@ -103,10 +116,24 @@ def _ab_arm(fn, *, calls: int, repeats: int = 3):
             if best_delta is None or delta < best_delta:
                 best_delta, best_off = delta, float(np.median(offs))
     finally:
-        obs_trace.set_enabled(True)
+        toggle(restore)
         if gc_was:
             gc.enable()
     return best_off + best_delta, best_off
+
+
+def _recorder_toggle(rec):
+    """A/B toggle for the flight-recorder arm: flag=True installs a
+    sampling-everything-out recorder (the worst legal 'hook armed' cost
+    -- one lock + modulo + counter bump per call, never an encode),
+    flag=False is the production recording-off path (one global load +
+    branch). Restore state is False: recording stays off after."""
+    def toggle(flag):
+        if flag:
+            obs_recorder.install(rec)
+        else:
+            obs_recorder.uninstall(rec)
+    return toggle
 
 
 def main(smoke: bool = False):
@@ -186,6 +213,35 @@ def main(smoke: bool = False):
             over_pag <= OVERHEAD_TOL,
             f"{us_on_p:.1f}us <= {OVERHEAD_TOL} * {us_off_p:.1f}us")
 
+        # -- recording-off overhead, hit-dominated paged path (PR 10) ----
+        # A/B: armed-but-sampling-out recorder vs uninstalled. The
+        # sampled-out path upper-bounds the uninstalled one (it runs the
+        # same branch PLUS the sampling bookkeeping), so gating it
+        # gates both
+        dummy = obs_recorder.FlightRecorder(
+            os.path.join(tmp, "dummy.db"), sample_every=1 << 30)
+        us_on_rp, us_off_rp = _ab_arm(
+            lambda: pag.query(qp, spec), calls=calls_paged,
+            toggle=_recorder_toggle(dummy), restore=False)
+        dummy.close()
+        over_rec_pag = us_on_rp / us_off_rp
+        emit("obs_paged_recordoff", us_on_rp,
+             f"recoff_us={us_off_rp:.1f};overhead={over_rec_pag:.3f}x")
+        metrics["recording_paged_on_us"] = us_on_rp
+        metrics["recording_paged_off_us"] = us_off_rp
+        metrics["recording_paged_overhead"] = over_rec_pag
+        gates["overhead_recording_paged"] = (
+            over_rec_pag <= OVERHEAD_TOL,
+            f"{us_on_rp:.1f}us <= {OVERHEAD_TOL} * {us_off_rp:.1f}us")
+
+        # -- replay bit-parity, paged arm (PR 10) ------------------------
+        cap_paged = os.path.join(tmp, "cap_paged.db")
+        with obs_recorder.recording(cap_paged):
+            for i in range(6):
+                pag.query(Xp[i * 4:i * 4 + 4], spec)
+        rep_paged = obs_recorder.replay(cap_paged, engine=pag,
+                                        strict=True)
+
         # -- reconciliation: trace counters == independent stats deltas ----
         s0 = pag.stats()
         tr = pag.explain(Xp[n_paged // 2:n_paged // 2 + 4], spec)
@@ -233,6 +289,73 @@ def main(smoke: bool = False):
         complete_res and complete_paged,
         f"resident spans={list(tr_cold.span_names)}")
     metrics["traced_resident_ms"] = tr_cold.total_ms
+
+    # -- recording-off overhead, resident engine.query path (PR 10) ---------
+    spec_warm = Q.knn(k=k, n_probe=n_probe).backend("xla")
+    _block(res.query(X[:1], spec_warm))
+    with tempfile.TemporaryDirectory() as tmp2:
+        dummy = obs_recorder.FlightRecorder(
+            os.path.join(tmp2, "dummy.db"), sample_every=1 << 30)
+        us_on_rr, us_off_rr = _ab_arm(
+            lambda: res.query(X[:1], spec_warm), calls=calls_exec,
+            toggle=_recorder_toggle(dummy), restore=False)
+        dummy.close()
+        over_rec_res = us_on_rr / us_off_rr
+        emit("obs_exec_xla_q1_recordoff", us_on_rr,
+             f"recoff_us={us_off_rr:.1f};overhead={over_rec_res:.3f}x")
+        metrics["recording_exec_xla_q1_on_us"] = us_on_rr
+        metrics["recording_exec_xla_q1_off_us"] = us_off_rr
+        metrics["recording_exec_xla_q1_overhead"] = over_rec_res
+        gates["overhead_recording_exec_xla_q1"] = (
+            over_rec_res <= OVERHEAD_TOL,
+            f"{us_on_rr:.1f}us <= {OVERHEAD_TOL} * {us_off_rr:.1f}us")
+
+        # -- replay bit-parity: resident xla + pallas, multi-tenant fleet --
+        cap_res = os.path.join(tmp2, "cap_res.db")
+        spec_pal = Q.knn(k=k, n_probe=n_probe).backend("pallas")
+        _block(res.query(X[:1], spec_pal))            # warm pallas bucket
+        with obs_recorder.recording(cap_res):
+            for i in range(3):
+                res.query(X[i:i + 1], spec_warm)
+                res.query(X[i:i + 2], spec_pal)
+        rep_res = obs_recorder.replay(cap_res, engine=res, strict=True)
+
+        from repro.fleet import Fleet
+        d_f = 16
+        cfg_f = IVFConfig(dim=d_f, target_partition_size=50,
+                          kmeans_iters=4)
+        Xf = rng.normal(size=(400, d_f)).astype(np.float32)
+        fleet = Fleet(os.path.join(tmp2, "fleet"), dim=d_f,
+                      budget_mb=0.5, max_live=4, config=cfg_f)
+        for t in ("t0", "t1", "t2"):
+            eng = fleet.get(t)
+            with eng.session() as s:
+                s.upsert(np.arange(400), Xf)
+            eng.build()
+        cap_fleet = os.path.join(tmp2, "cap_fleet.db")
+        with obs_recorder.recording(cap_fleet):
+            for i in range(4):
+                fleet.query(f"t{i % 3}", Xf[i:i + 2], Q.knn(k=10))
+                fleet.query(f"t{(i + 1) % 3}", Xf[i:i + 1],
+                            Q.knn(k=5).backend("pallas"))
+        rep_fleet = obs_recorder.replay(cap_fleet, fleet=fleet,
+                                        strict=True)
+        fleet.close()
+
+        replay_total = (rep_paged.replayed + rep_res.replayed
+                        + rep_fleet.replayed)
+        replay_matched = (rep_paged.matched + rep_res.matched
+                          + rep_fleet.matched)
+        replay_ok = (rep_paged.ok and rep_res.ok and rep_fleet.ok
+                     and replay_total >= 6 + 6 + 8)
+        metrics["replay_records"] = replay_total
+        metrics["replay_matched"] = replay_matched
+        metrics["replay_ok"] = int(replay_ok)
+        gates["replay_bit_parity"] = (
+            replay_ok,
+            f"paged {rep_paged.matched}/{rep_paged.replayed}, resident "
+            f"{rep_res.matched}/{rep_res.replayed}, fleet "
+            f"{rep_fleet.matched}/{rep_fleet.replayed} bit-identical")
     res.store.close()
 
     write_json("obs", metrics,
@@ -252,6 +375,13 @@ def main(smoke: bool = False):
         f" on exec_xla_q1"
     assert over_pag <= OVERHEAD_TOL, \
         f"tracing-off overhead {over_pag:.3f}x > {OVERHEAD_TOL}x on paged"
+    assert over_rec_res <= OVERHEAD_TOL, \
+        f"recording-off overhead {over_rec_res:.3f}x > {OVERHEAD_TOL}x" \
+        f" on exec_xla_q1"
+    assert over_rec_pag <= OVERHEAD_TOL, \
+        f"recording-off overhead {over_rec_pag:.3f}x > {OVERHEAD_TOL}x" \
+        f" on paged"
+    assert replay_ok, "flight-recorder replay lost bit-parity"
 
 
 if __name__ == "__main__":

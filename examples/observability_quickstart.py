@@ -14,17 +14,28 @@ surfaces back:
   2. the registry -- `MicroNN.stats()` as the derived dict view, plus
      the Prometheus text exposition for scraping;
   3. the trace ring -- last-N traces, the maintenance event log, and
-     the slow-query log.
+     the slow-query log;
+  4. (PR 10) the flight recorder -- capture a sampled window of live
+     traffic to one SQLite file, then `replay()` it and verify every
+     ResultSet is bit-identical to what production served;
+  5. (PR 10) the live exposition endpoint -- a stdlib HTTP server on a
+     daemon thread; while this script runs you can also
+     `curl http://127.0.0.1:<port>/metrics` (or /healthz, /traces,
+     /slow, /events) from another shell.
 """
+import json
 import os
 import tempfile
 import threading
+import urllib.request
 
 import numpy as np
 
 from repro.core.query import Q
 from repro.core.types import IVFConfig
 from repro.obs import metrics as obs_metrics
+from repro.obs import recorder as obs_recorder
+from repro.obs.http import ExpositionServer
 from repro.serving import FrontDoor
 from repro.storage import MicroNN
 
@@ -108,6 +119,34 @@ def main():
               f" {len(eng.traces.traces())} traced")
         for t in eng.traces.slow():
             print(f"  {t.total_ms:8.2f}ms  {t.mode}  {list(t.span_names)}")
+
+        # --- 4. flight recorder: capture a window, replay it bit-exact --
+        cap = os.path.join(td, "flight.db")
+        with obs_recorder.recording(cap, sample_every=2) as rec:
+            for i in range(10):              # live traffic, half sampled
+                eng.query(centers[i % 24] + 0.1, spec)
+            print(f"\n=== flight recorder ===\ncaptured "
+                  f"{rec.recorded} of {rec.stats()['seen']} queries"
+                  f" (sample_every=2) -> {os.path.basename(cap)}")
+        report = obs_recorder.replay(cap, engine=eng, strict=True)
+        print(f"replayed {report.replayed}: {report.matched} matched"
+              f" capture digests bit-exactly (ids AND f32 scores)")
+
+        # --- 5. the exposition endpoint ---------------------------------
+        with ExpositionServer.for_target(eng) as srv:
+            print(f"\n=== exposition endpoint at {srv.url} ===")
+            with urllib.request.urlopen(srv.url + "/metrics") as r:
+                lines = r.read().decode().splitlines()
+            print(f"GET /metrics -> {len(lines)} lines, e.g.:")
+            print("\n".join(f"  {ln}" for ln in lines[:4]))
+            with urllib.request.urlopen(srv.url + "/healthz") as r:
+                health = json.loads(r.read())
+            print(f"GET /healthz -> hits={health['hits']}"
+                  f" misses={health['misses']}"
+                  f" daemon_alive={health['daemon_alive']}")
+            with urllib.request.urlopen(srv.url + "/events") as r:
+                print(f"GET /events -> {len(json.loads(r.read()))}"
+                      f" maintenance events")
         eng.store.close()
 
 

@@ -1,0 +1,189 @@
+#!/usr/bin/env python
+"""Cross-run benchmark trend gate + append-only history (PR 10).
+
+Every CI run persists per-bench trajectory artifacts (BENCH_<name>.json,
+validated by check_bench_json.py) -- but each run used to stand alone:
+nothing compared a fresh run against the last committed one, so a
+gradual regression that stayed inside a bench's absolute gates could
+rot quality unnoticed. This tool closes the loop:
+
+    python scripts/bench_trend.py <fresh_dir> <history_dir> <name>...
+
+For each bench name it
+
+  1. loads the fresh artifact `<fresh_dir>/BENCH_<name>.json`;
+  2. compares its TREND-GATED metrics (the per-bench table below --
+     quality metrics with a declared better-direction, chosen for
+     run-to-run stability) against the most recent record in
+     `<history_dir>/<name>.jsonl`; a metric that moved in the WORSE
+     direction by more than BENCH_TREND_TOL (default 25%) fails the
+     run with a per-metric report;
+  3. with `--append` (what scripts/ci.sh passes), appends the fresh
+     artifact as one JSON line to the history file -- an append-only,
+     git-committed record, so the NEXT run diffs against this one.
+
+First run (no history) passes trivially and just seeds the record.
+Metrics are matched by regex and compared only when present in BOTH
+runs, so smoke/full shape differences do not produce false alarms.
+Set BENCH_TREND_TOL=0.5 for a looser 50% band on noisy hosts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import os
+import re
+import sys
+
+# per-bench trend-gated metrics: (regex over metric keys, direction).
+# "higher" = bigger is better (recall, qps, speedup); "lower" = smaller
+# is better (bytes ratios, overhead multipliers). Raw wall-clock
+# latencies are deliberately NOT trend-gated -- they legitimately move
+# >25% across hosts; the ratio/recall/parity metrics are host-relative
+# and stable.
+TREND: dict = {
+    "quantized": [
+        (r"int8_rerank\d+_recall_at_\d+", "higher"),
+        (r"scan_(int8|dequant)_rf\d+_recall", "higher"),
+        (r"code_to_f32_bytes_ratio", "lower"),
+    ],
+    "paged": [
+        (r"budget.*_recall_at_\d+", "higher"),
+        (r"prefetch_speedup", "higher"),
+    ],
+    "updates": [
+        (r"recall_(sched|oracle)", "higher"),
+    ],
+    "serve": [
+        (r"qps_(solo|coalesce)", "higher"),
+        (r"batch_occupancy", "higher"),
+    ],
+    "obs": [
+        (r"(exec_xla_q1|paged)_overhead", "lower"),
+        (r"recording_(exec_xla_q1|paged)_overhead", "lower"),
+        (r"replay_ok", "higher"),
+    ],
+    "fleet": [
+        (r"qps_uplift", "higher"),
+    ],
+}
+
+
+def history_path(history_dir: str, name: str) -> str:
+    return os.path.join(history_dir, f"{name}.jsonl")
+
+
+def last_record(path: str):
+    """The most recent JSON line of an append-only history file (None
+    when the file is missing/empty; a trailing corrupt line -- e.g. a
+    crash mid-append -- falls back to the previous intact one)."""
+    if not os.path.isfile(path):
+        return None
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    for ln in reversed(lines):
+        try:
+            doc = json.loads(ln)
+            if isinstance(doc, dict):
+                return doc
+        except json.JSONDecodeError:
+            continue
+    return None
+
+
+def trend_gated(name: str, keys) -> dict:
+    """Map of metric key -> direction for the keys the table gates."""
+    out = {}
+    for pattern, direction in TREND.get(name, ()):  # unknown bench: none
+        rx = re.compile(rf"^{pattern}$")
+        for k in keys:
+            if rx.match(k):
+                out[k] = direction
+    return out
+
+
+def compare(name: str, fresh: dict, prev: dict, tol: float) -> list:
+    """Return regression descriptions (empty == within the band)."""
+    fm, pm = fresh.get("metrics", {}), prev.get("metrics", {})
+    probs = []
+    for key, direction in trend_gated(name, fm).items():
+        if key not in pm:
+            continue
+        new, old = fm[key], pm[key]
+        if not (isinstance(new, numbers.Number)
+                and isinstance(old, numbers.Number)):
+            continue
+        if direction == "higher":
+            # worse = dropped below (1 - tol) * old
+            bad = new < (1.0 - tol) * old
+            move = f"{old:.6g} -> {new:.6g} (want higher)"
+        else:
+            bad = old > 0 and new > (1.0 + tol) * old
+            move = f"{old:.6g} -> {new:.6g} (want lower)"
+        if bad:
+            probs.append(
+                f"{name}.{key}: {move}, beyond the {tol:.0%} band"
+                f" vs {prev.get('git_rev', '?')}"
+                f" @ {prev.get('timestamp', '?')}")
+    return probs
+
+
+def append_record(path: str, doc: dict):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(doc, sort_keys=True) + "\n")
+
+
+def main(argv) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh_dir")
+    ap.add_argument("history_dir")
+    ap.add_argument("names", nargs="+")
+    ap.add_argument("--append", action="store_true",
+                    help="append each fresh artifact to its history "
+                         "file after the comparison")
+    ap.add_argument("--tol", type=float, default=float(
+        os.environ.get("BENCH_TREND_TOL", "0.25")),
+        help="allowed worse-direction move (fraction, default 0.25)")
+    args = ap.parse_args(argv[1:])
+
+    failures = []
+    for name in args.names:
+        fresh_path = os.path.join(args.fresh_dir, f"BENCH_{name}.json")
+        if not os.path.isfile(fresh_path):
+            failures.append(f"{name}: missing fresh artifact"
+                            f" {fresh_path}")
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        hpath = history_path(args.history_dir, name)
+        prev = last_record(hpath)
+        ok = True
+        if prev is None:
+            print(f"trend {name}: no history yet"
+                  f" ({len(trend_gated(name, fresh.get('metrics', {})))}"
+                  f" gated metrics will seed {hpath})")
+        else:
+            probs = compare(name, fresh, prev, args.tol)
+            if probs:
+                failures.extend(probs)
+                ok = False
+            else:
+                n = len([k for k in
+                         trend_gated(name, fresh.get("metrics", {}))
+                         if k in prev.get("metrics", {})])
+                print(f"trend {name}: {n} gated metrics within"
+                      f" {args.tol:.0%} of"
+                      f" {prev.get('git_rev', '?')}")
+        # a regressed run is NOT appended: the next run keeps diffing
+        # against the last good record instead of ratcheting downward
+        if args.append and ok:
+            append_record(hpath, fresh)
+    for p in failures:
+        print(f"TREND FAIL: {p}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -27,6 +27,21 @@ SCHEMA_VERSION = 1
 REQUIRED_KEYS = ("schema_version", "name", "timestamp", "git_rev",
                  "config", "metrics", "gates")
 
+# per-bench metric keys that MUST be present (a bench that silently
+# stopped measuring a gated quantity fails here even if its remaining
+# gates pass). PR 10: the obs artifact must carry the flight-recorder
+# replay + recording-off overhead fields.
+EXPECTED_METRICS = {
+    "obs": ("exec_xla_q1_overhead", "paged_overhead",
+            "recording_exec_xla_q1_overhead", "recording_paged_overhead",
+            "replay_records", "replay_matched", "replay_ok"),
+}
+# per-bench gates that MUST be recorded
+EXPECTED_GATES = {
+    "obs": ("overhead_recording_exec_xla_q1", "overhead_recording_paged",
+            "replay_bit_parity"),
+}
+
 
 def check_artifact(path: str, name: str) -> list:
     """Return a list of human-readable problems (empty == valid)."""
@@ -64,7 +79,15 @@ def check_artifact(path: str, name: str) -> list:
                 and all(isinstance(x, (numbers.Number, dict)) for x in v))
             if not ok:
                 probs.append(f"{path}: metric {m!r} is not numeric")
+    if isinstance(metrics, dict):
+        for key in EXPECTED_METRICS.get(name, ()):
+            if key not in metrics:
+                probs.append(f"{path}: missing expected metric {key!r}")
     gates = doc["gates"]
+    if isinstance(gates, dict):
+        for key in EXPECTED_GATES.get(name, ()):
+            if key not in gates:
+                probs.append(f"{path}: missing expected gate {key!r}")
     if not isinstance(gates, dict):
         probs.append(f"{path}: gates is not an object")
     else:

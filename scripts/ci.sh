@@ -41,6 +41,12 @@ python -m benchmarks.bench_fleet --smoke
 # validate the artifacts: each bench must have written a well-formed
 # BENCH_*.json and no recorded acceptance gate may have failed
 python scripts/check_bench_json.py "$BENCH_JSON_DIR" quantized paged updates serve obs fleet
+# cross-run trend gate (PR 10): compare this run's trend-gated metrics
+# (recalls, qps, overhead ratios) against the last committed record in
+# BENCH_history/ -- a >25% worse-direction move fails CI -- then append
+# this run to the append-only history (committed with the PR)
+python scripts/bench_trend.py "$BENCH_JSON_DIR" BENCH_history \
+    quantized paged updates serve obs fleet --append
 # public-API smoke: the quickstart exercises QuerySpec/ResultSet, write
 # sessions, hybrid queries and recovery end-to-end -- API breakage fails
 # the gate before the unit tests even start

@@ -15,7 +15,7 @@ global memory budget and one maintenance daemon.
 """
 from .pool import FramePool, compute_frame_bytes
 
-_LAZY = ("Fleet", "FleetScheduler")
+_LAZY = ("Fleet", "FleetScheduler", "TenantSLO")
 
 
 def __getattr__(name):
@@ -30,4 +30,4 @@ def __dir__():
 
 
 __all__ = ["FramePool", "compute_frame_bytes", "Fleet", "FleetScheduler",
-           "pool"]
+           "TenantSLO", "pool"]

@@ -47,8 +47,10 @@ no code here at all; tests assert the zero-retrace property.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import re
+import sqlite3
 import threading
 import time
 from collections import OrderedDict
@@ -56,10 +58,31 @@ from typing import Dict, List, Optional
 
 from ..core.types import IVFConfig, PagedIndex, effective_pad_to
 from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from ..storage.engine import MicroNN
 from .pool import FramePool
 
 _NAME_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+# manifest filename: starts with '_' so it can never collide with a
+# tenant db (_NAME_RE requires a leading alphanumeric)
+_MANIFEST = "_manifest.db"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSLO:
+    """Per-tenant latency objective: `target` fraction of queries must
+    complete within `p99_ms`. Error-budget burn = (observed fraction
+    above the objective) / (allowed fraction, 1 - target): burn <= 1.0
+    means the tenant is inside its budget ("ok"), > 1.0 means the
+    budget is burning faster than allotted ("degraded")."""
+
+    p99_ms: float = 50.0
+    target: float = 0.99
+
+    def __post_init__(self):
+        assert self.p99_ms > 0, self.p99_ms
+        assert 0.0 < self.target < 1.0, self.target
 
 
 class FleetScheduler:
@@ -179,8 +202,8 @@ class Fleet:
                  quantize: Optional[str] = None,
                  rerank_factor: Optional[int] = None,
                  max_rows_per_step: int = 4096,
-                 maintenance_interval_s: float = 0.002):
-        import dataclasses
+                 maintenance_interval_s: float = 0.002,
+                 slo: Optional[TenantSLO] = None):
         assert budget_mb > 0, budget_mb
         assert max_live >= 1, max_live
         cfg = config or IVFConfig(dim=dim)
@@ -208,6 +231,25 @@ class Fleet:
         self._lock = threading.RLock()
         self._live: "OrderedDict[str, MicroNN]" = OrderedDict()
         self._closed = False
+        # crash-consistent tenant directory (PR 10): the manifest, not
+        # the filesystem listing, is the authority on which tenants
+        # exist. create/drop are single SQLite transactions; recover()
+        # reconciles manifest vs disk and health() reports the drift
+        self._manifest = sqlite3.connect(
+            os.path.join(self.root, _MANIFEST),
+            check_same_thread=False, isolation_level=None)
+        self._manifest.execute("PRAGMA journal_mode=WAL")
+        self._manifest.execute("PRAGMA synchronous=NORMAL")
+        self._manifest.execute(
+            "CREATE TABLE IF NOT EXISTS tenants ("
+            "name TEXT PRIMARY KEY, created_ts REAL NOT NULL)")
+        # per-tenant SLO objectives (default applies to every tenant
+        # without an explicit override)
+        self.default_slo = slo or TenantSLO()
+        self._slos: Dict[str, TenantSLO] = {}
+        self._orphans: List[str] = []
+        self._missing: List[str] = []
+        self.recover()
         self.metrics = obs_metrics.default_registry().scope(
             component="fleet", inst=str(obs_metrics.next_instance()))
         self._c_opens = self.metrics.counter("tenant_opens")
@@ -228,13 +270,27 @@ class Fleet:
     def get(self, name: str) -> MicroNN:
         """The tenant's live engine: opened + `recover()`ed lazily on
         first touch, then LRU-cached up to `max_live` handles (the LRU
-        victim is spilled -- see _spill)."""
+        victim is spilled -- see _spill). A first-ever touch REGISTERS
+        the tenant in the durable manifest (one transaction) before its
+        db file exists, so a crash in between leaves a reconcilable
+        manifest entry, never an unaccounted file."""
+        # flight-recorder hook (PR 10): one global load + branch when
+        # off; captures the tenant touch order so replay drives the
+        # live-handle LRU (opens + spills) exactly as production did
+        rec = obs_recorder._ACTIVE
+        if rec is not None:
+            rec.record(obs_recorder.SITE_FLEET_GET, name, None)
         with self._lock:
             assert not self._closed, "Fleet is closed"
             eng = self._live.get(name)
             if eng is not None:
                 self._live.move_to_end(name)
                 return eng
+            self._manifest.execute(
+                "INSERT OR IGNORE INTO tenants VALUES (?, ?)",
+                (name, time.time()))
+            if name in self._orphans:
+                self._orphans.remove(name)   # adopted on access
             eng = MicroNN(
                 self.dim, self.n_attr, path=self._path(name),
                 config=self.config,
@@ -277,6 +333,48 @@ class Fleet:
     def _deficit_forget(self, name: str):
         self.scheduler._deficit.pop(name, None)
 
+    def drop(self, name: str):
+        """Destroy a tenant: spill its handle, delete its manifest row
+        (ONE transaction -- the durable point of no return), then
+        remove its db files. A crash after the commit but before the
+        unlink leaves an orphan file that recover() reports and a
+        re-`get()` would recreate from scratch -- never a half-deleted
+        tenant the manifest still claims."""
+        path = self._path(name)
+        with self._lock:
+            if name in self._live:
+                self._spill(name)
+            self._manifest.execute(
+                "DELETE FROM tenants WHERE name = ?", (name,))
+            self._slos.pop(name, None)
+            for suffix in ("", "-wal", "-shm"):
+                try:
+                    os.remove(path + suffix)
+                except FileNotFoundError:
+                    pass
+
+    def recover(self) -> Dict[str, List[str]]:
+        """Reconcile the durable manifest against the filesystem.
+        Returns (and caches for health()) the drift: `orphans` are db
+        files with no manifest row (a crash mid-drop, or a foreign
+        file), `missing` are manifest rows whose db file vanished (a
+        crash between registration and first write is benign -- the
+        file appears on first get() -- but an externally deleted store
+        also lands here). Neither is auto-repaired: get() adopts an
+        orphan on access, and the operator decides on missing rows."""
+        on_disk = {f[:-3] for f in os.listdir(self.root)
+                   if f.endswith(".db") and not f.startswith("_")}
+        with self._lock:
+            manifest = {r[0] for r in self._manifest.execute(
+                "SELECT name FROM tenants")}
+            # a registered-but-never-written tenant has no file yet;
+            # only count it missing if it is not live either
+            self._orphans = sorted(on_disk - manifest)
+            self._missing = sorted(m for m in manifest - on_disk
+                                   if m not in self._live)
+            return {"orphans": list(self._orphans),
+                    "missing": list(self._missing)}
+
     def close(self, name: Optional[str] = None):
         """Close one tenant (spill it), or -- with no name -- stop the
         maintenance daemon and spill every live tenant."""
@@ -289,6 +387,7 @@ class Fleet:
         with self._lock:
             for n in list(self._live):
                 self._spill(n)
+            self._manifest.close()
             self._closed = True
 
     def __enter__(self) -> "Fleet":
@@ -303,11 +402,14 @@ class Fleet:
         return self.get(name).query(vecs, spec, **kwargs)
 
     def tenants(self) -> List[str]:
-        """Every tenant known to this fleet root (live or on disk)."""
-        on_disk = {f[:-3] for f in os.listdir(self.root)
-                   if f.endswith(".db")}
+        """Every tenant known to this fleet: the durable MANIFEST union
+        the live handles -- not the filesystem listing (PR 10). An
+        unregistered db file in the root is an orphan: visible in
+        `recover()` / `health()`, not in the directory."""
         with self._lock:
-            return sorted(on_disk | set(self._live))
+            rows = {r[0] for r in self._manifest.execute(
+                "SELECT name FROM tenants")}
+            return sorted(rows | set(self._live))
 
     def live_tenants(self) -> List[str]:
         with self._lock:
@@ -339,3 +441,63 @@ class Fleet:
                 "tenant_spills": self._c_spills.value,
                 "daemon_alive": self.scheduler.alive,
                 "pool": self.pool.stats()}
+
+    # -- SLO layer (PR 10) ---------------------------------------------------
+    def set_slo(self, name: str, *, p99_ms: float,
+                target: float = 0.99) -> TenantSLO:
+        """Override the latency objective for one tenant."""
+        slo = TenantSLO(p99_ms=p99_ms, target=target)
+        with self._lock:
+            self._slos[name] = slo
+        return slo
+
+    def slo_for(self, name: str) -> TenantSLO:
+        with self._lock:
+            return self._slos.get(name, self.default_slo)
+
+    def _tenant_health(self, name: str) -> dict:
+        """One tenant's SLO verdict from its cumulative query-latency
+        histogram (engine scope `component=engine, tenant=<name>` --
+        the series survives spills, so burn is over the tenant's whole
+        history, not its current handle)."""
+        slo = self.slo_for(name)
+        h = obs_metrics.default_registry().histogram(
+            "query_s", component="engine", tenant=name)
+        n = h.count
+        observed = h.fraction_above(slo.p99_ms / 1e3)
+        allowed = 1.0 - slo.target
+        burn = observed / allowed if allowed > 0 else float("inf")
+        return {"verdict": "ok" if (n == 0 or burn <= 1.0)
+                else "degraded",
+                "queries": n,
+                "p99_ms": h.quantile(0.99) * 1e3,
+                "objective_ms": slo.p99_ms,
+                "target": slo.target,
+                "violation_fraction": observed,
+                "burn_rate": burn}
+
+    def health(self) -> dict:
+        """Structured fleet health (the /healthz document): per-tenant
+        SLO verdicts + error-budget burn, pool pressure, maintenance
+        daemon liveness, the top noisy neighbors from the eviction
+        matrix, and the manifest/disk drift from recover(). Takes only
+        the fleet lock briefly for directory state -- never an engine
+        lock, so a health probe cannot stall queries or writers."""
+        drift = self.recover()
+        names = self.tenants()
+        tenants = {n: self._tenant_health(n) for n in names}
+        degraded = sorted(n for n, t in tenants.items()
+                          if t["verdict"] != "ok")
+        budget = self.pool.budget_bytes
+        resident = self.pool.resident_bytes
+        return {"schema": 1,
+                "status": "degraded" if degraded else "ok",
+                "tenants": tenants,
+                "degraded": degraded,
+                "pool": {"budget_bytes": budget,
+                         "resident_bytes": resident,
+                         "pressure": resident / budget if budget else 0.0},
+                "daemon_alive": self.scheduler.alive,
+                "live_tenants": self.live_tenants(),
+                "noisy_neighbors": self.pool.top_evictors(5),
+                "manifest": drift}

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.types import INVALID_ID
+from ..obs import metrics as obs_metrics
 
 
 @partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -110,10 +111,23 @@ class FramePool:
         # re-registration, so a rebuilt engine keeps its identity), tid
         # -> live view, and per-tenant pin / resident-frame accounting
         self._tid_by_name: Dict[str, int] = {}
+        self._name_by_tid: Dict[int, str] = {}
         self._tenants: Dict[int, object] = {}
         self._tids = itertools.count()
         self._t_pins: Dict[int, int] = {}
         self._t_resident: Dict[int, int] = {}
+        # noisy-neighbor attribution (PR 10): every CLOCK eviction
+        # charges (victim, evictor). Host-side matrix bounded at
+        # `attr_max_pairs` distinct pairs (overflow folds into one
+        # bucket); the registry series behind it ride the per-name LRU
+        # cardinality guard, so 1000 synthetic tenants cannot grow the
+        # registry without bound (pinned by tests/test_flight.py)
+        self.attr_max_pairs = 4096
+        self._evict_pairs: Dict[Tuple[int, int], int] = {}
+        self._evict_pair_counters: Dict[Tuple[int, int], object] = {}
+        self._evict_overflow = 0
+        self._metrics = obs_metrics.default_registry().scope(
+            component="frame_pool", inst=obs_metrics.next_instance())
         self._alloc(p_max)
 
     # -- registration --------------------------------------------------------
@@ -138,6 +152,7 @@ class FramePool:
             if tid is None:
                 tid = next(self._tids)
                 self._tid_by_name[name] = tid
+                self._name_by_tid[tid] = name
             else:
                 # re-attachment: the old view's frames describe an index
                 # generation that no longer exists
@@ -234,21 +249,74 @@ class FramePool:
         with self._lock:
             return self._t_pins.get(tid, 0)
 
+    def _note_eviction(self, victim_tid: int, evictor_tid: int):
+        """Charge one CLOCK eviction to (victim, evictor). Called with
+        the pool lock held, on the fault MISS path only (an eviction is
+        followed by an SQL fetch, so the registry get-or-create on a
+        pair's first sighting is noise). Both the host matrix and the
+        registry counters are cardinality-bounded: the matrix folds
+        pairs past `attr_max_pairs` into one overflow bucket, and the
+        registry applies its per-name LRU series guard."""
+        key = (victim_tid, evictor_tid)
+        n = self._evict_pairs.get(key)
+        if n is None and len(self._evict_pairs) >= self.attr_max_pairs:
+            self._evict_overflow += 1
+            return
+        self._evict_pairs[key] = 1 if n is None else n + 1
+        c = self._evict_pair_counters.get(key)
+        if c is None:
+            c = self._metrics.counter(
+                "evictions_attributed",
+                victim=self._name_by_tid.get(victim_tid, str(victim_tid)),
+                evictor=self._name_by_tid.get(evictor_tid,
+                                              str(evictor_tid)))
+            self._evict_pair_counters[key] = c
+        c.inc()
+
+    def eviction_matrix(self) -> Dict[str, Dict[str, int]]:
+        """victim name -> {evictor name -> evictions} (host matrix)."""
+        with self._lock:
+            out: Dict[str, Dict[str, int]] = {}
+            for (vt, et), n in self._evict_pairs.items():
+                v = self._name_by_tid.get(vt, str(vt))
+                e = self._name_by_tid.get(et, str(et))
+                out.setdefault(v, {})[e] = n
+            return out
+
+    def top_evictors(self, n: int = 5) -> List[dict]:
+        """The heaviest (evictor, victim) pairs -- the noisy-neighbor
+        shortlist Fleet.health() surfaces."""
+        with self._lock:
+            pairs = sorted(self._evict_pairs.items(),
+                           key=lambda kv: -kv[1])[:max(n, 0)]
+            return [{"evictor": self._name_by_tid.get(et, str(et)),
+                     "victim": self._name_by_tid.get(vt, str(vt)),
+                     "evictions": c}
+                    for (vt, et), c in pairs]
+
     def stats(self) -> dict:
-        """Fleet-wide pool view: geometry + per-tenant frame footprint."""
+        """Fleet-wide pool view: geometry + per-tenant frame footprint
+        + the noisy-neighbor eviction matrix."""
         with self._lock:
             by_name = {}
             for name, tid in self._tid_by_name.items():
                 by_name[name] = {"resident_frames": self._t_resident
                                  .get(tid, 0),
                                  "pinned_frames": self._t_pins.get(tid, 0)}
+            matrix: Dict[str, Dict[str, int]] = {}
+            for (vt, et), n in self._evict_pairs.items():
+                v = self._name_by_tid.get(vt, str(vt))
+                e = self._name_by_tid.get(et, str(et))
+                matrix.setdefault(v, {})[e] = n
             return {"budget_bytes": self.budget_bytes,
                     "resident_bytes": self.resident_bytes,
                     "capacity_frames": self.capacity,
                     "frame_bytes": self.frame_bytes,
                     "p_max": self.p_max,
                     "resident_partitions": len(self._key_frame),
-                    "tenants": by_name}
+                    "tenants": by_name,
+                    "eviction_matrix": matrix,
+                    "eviction_matrix_overflow": self._evict_overflow}
 
     # -- clock eviction ------------------------------------------------------
     def _release_ring(self, f: int):
@@ -392,6 +460,7 @@ class FramePool:
                 del self._key_frame[(old_tid, old_pid)]
                 self._t_resident[old_tid] -= 1
                 n_evicted += 1
+                self._note_eviction(old_tid, tid)
             self._frame_pid[f] = p
             self._frame_tid[f] = tid
             self._key_frame[(tid, p)] = f

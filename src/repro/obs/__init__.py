@@ -9,17 +9,27 @@ Two pieces, one import surface:
   * `trace` -- thread-local per-query spans (`QueryTrace`), the bounded
     `TraceRing` of recent traces + maintenance events, and the
     slow-query log.
+  * `recorder` -- the workload flight recorder (PR 10): bounded,
+    sampled on-disk capture of (ts_offset, tenant, spec, vectors) and
+    the deterministic `replay()` harness asserting bit-identical
+    ResultSets.
+  * `http` -- the live exposition endpoint (PR 10): stdlib HTTP daemon
+    thread serving /metrics, /healthz, /traces, /slow, /events.
 """
-from . import metrics, trace
+from . import http, metrics, recorder, trace
+from .http import ExpositionServer
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry, Scope,
                       default_registry, next_instance)
+from .recorder import FlightRecorder, ReplayReport, recording, replay
 from .trace import (MaintEvent, QueryTrace, Span, TraceRing, activate,
                     current, enabled, set_enabled)
 
 __all__ = [
-    "metrics", "trace",
+    "metrics", "trace", "recorder", "http",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "Scope",
     "default_registry", "next_instance",
     "MaintEvent", "QueryTrace", "Span", "TraceRing",
     "activate", "current", "enabled", "set_enabled",
+    "FlightRecorder", "ReplayReport", "recording", "replay",
+    "ExpositionServer",
 ]

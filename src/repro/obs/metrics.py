@@ -39,7 +39,7 @@ from __future__ import annotations
 import itertools
 import re
 import threading
-from bisect import bisect_left
+from bisect import bisect_left, bisect_right
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -62,6 +62,21 @@ def _fmt_labels(labels: Tuple[Tuple[str, str], ...]) -> str:
     if not labels:
         return ""
     return "{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}"
+
+
+def _escape_label_value(v: str) -> str:
+    """Prometheus text-format label escaping: backslash, double quote and
+    newline must be escaped or a scraper's parser rejects the whole
+    exposition (a tenant named `a"b` would poison /metrics)."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt_labels_prom(labels: Tuple[Tuple[str, str], ...]) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(
+        f'{_SANITIZE.sub("_", k)}="{_escape_label_value(v)}"'
+        for k, v in labels) + "}"
 
 
 class Counter:
@@ -184,6 +199,19 @@ class Histogram:
             self._count += other._count
             self._min = min(self._min, other._min)
             self._max = max(self._max, other._max)
+
+    def fraction_above(self, v: float) -> float:
+        """Fraction of observations above `v`, at bucket resolution
+        (an observation whose bucket straddles `v` counts as above --
+        the conservative direction for an SLO violation estimate).
+        0.0 when empty."""
+        j = bisect_right(self.buckets, v)
+        with self._lock:
+            n = self._count
+            if n == 0:
+                return 0.0
+            below = sum(self.counts[:j])
+            return (n - below) / n
 
     def quantile(self, q: float) -> float:
         """Interpolated q-quantile (0 <= q <= 1); 0.0 when empty."""
@@ -341,13 +369,21 @@ class MetricsRegistry:
     def to_prometheus(self) -> str:
         """Prometheus text exposition format (names sanitized: dots ->
         underscores; histograms emit cumulative `le` bucket series +
-        _sum/_count)."""
+        _sum/_count). Label values are escaped per the text-format spec
+        and each metric family gets exactly one `# HELP` + `# TYPE`
+        header -- duplicated headers or a raw quote/newline in a label
+        value make strict scrapers reject the whole page."""
         lines: List[str] = []
-        seen_type: set = set()
+        seen_family: set = set()
         for (name, labels), m in self._sorted_items():
             pname = _SANITIZE.sub("_", name)
-            if pname not in seen_type:
-                seen_type.add(pname)
+            if pname not in seen_family:
+                seen_family.add(pname)
+                # HELP text escapes only backslash + newline (spec);
+                # metric names are dotted identifiers so this is belt
+                # and braces
+                help_txt = name.replace("\\", "\\\\").replace("\n", "\\n")
+                lines.append(f"# HELP {pname} {help_txt} ({m.kind})")
                 lines.append(f"# TYPE {pname} {m.kind}")
             if isinstance(m, Histogram):
                 cum = 0
@@ -355,15 +391,15 @@ class MetricsRegistry:
                     cum += c
                     le = f"{m.buckets[i]:.9g}" if i < len(m.buckets) \
                         else "+Inf"
-                    ls = _fmt_labels(labels + (("le", le),))
+                    ls = _fmt_labels_prom(labels + (("le", le),))
                     lines.append(f"{pname}_bucket{ls} {cum}")
-                ls = _fmt_labels(labels)
+                ls = _fmt_labels_prom(labels)
                 lines.append(f"{pname}_sum{ls} {m.sum:.9g}")
                 lines.append(f"{pname}_count{ls} {m.count}")
             else:
                 v = m.value
                 vs = f"{v:.9g}" if isinstance(v, float) else str(v)
-                lines.append(f"{pname}{_fmt_labels(labels)} {vs}")
+                lines.append(f"{pname}{_fmt_labels_prom(labels)} {vs}")
         return "\n".join(lines) + "\n"
 
 

@@ -75,6 +75,7 @@ import numpy as np
 
 from ..core.query import QuerySpec, ResultSet
 from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
 
 _STAT_KEYS = ("queued", "inflight", "submitted", "completed", "failed",
@@ -216,6 +217,13 @@ class FrontDoor:
         of the coalesced batch, adopting the shared fused-call spans."""
         spec = QuerySpec() if spec is None else spec
         v = np.atleast_2d(np.asarray(vecs, np.float32))
+        # flight-recorder hook (PR 10): one global load + branch when
+        # recording is off. Captured at admission (the Future has not
+        # resolved, so no result digest -- replay double-executes these)
+        rec = obs_recorder._ACTIVE
+        if rec is not None:
+            rec.record(obs_recorder.SITE_FRONTDOOR, self.engine.tenant,
+                       v, spec)
         tr = None
         if trace and obs_trace.enabled():
             tr = obs_trace.QueryTrace(

@@ -49,6 +49,7 @@ from ..core.types import (INVALID_ID, DeltaStore, IVFConfig, IVFIndex,
                           PagedIndex, SearchResult, effective_pad_to,
                           normalize_if_cosine)
 from ..obs import metrics as obs_metrics
+from ..obs import recorder as obs_recorder
 from ..obs import trace as obs_trace
 from . import pager
 from .scheduler import MaintenanceScheduler, StepReport
@@ -215,6 +216,11 @@ class MicroNN:
         self.traces = obs_trace.TraceRing(capacity=trace_ring_capacity,
                                           slow_ms=slow_query_ms)
         self._c_queries = self.metrics.counter("queries")
+        # per-tenant query-latency histogram (fleet mode only): the SLO
+        # layer's burn-rate source (Fleet.health()). Solo engines keep
+        # the untimed hot path -- `_h_query_s is None` is one branch
+        self._h_query_s = self.metrics.histogram("query_s") \
+            if self.tenant is not None else None
         self.scheduler = MaintenanceScheduler(
             self, max_rows_per_step=max_rows_per_step,
             metrics=self.metrics.scope(component="scheduler"))
@@ -810,8 +816,28 @@ class MicroNN:
         keeps scanning its consistent snapshot; paged execution is
         protected by the PartitionCache RLock (deferred pinned-frame
         invalidation) and the store's WAL snapshot read connection."""
+        # flight-recorder hook (PR 10): recording-off cost is this one
+        # global load + branch (plus the fleet-mode SLO histogram
+        # check), preserving the <=3% off-path gate in bench_obs
+        rec = obs_recorder._ACTIVE
+        if rec is None and self._h_query_s is None:
+            if not (trace and obs_trace.enabled()):
+                return self._query_inner(queries, spec)
+            return self._query_traced(queries, spec)
+        t0 = time.perf_counter()
         if not (trace and obs_trace.enabled()):
-            return self._query_inner(queries, spec)
+            res = self._query_inner(queries, spec)
+        else:
+            res = self._query_traced(queries, spec)
+        if self._h_query_s is not None:
+            self._h_query_s.observe(time.perf_counter() - t0)
+        if rec is not None:
+            rec.record(obs_recorder.SITE_ENGINE, self.tenant, queries,
+                       spec, result=res)
+        return res
+
+    def _query_traced(self, queries: np.ndarray,
+                      spec: Optional[QuerySpec]) -> ResultSet:
         tr = obs_trace.QueryTrace(
             mode="paged" if self.paged else "resident")
         with obs_trace.activate(tr):

@@ -16,6 +16,7 @@ Pins the layer's three contracts:
     pager counters), and every series exports through snapshot() /
     to_prometheus().
 """
+import re
 import threading
 
 import numpy as np
@@ -375,3 +376,161 @@ def test_registry_cardinality_guard_lru_touch_on_reuse():
     for i in range(10):
         reg.gauge("g_other", i=str(i)).set(i)
     assert reg.counter("m", k="hot") is hot
+
+
+# -- Prometheus exposition hardening (PR 10) ---------------------------------
+
+
+_PROM_SAMPLE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})? (\S+)$')
+
+
+def _parse_prom_labels(s):
+    """Strict text-format label parser: `k="v",...` where v uses the
+    \\\\ , \\" and \\n escapes. Raises on anything malformed -- the
+    test's point is that a strict scraper accepts the page."""
+    out = {}
+    i = 0
+    while i < len(s):
+        eq = s.index("=", i)
+        key = s[i:eq]
+        assert s[eq + 1] == '"', s
+        i, val = eq + 2, []
+        while s[i] != '"':
+            if s[i] == "\\":
+                esc = s[i + 1]
+                assert esc in ('\\', '"', 'n'), f"bad escape \\{esc}"
+                val.append({"\\": "\\", '"': '"', "n": "\n"}[esc])
+                i += 2
+            else:
+                val.append(s[i])
+                i += 1
+        out[key] = "".join(val)
+        i += 1                                  # closing quote
+        if i < len(s):
+            assert s[i] == ",", s
+            i += 1
+    return out
+
+
+def test_prometheus_roundtrip_nasty_labels():
+    """Acceptance (PR 10): label values containing backslash, quote and
+    newline survive export -> strict parse -> exact round-trip, and
+    every metric family carries exactly one # HELP + # TYPE header."""
+    reg = obs_metrics.MetricsRegistry()
+    nasty = {"path": 'C:\\tmp\\"x"', "note": 'line1\nline2',
+             "plain": "ok"}
+    reg.counter("pager.hits", **nasty).inc(3)
+    reg.counter("pager.hits", plain="other").inc(1)
+    reg.gauge("depth", q='say "when"').set(2.5)
+    reg.histogram("wait.s", tenant="a\\b").observe(0.004)
+    text = reg.to_prometheus()
+
+    helps, types, samples = {}, {}, []
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            fam = line.split(" ", 3)[2]
+            helps[fam] = helps.get(fam, 0) + 1
+        elif line.startswith("# TYPE "):
+            fam = line.split(" ", 3)[2]
+            types[fam] = types.get(fam, 0) + 1
+            assert fam in helps, f"# TYPE {fam} before its # HELP"
+        else:
+            m = _PROM_SAMPLE.match(line)
+            assert m, f"unparseable sample line: {line!r}"
+            name, raw, value = m.groups()
+            labels = _parse_prom_labels(raw) if raw else {}
+            samples.append((name, labels, float(value)))
+            fam = re.sub(r"_(bucket|sum|count)$", "", name)
+            assert fam in types or name in types, \
+                f"sample {name} precedes its # TYPE"
+    # exactly one header pair per family, names sanitized (dots -> _)
+    assert helps == {"pager_hits": 1, "depth": 1, "wait_s": 1}
+    assert types == helps
+    assert types and all(n == 1 for n in types.values())
+    # bit-exact label round-trip through the escapes
+    got = [ls for n, ls, v in samples
+           if n == "pager_hits" and v == 3.0]
+    assert got == [nasty]
+    assert any(n == "depth" and ls == {"q": 'say "when"'} and v == 2.5
+               for n, ls, v in samples)
+    assert any(n == "wait_s_count" and ls == {"tenant": "a\\b"}
+               for n, ls, _ in samples)
+    # cumulative le series end at +Inf with the family labels intact
+    infs = [ls for n, ls, _ in samples
+            if n == "wait_s_bucket" and ls.get("le") == "+Inf"]
+    assert infs == [{"tenant": "a\\b", "le": "+Inf"}]
+
+
+# -- interleave stress: recorder + traces under concurrency (PR 10) ----------
+
+
+def test_interleave_recorder_traces_pinned_vs_twin(tmp_path):
+    """Flight recorder + TraceRing + live maintenance daemon under
+    multi-threaded FrontDoor.submit(trace=True): every answer is
+    bit-identical to a single-threaded twin engine, the concurrent
+    capture replays cleanly on that twin, traced callers all reach the
+    ring, and the daemon survives the churn."""
+    import repro.obs.recorder as obs_recorder
+
+    eng, X = _mk(tmp_path, "il-mt", seed=5)
+    twin, _ = _mk(tmp_path, "il-st", seed=5)    # same build, no threads
+    spec = Q.knn(k=5, n_probe=4)
+    n_threads, per = 4, 6
+    probes = [[X[(t * per + j) % len(X)] + 0.01 for j in range(per)]
+              for t in range(n_threads)]
+    results = [[None] * per for _ in range(n_threads)]
+    errors = []
+    cap = str(tmp_path / "cap.db")
+
+    with obs_recorder.recording(cap) as rec:
+        with FrontDoor(eng, window_s=0.002, maintenance=True) as fd:
+            def caller(t):
+                try:
+                    for j in range(per):
+                        results[t][j] = fd.query(
+                            probes[t][j], spec,
+                            trace=(t % 2 == 0), timeout=60)
+                except BaseException as e:  # noqa: BLE001
+                    errors.append(e)
+
+            threads = [threading.Thread(target=caller, args=(t,))
+                       for t in range(n_threads)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join(120)
+            assert not errors, errors
+            assert eng.scheduler.daemon_alive
+            # maintenance events interleave with the capture stream
+            eng.upsert(np.arange(400, 440),
+                       clustered_data(n=40, dim=DIM, seed=6))
+            eng.maintain(until_idle=True)
+            assert any(e.kind == "step" for e in eng.traces.events())
+        assert rec.recorded == n_threads * per
+
+    # single-threaded twin: identical probes, identical bits
+    for t in range(n_threads):
+        for j in range(per):
+            solo = twin.query(probes[t][j], spec)
+            np.testing.assert_array_equal(
+                np.asarray(results[t][j].ids), np.asarray(solo.ids))
+            np.testing.assert_array_equal(
+                np.asarray(results[t][j].scores),
+                np.asarray(solo.scores))
+    # traced callers reached the ring; untraced stayed out of it
+    for t in range(n_threads):
+        for rs in results[t]:
+            if t % 2 == 0:
+                assert rs.trace is not None \
+                    and rs.trace in eng.traces.traces()
+            else:
+                assert rs.trace is None
+    # the concurrent capture replays deterministically on the twin
+    # (front-door records are digestless: double-run self-check)
+    rep = obs_recorder.replay(cap, engine=twin, strict=True)
+    assert rep.ok and rep.self_checked == n_threads * per
+    eng.store.close()
+    twin.store.close()
